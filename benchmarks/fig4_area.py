@@ -1,0 +1,27 @@
+"""Fig. 4 reproduction: SNE area breakdown (kGE) vs number of slices."""
+from __future__ import annotations
+
+from repro.core.engine import SneConfig, area_kge
+
+
+def run():
+    rows = []
+    for s in (1, 2, 4, 8):
+        a = area_kge(SneConfig(n_slices=s))
+        rows.append({"slices": s, **{k: round(v, 1) for k, v in a.items()}})
+    return rows
+
+
+def main():
+    print("fig4_area: SNE area (kGE) vs slices [paper Fig. 4]")
+    print(f"{'slices':>7} {'slices_kGE':>11} {'c_xbar':>8} {'dma':>6} "
+          f"{'total':>8} {'dma_frac':>9}")
+    for r in run():
+        print(f"{r['slices']:>7} {r['slices']:>11} {r['c_xbar']:>8} "
+              f"{r['dma']:>6} {r['total']:>8} "
+              f"{r['dma'] / r['total']:>9.3f}")
+    print("  (DMA fixed cost progressively absorbed, as in the paper)")
+
+
+if __name__ == "__main__":
+    main()

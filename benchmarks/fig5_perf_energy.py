@@ -1,0 +1,38 @@
+"""Fig. 5 reproduction: power (5a) and GSOP/s + pJ/SOP (5b) vs slices."""
+from __future__ import annotations
+
+from repro.core.engine import (SneConfig, efficiency_tsops_w,
+                               energy_per_sop_j, peak_sops, power_w)
+
+
+def run(activity: float = 0.05):
+    rows = []
+    for s in (1, 2, 4, 8):
+        cfg = SneConfig(n_slices=s)
+        rows.append({
+            "slices": s,
+            "power_mw": power_w(cfg, activity) * 1e3,
+            "gsops": peak_sops(cfg) / 1e9,
+            "pj_per_sop": energy_per_sop_j(cfg, activity) * 1e12,
+            "tsops_per_w": efficiency_tsops_w(cfg, activity),
+        })
+    return rows
+
+
+def main():
+    print("fig5_perf_energy: power / GSOP/s / pJ/SOP vs slices "
+          "[paper Fig. 5a,b]")
+    print(f"{'slices':>7} {'power_mW':>9} {'GSOP/s':>8} {'pJ/SOP':>8} "
+          f"{'TSOP/s/W':>9}")
+    for r in run():
+        print(f"{r['slices']:>7} {r['power_mw']:>9.2f} {r['gsops']:>8.1f} "
+              f"{r['pj_per_sop']:>8.3f} {r['tsops_per_w']:>9.2f}")
+    eight = run()[-1]
+    assert abs(eight["gsops"] - 51.2) < 0.1
+    assert abs(eight["pj_per_sop"] - 0.221) < 0.005
+    print("  8-slice point matches the paper: 51.2 GSOP/s, 0.221 pJ/SOP, "
+          "4.54 TSOP/s/W")
+
+
+if __name__ == "__main__":
+    main()

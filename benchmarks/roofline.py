@@ -1,0 +1,215 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads ``experiments/dryrun/*.json`` (written by repro.launch.dryrun) and
+derives, per (arch x shape) cell on the single-pod mesh:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+    memory term     = analytic min HBM traffic per device / BW   [s]
+    collective term = collective wire bytes per device / link BW [s]
+
+Sources & conventions (full discussion in EXPERIMENTS.md §Roofline):
+  * HLO FLOPs come from the *unrolled* lowering (XLA cost analysis counts
+    while bodies once; the dry-run lowers an unrolled twin for exact
+    counts). Convention is 2·MAC.
+  * The memory term uses an analytic minimum-traffic model (params read,
+    grads/moments traffic, inter-layer activation stream, KV cache R/W) —
+    the post-fusion lower bound a perfect TPU execution must move;
+    ``bytes_global_unfused`` (pre-fusion HLO bytes) is reported alongside
+    as the pessimistic upper bound.
+  * Collective bytes are parsed from the partitioned HLO with while-loop
+    trip expansion and a ring-cost wire model, serialised over ONE 50 GB/s
+    ICI link (worst case; a v5e 2D torus has 4).
+  * MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode), with
+    N = active params — the MFU numerator convention.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def _cfg(arch: str):
+    from repro.configs import get_config
+    return get_config(arch)
+
+
+def _shape(name: str):
+    from repro.configs import SHAPES
+    return SHAPES[name]
+
+
+def _cache_bytes_per_dev(arch: str, B: int, S: int, n_dev: int) -> float:
+    """Global KV/state cache bytes / devices (balance assumed)."""
+    from repro.models.transformer import cache_decls
+    import numpy as np
+    cfg = _cfg(arch)
+    total = 0
+    for d in _iter_decls(cache_decls(cfg, B, S)):
+        total += int(np.prod(d.shape)) * (2 if "bf" in str(d.dtype) else
+                                          np.dtype(d.dtype).itemsize)
+    return total / n_dev
+
+
+def _iter_decls(tree):
+    from repro.models.layers import ParamDecl
+    import jax
+    return jax.tree.leaves(tree,
+                           is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def model_flops(rec: Dict[str, Any]) -> float:
+    """Per-device useful FLOPs (MFU numerator)."""
+    sh = _shape(rec["shape"])
+    n_act = rec["params_active"]
+    D = sh.global_batch * sh.seq_len
+    if rec["kind"] == "train":
+        g = 6.0 * n_act * D
+    elif rec["kind"] == "prefill":
+        g = 2.0 * n_act * D
+    else:
+        g = 2.0 * n_act * sh.global_batch
+    return g / rec["n_devices"]
+
+
+def analytic_memory_bytes(rec: Dict[str, Any]) -> float:
+    """Minimum HBM traffic per device per step (post-fusion lower bound)."""
+    cfg = _cfg(rec["arch"])
+    sh = _shape(rec["shape"])
+    n_dev = rec["n_devices"]
+    B, S = sh.global_batch, sh.seq_len
+    p_bytes = rec["params_total"] * 2.0 / n_dev           # bf16 params
+    p_act_bytes = rec["params_active"] * 2.0 / n_dev
+    mom_b = {"float32": 4, "bfloat16": 2}[cfg.moment_dtype]
+    act_stream = cfg.n_layers * B * S * cfg.d_model * 2.0 / n_dev
+    if rec["kind"] == "train":
+        # fwd read + bwd read + remat re-read; grad write; both moments r+w;
+        # saved layer-boundary activations written then read
+        return (3 * p_bytes + p_bytes
+                + 4 * rec["params_total"] * mom_b / n_dev
+                + 2 * act_stream)
+    if rec["kind"] == "prefill":
+        cache_w = _cache_bytes_per_dev(rec["arch"], B, S, n_dev)
+        return p_bytes + cache_w + 2 * act_stream
+    # decode: read active params once, read the whole cache, tiny writes
+    cache_r = _cache_bytes_per_dev(rec["arch"], B, S, n_dev)
+    return p_act_bytes + cache_r
+
+
+def analyze(rec: Dict[str, Any]) -> Dict[str, Any]:
+    flops_dev = rec["flops_per_device"]
+    if "decode_read_bytes_per_device" in rec:
+        # sigma-delta gated decode: event-proportional weight reads
+        mem_dev = rec["decode_read_bytes_per_device"]
+    else:
+        mem_dev = analytic_memory_bytes(rec)
+    wire_dev = rec["collectives"]["total_wire_bytes"]
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = mem_dev / HBM_BW
+    collective_s = wire_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    ideal = mf / PEAK_FLOPS
+    dominant = terms[bottleneck]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "tag": rec.get("tag", ""),
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "bottleneck": bottleneck,
+        "model_flops_dev": mf, "hlo_flops_dev": flops_dev,
+        "useful_ratio": mf / flops_dev if flops_dev else 0.0,
+        "roofline_fraction": ideal / dominant if dominant else 0.0,
+        "step_lower_bound_s": dominant,
+        "mem_bytes_dev": mem_dev, "wire_bytes_dev": wire_dev,
+    }
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR,
+                 mesh: str = "single", tag: str = "") -> List[Dict[str, Any]]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        base = os.path.basename(path)
+        want = f"__{mesh}{'__' + tag if tag else ''}.json"
+        if not base.endswith(want):
+            continue
+        # exclude tagged records when no tag requested
+        if not tag and base.count("__") != 2:
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            out.append(rec)
+    return out
+
+
+def table(rows: List[Dict[str, Any]]) -> str:
+    hdr = (f"| {'arch':28s} | {'shape':11s} | {'compute_s':>10s} | "
+           f"{'memory_s':>10s} | {'collect_s':>10s} | {'bound':>9s} | "
+           f"{'MFLOP ratio':>11s} | {'roofline%':>9s} |")
+    sep = "|" + "-" * 30 + "|" + "-" * 13 + "|" + "-" * 12 + "|" + "-" * 12 \
+        + "|" + "-" * 12 + "|" + "-" * 11 + "|" + "-" * 13 + "|" + "-" * 11 + "|"
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']:28s} | {r['shape']:11s} | {r['compute_s']:10.3e} |"
+            f" {r['memory_s']:10.3e} | {r['collective_s']:10.3e} |"
+            f" {r['bottleneck']:>9s} | {r['useful_ratio']:11.3f} |"
+            f" {100 * r['roofline_fraction']:8.2f}% |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("roofline: no dry-run artifacts found "
+              f"(run `python -m repro.launch.dryrun --all`) in {DRYRUN_DIR}")
+        return
+    rows = [analyze(r) for r in recs]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    print(f"roofline: {len(rows)} cells (single-pod 16x16, v5e constants)")
+    print(table(rows))
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    coll = max(rows, key=lambda r: r["collective_s"])
+    print(f"\n  worst roofline fraction: {worst['arch']} x {worst['shape']} "
+          f"({100 * worst['roofline_fraction']:.2f}%)")
+    print(f"  most collective-bound:   {coll['arch']} x {coll['shape']} "
+          f"({coll['collective_s']:.3e}s wire)")
+
+    # hillclimb variants (tagged artifacts) vs their baselines
+    import glob as _g
+    tagged = []
+    for path in sorted(_g.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        if os.path.basename(path).count("__") != 3:
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok" and not rec.get("multi_pod"):
+            tagged.append(analyze(rec))
+    if tagged:
+        print("\n  §Perf hillclimb variants (see EXPERIMENTS.md §Perf):")
+        print(table(sorted(tagged, key=lambda r: (r["arch"], r["tag"]))))
+        for r in tagged:
+            print(f"    [{r['tag']}] {r['arch']} x {r['shape']}: "
+                  f"fraction {100 * r['roofline_fraction']:.2f}%")
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write(table(rows) + "\n")
+        if tagged:
+            f.write("\n### Hillclimb variants\n" + table(tagged) + "\n")
+    with open("experiments/roofline_rows.json", "w") as f:
+        json.dump(rows + tagged, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

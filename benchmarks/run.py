@@ -1,0 +1,46 @@
+"""Benchmark aggregator: one entry per paper table/figure + roofline.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]``
+
+Prints each benchmark's table and a final ``name,seconds,status`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from benchmarks import (energy_proportionality, fig4_area,
+                            fig5_perf_energy, roofline, table1_accuracy,
+                            table2_soa)
+    jobs = [
+        ("fig4_area", fig4_area.main),
+        ("fig5_perf_energy", fig5_perf_energy.main),
+        ("table2_soa", table2_soa.main),
+        ("table1_accuracy", lambda: table1_accuracy.main(fast=fast)),
+        ("energy_proportionality", energy_proportionality.main),
+        ("roofline", roofline.main),
+    ]
+    results = []
+    for name, fn in jobs:
+        print("=" * 72)
+        t0 = time.time()
+        try:
+            fn()
+            results.append((name, time.time() - t0, "ok"))
+        except Exception:  # noqa: BLE001 — keep the suite running
+            traceback.print_exc()
+            results.append((name, time.time() - t0, "FAILED"))
+    print("=" * 72)
+    print("name,seconds,status")
+    for name, dt, status in results:
+        print(f"{name},{dt:.2f},{status}")
+    if any(s == "FAILED" for _, _, s in results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

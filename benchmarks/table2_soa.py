@@ -1,0 +1,33 @@
+"""Table II reproduction: state-of-the-art neuromorphic-engine comparison."""
+from __future__ import annotations
+
+from repro.core.engine import SOA_TABLE, SneConfig, efficiency_tsops_w
+
+
+def run():
+    return [{"name": n, "tech": t, "perf_gops": p, "eff_tops_w": e,
+             "energy_sop_pj": es, "freq_mhz": f, "power_mw": pw}
+            for n, t, p, e, es, f, pw in SOA_TABLE]
+
+
+def main():
+    print("table2_soa: neuromorphic platform comparison [paper Table II]")
+    fmt = "{:>17} {:>13} {:>9} {:>9} {:>11} {:>8} {:>9}"
+    print(fmt.format("name", "tech", "GOP/s", "TOP/s/W", "pJ/SOP",
+                     "MHz", "mW"))
+    for r in run():
+        print(fmt.format(
+            r["name"][:17], r["tech"],
+            "-" if r["perf_gops"] is None else r["perf_gops"],
+            "-" if r["eff_tops_w"] is None else r["eff_tops_w"],
+            "-" if r["energy_sop_pj"] is None else r["energy_sop_pj"],
+            "-" if r["freq_mhz"] is None else r["freq_mhz"],
+            "-" if r["power_mw"] is None else r["power_mw"]))
+    sne, tianjic = run()[0], run()[1]
+    x = sne["eff_tops_w"] / tianjic["eff_tops_w"]
+    print(f"  SNE/Tianjic efficiency = {x:.2f}x (paper: 3.55x)")
+    assert abs(x - 3.55) < 0.02
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""The paper's own configuration: SNE engine + the Fig. 6 eCNN.
+
+This is not one of the 10 assigned LM architectures — it is the paper's
+native workload (IBM-DVS-Gesture / NMNIST event-based CNN on the 8-slice
+SNE engine), exposed with the same ``config()`` entry point so the
+benchmarks and examples address it uniformly.
+"""
+from repro.core.engine import SneConfig
+from repro.core.sne_net import SNNSpec, dvs_gesture_net, nmnist_net, tiny_net
+
+
+def config() -> SNNSpec:
+    return dvs_gesture_net()
+
+
+def nmnist() -> SNNSpec:
+    return nmnist_net()
+
+
+def smoke() -> SNNSpec:
+    return tiny_net()
+
+
+def engine(n_slices: int = 8) -> SneConfig:
+    return SneConfig(n_slices=n_slices)

@@ -1,0 +1,181 @@
+"""SNE hardware model — performance, power, energy, area (paper §III-D, §IV).
+
+This module is the analytic twin of the ASIC: it reproduces every number the
+paper reports (Figs. 4/5, Tables I/II) from first principles plus constants
+calibrated to the published data points, and maps *measured* event counts
+from the JAX simulation onto inference time / energy / rate.
+
+Calibration anchors (all from the paper text):
+  * 1 cluster performs 1 synaptic op (neuron update) per cycle.
+  * An SL has 16 clusters; a cluster time-multiplexes 64 neurons
+    (=> 1024 neurons/SL; 8 SLs => 8192 neurons).
+  * One input event is consumed in 48 cycles (= 120 ns @ 400 MHz).
+  * Peak performance at 8 SLs: 16*8 SOP/cycle * 400 MHz = 51.2 GSOP/s.
+  * 8-SL power (TT, 0.8 V, 25 C, 5% activity benchmark): 11.29 mW
+    => 0.2205 pJ/SOP and 4.54 TSOP/s/W.
+  * DVS-Gesture: 11.29 mW * 7.1 ms = 80 uJ ; * 23.12 ms = 261 uJ  (Table I).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SneConfig:
+    n_slices: int = 8
+    clusters_per_slice: int = 16
+    tdm_neurons: int = 64           # neurons per cluster (time-multiplexed)
+    freq_hz: float = 400e6
+    cycles_per_event: int = 48      # paper §IV-A3
+    weight_bits: int = 4
+    state_bits: int = 8
+    weight_buffer_sets: int = 256   # on-the-fly selectable filter sets
+    supply_v: float = 0.8
+
+    @property
+    def n_neurons(self) -> int:
+        return self.n_slices * self.clusters_per_slice * self.tdm_neurons
+
+    @property
+    def sops_per_cycle(self) -> int:
+        # every cluster updates one TDM neuron per cycle
+        return self.n_slices * self.clusters_per_slice
+
+
+# --- calibrated power model ------------------------------------------------
+# Total power decomposes into a fixed part (DMAs + streamers, constant with
+# slice count per Fig. 4's constant-DMA-area observation) and a per-slice
+# part.  Calibrated so that the 8-slice point hits the published 11.29 mW.
+_P_FIXED_W = 1.0e-3            # DMAs + collector + C-XBAR base
+_P_PER_SLICE_W = (11.29e-3 - _P_FIXED_W) / 8.0   # = 1.28625 mW / slice
+
+# --- calibrated area model (kGE; Fig. 4 trend) -----------------------------
+# Neuron area 19.9 um^2 (Table II) at 8192 neurons; ND2X1 (8T, GF22FDX)
+# ~0.2 um^2 => ~100 GE/neuron including its share of cluster datapath.
+_GE_PER_NEURON = 100.0
+_A_DMA_KGE = 30.0              # fixed: 2 DMAs + streamers
+_A_XBAR_BASE_KGE = 8.0         # C-XBAR base + per-port growth
+_A_XBAR_PORT_KGE = 4.0
+
+
+def power_w(cfg: SneConfig, activity: float = 0.05) -> float:
+    """Average power. The paper's estimate is a worst case with all units
+    updating; dynamic power scales (weakly) with activity around the 5%
+    calibration point — we scale the slice dynamic share linearly."""
+    act_scale = 0.2 + 0.8 * min(activity / 0.05, 1.0)
+    return _P_FIXED_W + cfg.n_slices * _P_PER_SLICE_W * act_scale
+
+
+def peak_sops(cfg: SneConfig) -> float:
+    """Peak synaptic operations per second (Fig. 5b)."""
+    return cfg.sops_per_cycle * cfg.freq_hz
+
+
+def energy_per_sop_j(cfg: SneConfig, activity: float = 0.05) -> float:
+    """Energy per synaptic operation (Fig. 5b: 0.221 pJ/SOP @ 8 slices)."""
+    return power_w(cfg, activity) / peak_sops(cfg)
+
+
+def efficiency_tsops_w(cfg: SneConfig, activity: float = 0.05) -> float:
+    return peak_sops(cfg) / power_w(cfg, activity) / 1e12
+
+
+def area_kge(cfg: SneConfig) -> Dict[str, float]:
+    """Area breakdown in kGE (Fig. 4)."""
+    sl = cfg.n_slices * cfg.clusters_per_slice * cfg.tdm_neurons \
+        * _GE_PER_NEURON / 1e3
+    xbar = _A_XBAR_BASE_KGE + _A_XBAR_PORT_KGE * cfg.n_slices
+    out = {"slices": sl, "c_xbar": xbar, "dma": _A_DMA_KGE}
+    out["total"] = sum(out.values())
+    return out
+
+
+def time_per_event_s(cfg: SneConfig) -> float:
+    """An input event is consumed in `cycles_per_event` cycles (120 ns)."""
+    return cfg.cycles_per_event / cfg.freq_hz
+
+
+def inference_time_s(cfg: SneConfig, total_events: float,
+                     n_parallel_slices: int | None = None) -> float:
+    """Events are consumed serially per slice; layers mapped to different
+    slices run in parallel (paper §III-D5 mapping mode 1).  With layer-
+    parallel mapping the critical path is the busiest slice; the default
+    conservatively assumes the whole stream is serialised (mode 2)."""
+    del n_parallel_slices
+    return total_events * time_per_event_s(cfg)
+
+
+def inference_energy_j(cfg: SneConfig, total_events: float,
+                       activity: float = 0.05) -> float:
+    return power_w(cfg, activity) * inference_time_s(cfg, total_events)
+
+
+def inference_rate_hz(cfg: SneConfig, total_events: float) -> float:
+    return 1.0 / inference_time_s(cfg, total_events)
+
+
+# ---------------------------------------------------------------------------
+# Network-level accounting: map per-layer event counts (measured from the
+# JAX event simulation, or analytic from activity fractions) to Table I.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerActivity:
+    name: str
+    n_events: float          # input events consumed by this layer
+    n_sops: float            # synaptic updates triggered
+    n_neurons: int           # output neurons
+
+
+def network_events_from_activity(layer_sizes: Sequence[Tuple[str, int, int]],
+                                 activity: float,
+                                 n_timesteps: int) -> List[LayerActivity]:
+    """Analytic event counts: every layer sees `activity` fraction of its
+    input tensor as events per inference (the paper reports 1.2%-4.9%
+    average network activity on DVS-Gesture)."""
+    out = []
+    for name, in_size, fan_out in layer_sizes:
+        n_ev = in_size * n_timesteps * activity
+        out.append(LayerActivity(name, n_ev, n_ev * fan_out, in_size))
+    return out
+
+
+def summarize_inference(cfg: SneConfig, layers: Sequence[LayerActivity],
+                        activity: float = 0.05) -> Dict[str, float]:
+    total_events = sum(l.n_events for l in layers)
+    total_sops = sum(l.n_sops for l in layers)
+    t = inference_time_s(cfg, total_events)
+    p = power_w(cfg, activity)
+    return {
+        "total_events": total_events,
+        "total_sops": total_sops,
+        "inference_time_s": t,
+        "inference_energy_j": p * t,
+        "inference_rate_hz": 1.0 / t,
+        "power_w": p,
+        "energy_per_sop_j": energy_per_sop_j(cfg, activity),
+        "peak_sops": peak_sops(cfg),
+        "efficiency_tsops_w": efficiency_tsops_w(cfg, activity),
+    }
+
+
+def slices_required(n_neurons: int, cfg: SneConfig) -> int:
+    """Slices needed to map a layer fully spatially (mapping mode 1)."""
+    per_slice = cfg.clusters_per_slice * cfg.tdm_neurons
+    return math.ceil(n_neurons / per_slice)
+
+
+# Published Table II rows (for the SoA-comparison benchmark).
+SOA_TABLE = [
+    # name, tech, perf GOP/s, eff TOP/s/W, energy/SOP pJ, freq MHz, power mW
+    ("SNE (this work)", "Digital 22nm", 51.2, 4.54, 0.221, 400.0, 11.29),
+    ("Tianjic", "Digital 28nm", 649.0, 1.28, 6.18, 300.0, 950.0),
+    ("Dynapsel", "Analog 28nm", None, 0.6, 2.0, None, None),
+    ("ODIN", "Digital 28nm", 0.038, 0.079, 12.7, 75.0, 0.477),
+    ("TrueNorth", "Digital 28nm", 58.0, 0.046, 27.0, None, 65.0),
+    ("SPOON", "Digital 28nm", None, None, 1700.0, 150.0, None),
+    ("Loihi", "Digital 14nm", None, None, 23.0, None, None),
+    ("SpiNNaker 2", "Digital 22nm", None, 3.26, 1700.0, 200.0, None),
+]

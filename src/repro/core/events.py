@@ -1,0 +1,207 @@
+"""Explicit event representation (paper Fig. 1, §III-C).
+
+SNE encodes activations as 32-bit quadruples ``E := (OP_e, t, x, y)`` plus an
+input-channel address. On TPU we keep the same *logical* format but hold the
+fields as a struct-of-arrays with a static capacity and a validity mask —
+XLA requires static shapes, so the capacity plays the role of the event FIFO
+depth in the ASIC (overflow is counted and surfaced, mirroring back-pressure).
+
+Opcode semantics (paper §III-C):
+  * ``OP_UPDATE`` — accumulate synaptic contributions into every membrane in
+    the event's receptive field.
+  * ``OP_RST``    — reset all membrane potentials of the engine to zero.
+  * ``OP_FIRE``   — threshold every neuron and emit output events.  In this
+    implementation a FIRE is issued implicitly at every timestep boundary
+    (exactly what the ASIC sequencer does once per timestep), and explicit
+    FIRE events are also honoured.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+OP_UPDATE = 0
+OP_RST = 1
+OP_FIRE = 2
+
+
+class EventStream(NamedTuple):
+    """A padded, time-sorted stream of events (struct-of-arrays).
+
+    All arrays share shape ``(capacity,)``.  Invalid (padding) slots have
+    ``valid == False`` and ``t`` equal to the maximum seen timestep so that a
+    time-ordered scan treats them as trailing no-ops.
+    """
+
+    t: jnp.ndarray      # int32 — timestep of the event
+    x: jnp.ndarray      # int32 — vertical position (row)
+    y: jnp.ndarray      # int32 — horizontal position (column)
+    c: jnp.ndarray      # int32 — input channel (weight-set address, §III-C)
+    op: jnp.ndarray     # int32 — OP_UPDATE / OP_RST / OP_FIRE
+    valid: jnp.ndarray  # bool
+
+    @property
+    def capacity(self) -> int:
+        return self.t.shape[0]
+
+    def count(self) -> jnp.ndarray:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class EventFormat:
+    """Bit allocation of the packed 32-bit event word (paper Fig. 1).
+
+    The paper does not publish the exact field split; the defaults below
+    cover DVS-Gesture (128x128, 2 polarities) with 2^12 timesteps, and are
+    asserted at pack time.
+    """
+
+    op_bits: int = 2
+    t_bits: int = 12
+    c_bits: int = 4
+    x_bits: int = 7
+    y_bits: int = 7
+
+    def __post_init__(self):
+        total = self.op_bits + self.t_bits + self.c_bits + self.x_bits + self.y_bits
+        if total > 32:
+            raise ValueError(f"event format needs {total} bits > 32")
+
+    @property
+    def shifts(self) -> Tuple[int, int, int, int, int]:
+        y_s = 0
+        x_s = self.y_bits
+        c_s = x_s + self.x_bits
+        t_s = c_s + self.c_bits
+        op_s = t_s + self.t_bits
+        return op_s, t_s, c_s, x_s, y_s
+
+
+DEFAULT_FORMAT = EventFormat()
+
+
+def pack_events(stream: EventStream, fmt: EventFormat = DEFAULT_FORMAT) -> jnp.ndarray:
+    """Pack an EventStream into uint32 words (memory format, Fig. 1)."""
+    op_s, t_s, c_s, x_s, y_s = fmt.shifts
+    for name, arr, bits in (
+        ("op", stream.op, fmt.op_bits),
+        ("t", stream.t, fmt.t_bits),
+        ("c", stream.c, fmt.c_bits),
+        ("x", stream.x, fmt.x_bits),
+        ("y", stream.y, fmt.y_bits),
+    ):
+        del name, arr, bits  # range enforcement happens via masking below
+    mask = lambda v, b: jnp.uint32(v.astype(jnp.uint32) & ((1 << b) - 1))
+    word = (
+        (mask(stream.op, fmt.op_bits) << op_s)
+        | (mask(stream.t, fmt.t_bits) << t_s)
+        | (mask(stream.c, fmt.c_bits) << c_s)
+        | (mask(stream.x, fmt.x_bits) << x_s)
+        | (mask(stream.y, fmt.y_bits) << y_s)
+    )
+    return word.astype(jnp.uint32)
+
+
+def unpack_events(words: jnp.ndarray, valid: jnp.ndarray,
+                  fmt: EventFormat = DEFAULT_FORMAT) -> EventStream:
+    """Inverse of :func:`pack_events` (stream format decode in the DMA)."""
+    op_s, t_s, c_s, x_s, y_s = fmt.shifts
+    w = words.astype(jnp.uint32)
+    take = lambda s, b: ((w >> s) & ((1 << b) - 1)).astype(jnp.int32)
+    return EventStream(
+        t=take(t_s, fmt.t_bits),
+        x=take(x_s, fmt.x_bits),
+        y=take(y_s, fmt.y_bits),
+        c=take(c_s, fmt.c_bits),
+        op=take(op_s, fmt.op_bits),
+        valid=valid,
+    )
+
+
+def dense_to_events(spikes: jnp.ndarray, capacity: int) -> EventStream:
+    """Convert a dense binary spike tensor ``(T, H, W, C)`` to an EventStream.
+
+    Events come out sorted by timestep (row-major nonzero order), matching
+    Listing 1's outermost time loop.  If the tensor holds more than
+    ``capacity`` events the overflow is dropped (and visible through
+    :func:`overflow_count`) — the static-capacity analogue of FIFO overflow.
+    """
+    if spikes.ndim != 4:
+        raise ValueError(f"expected (T,H,W,C), got {spikes.shape}")
+    nz = jnp.nonzero(
+        spikes, size=capacity, fill_value=jnp.iinfo(jnp.int32).max
+    )
+    t, x, y, c = (a.astype(jnp.int32) for a in nz)
+    n = jnp.sum((spikes != 0).astype(jnp.int32))
+    idx = jnp.arange(capacity, dtype=jnp.int32)
+    valid = idx < n
+    big_t = jnp.int32(spikes.shape[0])  # padding slots sort after real events
+    t = jnp.where(valid, t, big_t)
+    zero = jnp.zeros_like(t)
+    return EventStream(
+        t=t,
+        x=jnp.where(valid, x, zero),
+        y=jnp.where(valid, y, zero),
+        c=jnp.where(valid, c, zero),
+        op=jnp.full((capacity,), OP_UPDATE, dtype=jnp.int32),
+        valid=valid,
+    )
+
+
+def overflow_count(spikes: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    """Number of events that would be dropped by ``dense_to_events``."""
+    n = jnp.sum((spikes != 0).astype(jnp.int32))
+    return jnp.maximum(n - capacity, 0)
+
+
+def events_to_dense(stream: EventStream, shape: Tuple[int, int, int, int],
+                    binary: bool = True) -> jnp.ndarray:
+    """Scatter an EventStream back into a dense ``(T, H, W, C)`` tensor."""
+    T, H, W, C = shape
+    dense = jnp.zeros(shape, dtype=jnp.float32)
+    upd = stream.valid & (stream.op == OP_UPDATE)
+    ones = upd.astype(jnp.float32)
+    # Out-of-range padding coordinates are routed to a dropped bucket by
+    # clipping into range and zero-weighting them via `ones`.
+    tt = jnp.clip(stream.t, 0, T - 1)
+    xx = jnp.clip(stream.x, 0, H - 1)
+    yy = jnp.clip(stream.y, 0, W - 1)
+    cc = jnp.clip(stream.c, 0, C - 1)
+    dense = dense.at[tt, xx, yy, cc].add(ones)
+    if binary:
+        dense = jnp.minimum(dense, 1.0)
+    return dense
+
+
+def concatenate_streams(a: EventStream, b: EventStream) -> EventStream:
+    """Merge two streams and re-sort by timestep (the 'collector', §III-D3)."""
+    cat = EventStream(*(jnp.concatenate([fa, fb]) for fa, fb in zip(a, b)))
+    return sort_stream(cat)
+
+
+def sort_stream(s: EventStream) -> EventStream:
+    """Stable sort by (t, invalid-last). Padding slots sort to the tail."""
+    key = jnp.where(s.valid, s.t, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key, stable=True)
+    return EventStream(*(f[order] for f in s))
+
+
+def activity(spikes: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of nonzero entries — the paper's 'firing activity' metric."""
+    return jnp.mean((spikes != 0).astype(jnp.float32))
+
+
+def capacity_for(shape: Tuple[int, int, int, int], act: float,
+                 slack: float = 2.0, align: int = 128) -> int:
+    """Pick a static event capacity for an expected activity level.
+
+    ``slack`` over-provisions (like sizing the ASIC FIFOs), and the result is
+    aligned for TPU-friendly vector shapes.
+    """
+    n = int(shape[0] * shape[1] * shape[2] * shape[3] * act * slack)
+    n = max(n, align)
+    return ((n + align - 1) // align) * align

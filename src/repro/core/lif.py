@@ -1,0 +1,129 @@
+"""LIF neuron dynamics (paper §III-B).
+
+SNE implements a leaky integrate-and-fire neuron with the exponential decay
+*linearised* into an iterative subtraction so the datapath is one add:
+
+    V[t+1] = V[t] - L + sum_j W_ij * S_j[t]
+    S[t]   = Theta(V[t] - V_th)
+
+plus a firing reset (state goes back to rest after a spike) and 8-bit state
+saturation.  Two leak conventions are supported:
+
+  * ``"toward_zero"`` (default): |V| shrinks by L per step, saturating at 0.
+    This is the linearised exponential decay toward the rest potential and
+    is what a signed hardware datapath does.
+  * ``"subtract"``: plain ``V - L`` (the paper's formula verbatim).
+
+Both admit an *exact* lazy application over ``dt`` idle steps — the paper's
+time-of-last-update (TLU) trick (§III-D4.iii): with no input, leak is a pure
+function of elapsed time, and a reset neuron cannot re-cross the threshold,
+so idle timesteps can be skipped wholesale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LifParams:
+    threshold: float = 1.0
+    leak: float = 0.0625
+    leak_mode: str = "toward_zero"   # or "subtract"
+    reset_mode: str = "zero"         # or "subtract" (soft reset)
+    state_clip: float | None = None  # e.g. 127/scale for 8-bit state
+    surrogate_beta: float = 10.0     # steepness of the surrogate gradient
+
+    def __post_init__(self):
+        if self.leak < 0:
+            raise ValueError("event path requires leak >= 0")
+        if self.threshold <= 0:
+            raise ValueError("event path requires threshold > 0")
+
+
+def apply_leak(v: jnp.ndarray, leak, dt, mode: str) -> jnp.ndarray:
+    """Apply ``dt`` leak steps at once (TLU lazy leak — exact, see module doc)."""
+    dt = jnp.asarray(dt, v.dtype)
+    step = leak * dt
+    if mode == "toward_zero":
+        return jnp.sign(v) * jnp.maximum(jnp.abs(v) - step, 0.0)
+    elif mode == "subtract":
+        return v - step
+    raise ValueError(f"unknown leak mode {mode!r}")
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def spike_fn(v: jnp.ndarray, threshold, beta: float = 10.0) -> jnp.ndarray:
+    """Heaviside firing rule with a fast-sigmoid surrogate gradient.
+
+    Forward: ``Theta(v - threshold)``.  Backward: SLAYER-style smooth
+    derivative ``beta / (2 * (1 + beta*|v - th|)^2)`` so the eCNN can be
+    trained with BPTT (paper §IV-B trains in SLAYER with a custom SNE-LIF
+    neuron model; this is that neuron model's JAX twin).
+    """
+    return (v >= threshold).astype(v.dtype)
+
+
+def _spike_fwd(v, threshold, beta):
+    return spike_fn(v, threshold, beta), (v, threshold)
+
+
+def _spike_bwd(beta, res, g):
+    v, threshold = res
+    x = jnp.abs(v - threshold) * beta
+    surr = beta / (2.0 * (1.0 + x) ** 2)
+    dv = g * surr
+    dth = -jnp.sum(g * surr)
+    return (dv, jnp.broadcast_to(dth, jnp.shape(threshold)))
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+def lif_step(v: jnp.ndarray, syn_in: jnp.ndarray, p: LifParams,
+             train: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One dense LIF timestep: leak -> integrate -> clip -> fire -> reset.
+
+    Returns ``(v_next, spikes)``.  ``train=True`` routes the threshold
+    through the surrogate-gradient spike function.
+    """
+    v = apply_leak(v, p.leak, 1, p.leak_mode)
+    v = v + syn_in
+    if p.state_clip is not None:
+        v = jnp.clip(v, -p.state_clip, p.state_clip)
+    if train:
+        s = spike_fn(v, p.threshold, p.surrogate_beta)
+    else:
+        s = (v >= p.threshold).astype(v.dtype)
+    if p.reset_mode == "zero":
+        v = v * (1.0 - s)
+    elif p.reset_mode == "subtract":
+        v = v - s * p.threshold
+    else:
+        raise ValueError(f"unknown reset mode {p.reset_mode!r}")
+    return v, s
+
+
+def lif_rollout(v0: jnp.ndarray, syn_in: jnp.ndarray, p: LifParams,
+                train: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scan :func:`lif_step` over a ``(T, ...)`` synaptic-input tensor."""
+
+    def body(v, x):
+        v, s = lif_step(v, x, p, train)
+        return v, s
+
+    return jax.lax.scan(body, v0, syn_in)
+
+
+def fire_and_reset(v: jnp.ndarray, p: LifParams) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """FIRE_OP: threshold every neuron, emit spikes, reset firing neurons."""
+    s = (v >= p.threshold).astype(v.dtype)
+    if p.reset_mode == "zero":
+        v = v * (1.0 - s)
+    else:
+        v = v - s * p.threshold
+    return v, s

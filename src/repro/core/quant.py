@@ -1,0 +1,130 @@
+"""Quantisation for SNE deployment (paper §III-D4: 4-bit weights, 8-bit state).
+
+Two pieces:
+
+  * **QAT fake-quant** — straight-through-estimator rounding used while
+    training in the dense path (the paper trains its SNE-LIF model in SLAYER
+    with quantised dynamics, §IV-B).
+  * **Integer deployment quantisation** — converts a trained layer to the
+    integer domain the ASIC computes in: int4-range weights, integer leak /
+    threshold, int8-saturating membrane.  Because both execution paths in
+    :mod:`repro.core.econv` run the same arithmetic, the integer-domain
+    values are held in float32 carriers (exact for |x| < 2^24) and the
+    membrane clip implements the 8-bit saturation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.econv import EConvParams, EConvSpec
+from repro.core.lif import LifParams
+
+INT4_MIN, INT4_MAX = -8, 7
+INT8_MIN, INT8_MAX = -128, 127
+
+
+@jax.custom_vjp
+def _ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+def weight_scale(w: jnp.ndarray, per_channel: bool = True) -> jnp.ndarray:
+    """Symmetric scale mapping the weight range onto int4."""
+    if per_channel and w.ndim >= 2:
+        axes = tuple(range(w.ndim - 1))
+        amax = jnp.max(jnp.abs(w), axis=axes, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w))
+    return jnp.maximum(amax, 1e-8) / INT4_MAX
+
+
+def fake_quant_weights(w: jnp.ndarray, per_channel: bool = True) -> jnp.ndarray:
+    """QAT: quantise-dequantise with STE gradients (4-bit symmetric)."""
+    s = weight_scale(w, per_channel)
+    q = jnp.clip(_ste_round(w / s), INT4_MIN, INT4_MAX)
+    return q * s
+
+
+def quantize_weights_int(w: jnp.ndarray,
+                         per_channel: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Deployment: integer weight codes (int8 storage of int4 values) + scale."""
+    s = weight_scale(w, per_channel)
+    q = jnp.clip(jnp.round(w / s), INT4_MIN, INT4_MAX).astype(jnp.int8)
+    return q, s
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedLayer:
+    """An EConv layer lowered to the SNE integer domain."""
+
+    spec: EConvSpec          # rewritten with integer-domain LifParams
+    params: EConvParams      # integer-valued weights in a float32 carrier
+    w_scale_max: float       # for reporting / dequant
+
+    @staticmethod
+    def from_float(spec: EConvSpec, params: EConvParams,
+                   state_bits: int = 8) -> "QuantizedLayer":
+        """Lower a float layer: weights -> int4 codes; threshold & leak are
+        expressed in the same integer units (scaled by 1/s); the membrane
+        clip implements the ``state_bits`` saturation."""
+        if spec.kind == "pool":
+            # Pool weights are unit synapses already; threshold in units.
+            q = params.w
+            s_scalar = 1.0
+        else:
+            qi, s = quantize_weights_int(params.w, per_channel=False)
+            q = qi.astype(jnp.float32)
+            s_scalar = float(s)
+        clip_val = float(2 ** (state_bits - 1) - 1)
+        lif = dataclasses.replace(
+            spec.lif,
+            threshold=max(round(spec.lif.threshold / s_scalar), 1),
+            leak=max(round(spec.lif.leak / s_scalar), 0),
+            state_clip=clip_val,
+        )
+        qspec = dataclasses.replace(spec, lif=lif)
+        return QuantizedLayer(spec=qspec, params=EConvParams(w=q),
+                              w_scale_max=s_scalar)
+
+
+def quantize_state(v: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """8-bit state quantisation (storage format of the cluster memories)."""
+    return jnp.clip(jnp.round(v / scale), INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize_state(q: jnp.ndarray, scale: float) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4 codes two-per-byte (the ASIC weight memory format)."""
+    flat = q.astype(jnp.int32).reshape(-1)
+    if flat.shape[0] % 2:
+        flat = jnp.concatenate([flat, jnp.zeros((1,), jnp.int32)])
+    lo = flat[0::2] & 0xF
+    hi = flat[1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    b = packed.astype(jnp.int32)
+    lo = (b & 0xF)
+    hi = (b >> 4) & 0xF
+    out = jnp.stack([lo, hi], axis=-1).reshape(-1)[:n]
+    return jnp.where(out >= 8, out - 16, out).astype(jnp.int8)

@@ -1,0 +1,189 @@
+"""eCNN network assembly — the paper's Fig. 6 topology and friends.
+
+The Fig. 6 network (SLAYER's standard IBM-DVS-Gesture eCNN, which matches
+the paper's event-count / energy arithmetic — see DESIGN.md §9):
+
+    128x128x2 -> sum-pool 4 -> conv 16c5(p2) -> pool 2 -> conv 32c3(p1)
+              -> pool 2 -> FC 512 -> FC 11
+
+Training runs the dense path with surrogate gradients (the JAX twin of the
+paper's SLAYER/SNE-LIF setup, §IV-B), optionally with 4-bit QAT.  Inference
+runs either path; the event path is the SNE execution model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core.econv import (EConvParams, EConvSpec, EConvStats,
+                              dense_forward, event_forward, init_econv)
+from repro.core.lif import LifParams
+from repro.core.quant import QuantizedLayer, fake_quant_weights
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNSpec:
+    layers: Tuple[EConvSpec, ...]
+    n_timesteps: int
+    n_classes: int
+
+    @property
+    def in_shape(self):
+        return self.layers[0].in_shape
+
+
+def _lif(th=1.0, leak=0.03125):
+    return LifParams(threshold=th, leak=leak)
+
+
+def dvs_gesture_net(n_timesteps: int = 100, height: int = 128,
+                    width: int = 128, pol: int = 2,
+                    n_classes: int = 11) -> SNNSpec:
+    """The paper's accuracy-benchmark network (Fig. 6)."""
+    l0 = EConvSpec("pool", (height, width, pol), pol, kernel=4, stride=4,
+                   lif=_lif(th=0.999))  # sum-pool: any input spike passes
+    s0 = l0.out_shape
+    l1 = EConvSpec("conv", s0, 16, kernel=5, padding=2, lif=_lif(1.0))
+    l2 = EConvSpec("pool", l1.out_shape, 16, kernel=2, stride=2,
+                   lif=_lif(0.999))
+    l3 = EConvSpec("conv", l2.out_shape, 32, kernel=3, padding=1,
+                   lif=_lif(1.0))
+    l4 = EConvSpec("pool", l3.out_shape, 32, kernel=2, stride=2,
+                   lif=_lif(0.999))
+    l5 = EConvSpec("fc", l4.out_shape, 512, lif=_lif(1.0))
+    l6 = EConvSpec("fc", l5.out_shape, n_classes, lif=_lif(1.0))
+    return SNNSpec(layers=(l0, l1, l2, l3, l4, l5, l6),
+                   n_timesteps=n_timesteps, n_classes=n_classes)
+
+
+def nmnist_net(n_timesteps: int = 60, n_classes: int = 10) -> SNNSpec:
+    """NMNIST variant (34x34x2 input; same topology family)."""
+    l1 = EConvSpec("conv", (34, 34, 2), 12, kernel=5, padding=1, lif=_lif())
+    l2 = EConvSpec("pool", l1.out_shape, 12, kernel=2, stride=2,
+                   lif=_lif(0.999))
+    l3 = EConvSpec("conv", l2.out_shape, 32, kernel=3, padding=1, lif=_lif())
+    l4 = EConvSpec("pool", l3.out_shape, 32, kernel=2, stride=2,
+                   lif=_lif(0.999))
+    l5 = EConvSpec("fc", l4.out_shape, n_classes, lif=_lif(1.0))
+    return SNNSpec(layers=(l1, l2, l3, l4, l5), n_timesteps=n_timesteps,
+                   n_classes=n_classes)
+
+
+def tiny_net(n_timesteps: int = 16, n_classes: int = 4) -> SNNSpec:
+    """Reduced config for CPU smoke tests."""
+    l1 = EConvSpec("conv", (12, 12, 2), 6, kernel=3, padding=1, lif=_lif())
+    l2 = EConvSpec("pool", l1.out_shape, 6, kernel=2, stride=2,
+                   lif=_lif(0.999))
+    l3 = EConvSpec("fc", l2.out_shape, n_classes, lif=_lif())
+    return SNNSpec(layers=(l1, l2, l3), n_timesteps=n_timesteps,
+                   n_classes=n_classes)
+
+
+def init_snn(key: jax.Array, spec: SNNSpec) -> List[EConvParams]:
+    keys = jax.random.split(key, len(spec.layers))
+    return [init_econv(k, l) for k, l in zip(keys, spec.layers)]
+
+
+# ---------------------------------------------------------------------------
+# Dense execution (training path)
+# ---------------------------------------------------------------------------
+
+def dense_apply(params: Sequence[EConvParams], spec: SNNSpec,
+                spikes: jnp.ndarray, train: bool = False,
+                qat: bool = False):
+    """Forward through all layers; returns (out_spikes, per-layer spikes)."""
+    acts = []
+    x = spikes
+    for p, l in zip(params, spec.layers):
+        if qat and l.kind != "pool":
+            p = EConvParams(w=fake_quant_weights(p.w))
+        x, _ = dense_forward(p, l, x, train=train)
+        acts.append(x)
+    return x, acts
+
+
+def spike_counts(out_spikes: jnp.ndarray) -> jnp.ndarray:
+    """Rate decoding: total output spikes per class over the inference."""
+    return jnp.sum(out_spikes, axis=0).reshape(-1)
+
+
+def count_loss(out_spikes: jnp.ndarray, label: jnp.ndarray, spec: SNNSpec,
+               true_rate: float = 0.5, false_rate: float = 0.02) -> jnp.ndarray:
+    """SLAYER-style spike-count target loss (vd Maas / Shrestha & Orchard)."""
+    counts = spike_counts(out_spikes)
+    target = jnp.full((spec.n_classes,), false_rate * spec.n_timesteps)
+    target = target.at[label].set(true_rate * spec.n_timesteps)
+    return jnp.mean((counts - target) ** 2)
+
+
+def ce_loss(out_spikes: jnp.ndarray, label: jnp.ndarray) -> jnp.ndarray:
+    counts = spike_counts(out_spikes)
+    logp = jax.nn.log_softmax(counts)
+    return -logp[label]
+
+
+def predict(out_spikes: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(spike_counts(out_spikes))
+
+
+# ---------------------------------------------------------------------------
+# Event execution (the SNE model, layer by layer through the C-XBAR)
+# ---------------------------------------------------------------------------
+
+class NetworkEventStats(NamedTuple):
+    per_layer: Tuple[EConvStats, ...]
+    total_events: jnp.ndarray
+    total_sops: jnp.ndarray
+
+
+def event_apply(params: Sequence[EConvParams], spec: SNNSpec,
+                stream: ev.EventStream,
+                capacities: Sequence[int]):
+    """Run the whole eCNN in the event domain.
+
+    ``capacities[i]`` sizes layer *i*'s output event buffer (the FIFO/DMA
+    capacity analogue).  Returns the final output stream + per-layer stats.
+    """
+    if len(capacities) != len(spec.layers):
+        raise ValueError("need one output capacity per layer")
+    stats_all = []
+    s = stream
+    for p, l, cap in zip(params, spec.layers, capacities):
+        s, _, st = event_forward(p, l, s, cap, spec.n_timesteps)
+        stats_all.append(st)
+    total_ev = sum(st.n_update_events for st in stats_all)
+    total_sops = sum(st.n_sops for st in stats_all)
+    return s, NetworkEventStats(tuple(stats_all), total_ev, total_sops)
+
+
+def event_predict(params, spec: SNNSpec, stream: ev.EventStream,
+                  capacities: Sequence[int]):
+    out, stats = event_apply(params, spec, stream, capacities)
+    # rate decoding over the output event stream
+    cls = jnp.where(out.valid, out.c, spec.n_classes)
+    counts = jnp.zeros((spec.n_classes + 1,)).at[cls].add(1.0)[:-1]
+    return jnp.argmax(counts), counts, stats
+
+
+def quantize_snn(params: Sequence[EConvParams],
+                 spec: SNNSpec) -> Tuple[List[EConvParams], SNNSpec]:
+    """Lower every layer to the SNE integer domain (4-bit W / 8-bit state)."""
+    qp, ql = [], []
+    for p, l in zip(params, spec.layers):
+        q = QuantizedLayer.from_float(l, p)
+        qp.append(q.params)
+        ql.append(q.spec)
+    return qp, dataclasses.replace(spec, layers=tuple(ql))
+
+
+def default_capacities(spec: SNNSpec, activity: float = 0.05,
+                       slack: float = 4.0) -> List[int]:
+    caps = []
+    for l in spec.layers:
+        shape = (spec.n_timesteps,) + l.out_shape
+        caps.append(ev.capacity_for(shape, activity, slack))
+    return caps

@@ -1,0 +1,63 @@
+"""Deterministic synthetic token pipeline (sharded, checkpointable).
+
+Tokens follow a noisy affine bigram process: with probability ``p_struct``
+the next token is ``(a * tok + b) mod vocab``, else uniform noise. The
+structure is learnable within a few hundred steps (loss drops well below
+ln(vocab)) — enough signal for the end-to-end training example — while
+generation stays a pure function of ``(seed, shard, batch_index)``:
+
+  * **sharded** — each data-parallel rank generates exactly its shard, no
+    host broadcast (the pattern scales to any number of hosts);
+  * **checkpointable** — the pipeline cursor is one integer; restore =
+    fold_in(seed, cursor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LmDatasetSpec:
+    vocab_size: int
+    seq_len: int
+    p_struct: float = 0.9
+    a: int = 31
+    b: int = 17
+
+
+def batch_at(spec: LmDatasetSpec, seed: int, index: int, batch: int,
+             shard: int = 0, n_shards: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(tokens, labels) for one global batch index; returns this shard's
+    ``batch // n_shards`` rows."""
+    assert batch % n_shards == 0
+    rows = batch // n_shards
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), index), shard)
+    k0, k1, k2 = jax.random.split(key, 3)
+    V, S = spec.vocab_size, spec.seq_len
+    first = jax.random.randint(k0, (rows, 1), 0, V)
+    noise = jax.random.randint(k1, (rows, S), 0, V)
+    use_struct = jax.random.uniform(k2, (rows, S)) < spec.p_struct
+
+    def step(tok, xs):
+        nz, us = xs
+        nxt = jnp.where(us, (spec.a * tok + spec.b) % V, nz)
+        return nxt, nxt
+
+    _, seq = jax.lax.scan(step, first[:, 0],
+                          (noise.T, use_struct.T))
+    tokens = jnp.concatenate([first, seq.T[:, :-1]], axis=1)
+    labels = seq.T
+    return tokens, labels
+
+
+def stream(spec: LmDatasetSpec, seed: int, batch: int, start_index: int = 0,
+           shard: int = 0, n_shards: int = 1) -> Iterator[Tuple[jnp.ndarray, jnp.ndarray]]:
+    i = start_index
+    while True:
+        yield batch_at(spec, seed, i, batch, shard, n_shards)
+        i += 1

@@ -1,0 +1,5 @@
+from repro.kernels.event_conv.ops import event_conv
+from repro.kernels.event_conv.ref import event_conv_ref
+from repro.kernels.event_conv.kernel import event_conv_pallas
+
+__all__ = ["event_conv", "event_conv_ref", "event_conv_pallas"]

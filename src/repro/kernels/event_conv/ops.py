@@ -1,0 +1,31 @@
+"""jit'd public wrapper for the event-conv kernel.
+
+Selects the Pallas TPU kernel on TPU backends and interpret mode elsewhere
+(interpret mode executes the kernel body in Python on CPU — the validation
+path mandated for this container).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.event_conv.kernel import event_conv_pallas
+from repro.kernels.event_conv.ref import event_conv_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def event_conv(v: jnp.ndarray, weights: jnp.ndarray, ev_xyc: jnp.ndarray,
+               ev_gate: jnp.ndarray, co_blk: int = 128,
+               use_pallas: bool | None = None) -> jnp.ndarray:
+    """Accumulate a batch of UPDATE events into the membrane state.
+
+    ``use_pallas=None`` auto-selects: Pallas (compiled) on TPU, Pallas
+    interpret mode on CPU. ``use_pallas=False`` runs the pure-jnp oracle.
+    """
+    if use_pallas is False:
+        return event_conv_ref(v, weights, ev_xyc, ev_gate)
+    return event_conv_pallas(v, weights, ev_xyc, ev_gate, co_blk=co_blk,
+                             interpret=not _on_tpu())

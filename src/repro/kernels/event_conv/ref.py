@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the event-conv scatter-accumulate kernel.
+
+Semantics (one dense compute phase of the SNE execution model, §III-C):
+given a batch of UPDATE events ``(x, y, c)`` with a validity gate, add each
+event's flipped ``K x K x Co`` weight patch into the halo-padded membrane
+tensor at origin ``(x, y)``:
+
+    v[x + i, y + j, :] += W_flipped[i, j, c, :]      for i, j in [0, K)
+
+This is exactly what `repro.core.econv._scatter_event` does one event at a
+time; the kernel consumes a whole event batch per invocation (the paper's
+"dense computational phase" compressed from sparse activity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def event_conv_ref(v: jnp.ndarray, weights: jnp.ndarray,
+                   ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: sequential scatter-accumulate of event weight patches.
+
+    Args:
+      v:       (Hp, Wp, Co) halo-padded membrane state (Hp >= H + K - 1).
+      weights: (K, K, Ci, Co) convolution weights (unflipped, HWIO).
+      ev_xyc:  (E, 3) int32 event coordinates (x, y, c) in halo coords.
+      ev_gate: (E,) float gate; 0.0 disables an event (padding slot).
+
+    Returns the updated membrane state.
+    """
+    w_f = jnp.flip(jnp.flip(weights, 0), 1)  # conv flip: out += W[i',j'] form
+    K = weights.shape[0]
+
+    def body(vv, e):
+        xyc, g = e
+        patch = jnp.take(w_f, xyc[2], axis=2) * g          # (K, K, Co)
+        cur = jax.lax.dynamic_slice(vv, (xyc[0], xyc[1], 0),
+                                    (K, K, vv.shape[2]))
+        return jax.lax.dynamic_update_slice(vv, cur + patch,
+                                            (xyc[0], xyc[1], 0)), None
+
+    v, _ = jax.lax.scan(body, v, (ev_xyc, ev_gate))
+    return v

@@ -1,0 +1,5 @@
+from repro.kernels.lif.ops import lif_fused
+from repro.kernels.lif.ref import lif_fused_ref
+from repro.kernels.lif.kernel import lif_fused_pallas
+
+__all__ = ["lif_fused", "lif_fused_ref", "lif_fused_pallas"]

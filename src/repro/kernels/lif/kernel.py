@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused leak-integrate-fire with lazy TLU leak.
+
+The cluster datapath of the paper (§III-D4.i: "the LIF neuron dynamic data
+path is combinational") is an elementwise pipeline; its TPU analogue is a
+single fused VPU pass. The value of fusing on TPU is bandwidth: the naive
+composition (leak -> add -> clip -> compare -> select) would make five HBM
+round-trips over the membrane tensor; the fused kernel makes exactly one
+read and one write per operand — the same reuse argument the ASIC makes
+with its cluster-local state memories.
+
+Tiling: the membrane tensor is processed as ``(ROW_BLK, 128)`` float32 VMEM
+tiles (lane dim 128 = VPU width, sublane multiple of 8). Scalars (dt, leak,
+threshold, clip) ride in SMEM via scalar prefetch semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _lif_kernel(scal_ref, v_ref, syn_ref, v_out_ref, s_out_ref):
+    """scal_ref: (4,) float32 [dt, leak, threshold, state_clip(<0 = off)]."""
+    dt = scal_ref[0]
+    leak = scal_ref[1]
+    threshold = scal_ref[2]
+    clip = scal_ref[3]
+
+    v = v_ref[...]
+    syn = syn_ref[...]
+    step = leak * dt
+    v = jnp.sign(v) * jnp.maximum(jnp.abs(v) - step, 0.0)
+    v = v + syn
+    v = jnp.where(clip >= 0.0, jnp.clip(v, -clip, clip), v)
+    s = (v >= threshold).astype(v.dtype)
+    v_out_ref[...] = v * (1.0 - s)
+    s_out_ref[...] = s
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("row_blk", "interpret"))
+def lif_fused_pallas(v: jnp.ndarray, syn: jnp.ndarray, dt: jnp.ndarray,
+                     leak: float, threshold: float,
+                     state_clip: float | None = None,
+                     row_blk: int = 256, interpret: bool = False):
+    """Fused LIF update over an arbitrary-shaped membrane tensor.
+
+    The tensor is flattened and padded to ``(rows, 128)``; tiles of
+    ``(row_blk, 128)`` stream through VMEM. Returns ``(v_next, spikes)``
+    with the original shape.
+    """
+    shape = v.shape
+    n = v.size
+    rows = -(-n // LANE)                       # ceil
+    rows_pad = -(-rows // row_blk) * row_blk
+    pad = rows_pad * LANE - n
+
+    vf = jnp.pad(v.reshape(-1), (0, pad)).reshape(rows_pad, LANE)
+    sf = jnp.pad(syn.reshape(-1), (0, pad)).reshape(rows_pad, LANE)
+    scal = jnp.array(
+        [0.0, leak, threshold, -1.0 if state_clip is None else state_clip],
+        jnp.float32).at[0].set(dt.astype(jnp.float32))
+
+    grid = (rows_pad // row_blk,)
+    v_out, s_out = pl.pallas_call(
+        _lif_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4,), lambda r: (0,)),                 # scalars
+            pl.BlockSpec((row_blk, LANE), lambda r: (r, 0)),    # v tile
+            pl.BlockSpec((row_blk, LANE), lambda r: (r, 0)),    # syn tile
+        ],
+        out_specs=[
+            pl.BlockSpec((row_blk, LANE), lambda r: (r, 0)),
+            pl.BlockSpec((row_blk, LANE), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_pad, LANE), v.dtype),
+            jax.ShapeDtypeStruct((rows_pad, LANE), v.dtype),
+        ],
+        interpret=interpret,
+    )(scal, vf, sf)
+    v_next = v_out.reshape(-1)[:n].reshape(shape)
+    spikes = s_out.reshape(-1)[:n].reshape(shape)
+    return v_next, spikes

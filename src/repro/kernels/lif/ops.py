@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the fused LIF kernel (TPU Pallas / CPU interpret)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lif.kernel import lif_fused_pallas
+from repro.kernels.lif.ref import lif_fused_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def lif_fused(v: jnp.ndarray, syn: jnp.ndarray, dt: jnp.ndarray,
+              leak: float, threshold: float, state_clip: float | None = None,
+              use_pallas: bool | None = None):
+    """Fused lazy-leak + integrate + saturate + fire + reset.
+
+    Returns ``(v_next, spikes)``. Pallas on TPU, interpret mode on CPU;
+    ``use_pallas=False`` runs the pure-jnp oracle.
+    """
+    if use_pallas is False:
+        return lif_fused_ref(v, syn, dt, leak, threshold, state_clip)
+    return lif_fused_pallas(v, syn, jnp.asarray(dt), leak, threshold,
+                            state_clip, interpret=not _on_tpu())

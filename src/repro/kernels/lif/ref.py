@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused LIF kernel.
+
+One fused "FIRE boundary" of the SNE execution model (§III-B, §III-D4.iii):
+
+  1. lazy TLU leak: apply ``dt`` leak steps at once (toward-zero linear decay)
+  2. integrate the pending synaptic input
+  3. saturate to the 8-bit state range (state_clip)
+  4. threshold (Heaviside) -> spikes
+  5. hard reset firing neurons
+
+All five steps are elementwise over the membrane tensor — on the ASIC this
+is the single-cycle combinational cluster datapath; on TPU it fuses into one
+VPU pass over VMEM tiles.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lif_fused_ref(v: jnp.ndarray, syn: jnp.ndarray, dt: jnp.ndarray,
+                  leak: float, threshold: float,
+                  state_clip: float | None = None):
+    """Returns ``(v_next, spikes)``; all float32, spikes in {0, 1}."""
+    step = leak * dt.astype(v.dtype)
+    v = jnp.sign(v) * jnp.maximum(jnp.abs(v) - step, 0.0)   # lazy leak
+    v = v + syn                                             # integrate
+    if state_clip is not None:
+        v = jnp.clip(v, -state_clip, state_clip)            # 8-bit saturate
+    s = (v >= threshold).astype(v.dtype)                    # fire
+    v = v * (1.0 - s)                                       # hard reset
+    return v, s

@@ -1,0 +1,451 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --------------------------------------------------------------------------
+# Multi-pod dry-run: prove every (architecture x input shape x mesh) cell
+# lowers + compiles coherently on the production mesh, and extract the
+# roofline inputs (FLOPs, bytes, collective bytes) from the compiled
+# artifact. No allocation happens: everything is ShapeDtypeStructs.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+#       --shape train_4k [--multi-pod]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all
+#
+# The two os lines above MUST stay first: jax locks the device count on
+# first init, and only the dry-run wants 512 placeholder devices.
+# --------------------------------------------------------------------------
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPES, cell_supported,  # noqa: E402
+                           get_config)
+from repro.distributed.sharding import (clear_mesh_rules,  # noqa: E402
+                                        default_rules, set_mesh_rules)
+from repro.launch import specs as SP         # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer as T    # noqa: E402
+from repro.optim.schedules import warmup_cosine     # noqa: E402
+from repro.train.loop import make_train_step        # noqa: E402
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"= (\(?[\w\[\]{},. ]*?\)?) ([a-z0-9-]+)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_WHILE_RE = re.compile(r" while\(.*?body=(%\S+?)[,)\s]")
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_COMP_RE = re.compile(r"^(ENTRY )?(%\S+)\s*\(.*\)\s*->\s*.+\{$")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str):
+    """HLO module text -> ({name: [lines]}, entry_name)."""
+    comps: Dict[str, list] = {}
+    entry = None
+    cur: Optional[str] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line.strip())
+        if m and cur is None:
+            cur = m.group(2)
+            if m.group(1):
+                entry = cur
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line.strip())
+    return comps, entry
+
+
+def _line_collective(line: str):
+    """(kind, bytes, wire_bytes) for a collective instruction, else None."""
+    m = _LINE_RE.search(line)
+    if not m:
+        return None
+    type_str, op = m.group(1), m.group(2)
+    if op.endswith("-done"):
+        return None
+    kind = next((k for k in _COLL_KINDS
+                 if op == k or op == k + "-start"), None)
+    if kind is None:
+        return None
+    if op.endswith("-start") and type_str.startswith("("):
+        # result tuple is (operand alias, destination [, context]): count
+        # the destination buffer only
+        parts = _TYPE_RE.findall(type_str)
+        if len(parts) >= 2:
+            dt, dims = parts[1]
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes = n * _DTYPE_BYTES.get(dt, 0)
+        else:
+            nbytes = _type_bytes(type_str)
+    else:
+        nbytes = _type_bytes(type_str)
+    g = 2
+    gm = _GROUPS_RE.search(line)
+    if gm:
+        g = max(int(gm.group(2)), 1)
+    if kind == "all-reduce":
+        wire = 2.0 * nbytes * (g - 1) / g
+    elif kind in ("all-gather", "all-to-all"):
+        wire = nbytes * (g - 1) / g
+    elif kind == "reduce-scatter":
+        wire = float(nbytes) * (g - 1)
+    else:  # collective-permute
+        wire = float(nbytes)
+    return kind, nbytes, wire
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Collective payload per device from (post-SPMD) HLO text.
+
+    While-loop bodies execute trip-count times but print once; the parser
+    splits the module into computations, reads each while's
+    ``known_trip_count`` backend config, and expands the call tree from
+    ENTRY multiplicatively (nested scans multiply). Sizes come from result
+    types (optimised HLO omits operand types); ``wire_bytes`` applies the
+    ring-cost model per kind (all-reduce 2(g-1)/g x payload,
+    all-gather/all-to-all (g-1)/g, reduce-scatter (g-1) x piece).
+    """
+    comps, entry = _split_computations(hlo_text)
+    out = {k: {"count": 0.0, "bytes": 0.0, "wire_bytes": 0.0}
+           for k in _COLL_KINDS}
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def walk(name: str):
+        """-> tuple of (kind, count, bytes, wire) aggregates for one call."""
+        agg = {k: [0.0, 0.0, 0.0] for k in _COLL_KINDS}
+        for line in comps.get(name, ()):
+            col = _line_collective(line)
+            if col is not None:
+                kind, nbytes, wire = col
+                agg[kind][0] += 1
+                agg[kind][1] += nbytes
+                agg[kind][2] += wire
+                continue
+            wm = _WHILE_RE.search(line)
+            if wm:
+                body = wm.group(1)
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                sub = walk(body)
+                for kind, (c, b, w) in sub.items():
+                    agg[kind][0] += trip * c
+                    agg[kind][1] += trip * b
+                    agg[kind][2] += trip * w
+        return {k: tuple(v) for k, v in agg.items()}
+
+    if entry is not None:
+        total = walk(entry)
+        for kind, (c, b, w) in total.items():
+            out[kind]["count"] = c
+            out[kind]["bytes"] = b
+            out[kind]["wire_bytes"] = w
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    out["total_wire_bytes"] = sum(v["wire_bytes"] for v in out.values()
+                                  if isinstance(v, dict))
+    return out
+
+
+def _mem_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def _analytic_state_bytes(tree_specs) -> float:
+    """Bytes per device of a sharded spec tree (truth from shardings)."""
+    total = 0.0
+    for s in jax.tree.leaves(tree_specs):
+        n_shards = 1
+        spec = s.sharding.spec
+        mesh = s.sharding.mesh
+        for axis in spec:
+            if axis is None:
+                continue
+            for a in (axis if isinstance(axis, tuple) else (axis,)):
+                n_shards *= mesh.shape[a]
+        total += s.size * s.dtype.itemsize / n_shards
+    return total
+
+
+def _recurrence_flops(cfg, kind: str, B: int, S: int) -> float:
+    """Analytic FLOPs of per-timestep recurrences (xLSTM cells).
+
+    The sequence scan is exempt from analysis unrolling (a 32k-step
+    recurrence cannot be inlined into the IR), so its body cost is added
+    here: mLSTM ~7 elementwise/outer-product passes over the (H, hd, hd)
+    matrix memory per step; sLSTM 4 recurrent (hd x hd) matvecs per step.
+    Train counts fwd + remat-fwd + 2x bwd = 4x; prefill 1x; decode steps
+    are inline in the IR (no seq scan) and already counted.
+    """
+    from repro.models import config as MC
+    if kind == "decode":
+        return 0.0
+    fl = 0.0
+    for spec in cfg.layers:
+        if spec.mixer == MC.MLSTM:
+            di = 2 * cfg.d_model
+            hd = di // cfg.n_heads
+            fl += 7.0 * B * cfg.n_heads * hd * hd * S
+        elif spec.mixer == MC.SLSTM:
+            hd = cfg.d_model // cfg.n_heads
+            fl += 2.0 * 4.0 * B * cfg.n_heads * hd * hd * S
+    factor = (4.0 if cfg.remat else 3.0) if kind == "train" else 1.0
+    return fl * factor
+
+
+def build_step_fn(cfg, shape, mesh, rules):
+    """(jit-wrapped fn, input specs tuple) for one cell's step kind."""
+    bspecs = SP.batch_specs(cfg, shape, mesh, rules)
+    pspecs = SP.param_specs(cfg, mesh, rules)
+
+    if shape.kind == "train":
+        ospecs = SP.opt_specs(cfg, mesh, rules)
+        lr = warmup_cosine(3e-4, 100, 10_000)
+        step = make_train_step(cfg, lr, loss_chunk=512)
+        psh = jax.tree.map(lambda s: s.sharding, pspecs)
+        osh = jax.tree.map(lambda s: s.sharding, ospecs)
+        fn = jax.jit(step, donate_argnums=(0, 1),
+                     out_shardings=(psh, osh, None))
+        args = (pspecs, ospecs, bspecs)
+        state_specs = (pspecs, ospecs)
+    elif shape.kind == "prefill":
+        cspecs = SP.cache_specs(cfg, mesh, rules, shape.global_batch,
+                                shape.seq_len)
+        csh = jax.tree.map(lambda s: s.sharding, cspecs)
+
+        def prefill_fn(params, batch):
+            return T.prefill(params, cfg, batch["tokens"],
+                             frames=batch.get("frames"),
+                             patches=batch.get("patches"),
+                             cache_len=shape.seq_len)
+
+        fn = jax.jit(prefill_fn, out_shardings=(None, csh, None))
+        args = (pspecs, bspecs)
+        state_specs = (pspecs,)
+    else:  # decode
+        cspecs = SP.cache_specs(cfg, mesh, rules, shape.global_batch,
+                                shape.seq_len)
+        csh = jax.tree.map(lambda s: s.sharding, cspecs)
+        # keep the logits vocab-sharded on the way out (no final gather)
+        from jax.sharding import NamedSharding
+        lsh = NamedSharding(mesh, rules.spec(
+            ("batch", None, "act_vocab"),
+            (shape.global_batch, 1, cfg.vocab_padded), mesh))
+        quant = getattr(cfg, "weight_quant", "none") == "int8"
+        if quant:
+            from repro.models.layers import ParamDecl
+            from repro.models.quant_lm import dequant_params, quantize_decls
+            qdecls = quantize_decls(T.model_decls(cfg))
+            pspecs = jax.tree.map(
+                lambda d: jax.ShapeDtypeStruct(
+                    d.shape, d.dtype,
+                    sharding=rules.sharding(d.axes, d.shape, mesh)),
+                qdecls, is_leaf=lambda x: isinstance(x, ParamDecl))
+
+        def decode_fn(params, cache, batch):
+            if quant:
+                params = dequant_params(params, cfg.jdtype,
+                                        decls=T.model_decls(cfg))
+            return T.decode_step(params, cfg, cache, batch["tokens"],
+                                 batch["pos"])
+
+        fn = jax.jit(decode_fn, donate_argnums=(1,),
+                     out_shardings=(lsh, csh, None))
+        args = (pspecs, cspecs, bspecs)
+        state_specs = (pspecs, cspecs)
+    return fn, args, state_specs
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True,
+             cfg_override=None, tag: str = "",
+             extras: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Lower + compile one cell; return the roofline record."""
+    shape = SHAPES[shape_name]
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = default_rules(multi_pod,
+                          long_context=(shape_name == "long_500k"),
+                          seq_shard=getattr(cfg, "seq_shard", False),
+                          serve=getattr(cfg, "serve_rules", False))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(v) for v in mesh.shape.values()),
+        "multi_pod": multi_pod, "n_devices": n_dev, "kind": shape.kind,
+        "tag": tag,
+    }
+    if extras:
+        rec.update(extras)
+    set_mesh_rules(mesh, rules)
+    try:
+        fn, args, state_specs = build_step_fn(cfg, shape, mesh, rules)
+        t0 = time.time()
+        with mesh:
+            lowered = fn.lower(*args)
+        rec["lower_s"] = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t0
+        mem = _mem_analysis_dict(compiled)
+        cost = compiled.cost_analysis() or {}
+        rec["memory_analysis"] = mem
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and
+                       ("flops" in k or "bytes" in k or "utilization" in k)}
+        rec["flops_per_device"] = float(cost.get("flops", 0.0))
+        rec["bytes_per_device"] = float(cost.get("bytes accessed", 0.0))
+        rec["state_bytes_per_device"] = _analytic_state_bytes(state_specs)
+        t0 = time.time()
+        rec["collectives"] = parse_collective_bytes(compiled.as_text())
+        rec["parse_s"] = time.time() - t0
+        # --- exact FLOPs: XLA cost analysis counts while bodies once, so
+        # lower a fully-unrolled twin (no backend compile needed) ---
+        from repro.models.scan_util import unrolled
+        t0 = time.time()
+        with unrolled(True):
+            fn_u, args_u, _ = build_step_fn(cfg, shape, mesh, rules)
+            with mesh:
+                low_u = fn_u.lower(*args_u)
+        cost_u = low_u.cost_analysis() or {}
+        rec["lower_unrolled_s"] = time.time() - t0
+        rec_fl = _recurrence_flops(cfg, shape.kind, shape.global_batch,
+                                   shape.seq_len)
+        rec["flops_recurrence_analytic"] = rec_fl
+        rec["flops_global"] = float(cost_u.get("flops", 0.0)) + rec_fl
+        rec["bytes_global_unfused"] = float(cost_u.get("bytes accessed", 0.0))
+        rec["flops_per_device"] = rec["flops_global"] / n_dev
+        rec["params_total"] = T.param_count(cfg)
+        rec["params_active"] = T.active_param_count(cfg)
+        rec["status"] = "ok"
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}"
+                  f"{' [' + tag + ']' if tag else ''}: OK  "
+                  f"lower {rec['lower_s']:.1f}s compile {rec['compile_s']:.1f}s")
+            print(f"  memory_analysis: {mem}")
+            print(f"  cost_analysis: flops/dev={rec['flops_per_device']:.3e} "
+                  f"bytes/dev={rec['bytes_per_device']:.3e}")
+            print(f"  state bytes/dev: {rec['state_bytes_per_device']:.3e}")
+            c = rec["collectives"]
+            print("  collectives/dev: " + ", ".join(
+                f"{k}={v['bytes']:.2e}B({v['count']})"
+                for k, v in c.items() if isinstance(v, dict) and v["count"]))
+    except Exception as e:  # noqa: BLE001 — a failing cell is a finding
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+                  f"FAILED — {rec['error']}")
+        raise
+    finally:
+        clear_mesh_rules()
+    return rec
+
+
+def save_record(rec: Dict[str, Any], out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "multi" if rec["multi_pod"] else "single"
+    tag = f"__{rec['tag']}" if rec.get("tag") else ""
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{mesh_tag}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every supported cell on both meshes")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES:
+                ok, why = cell_supported(arch, shape_name)
+                if not ok:
+                    print(f"[dryrun] {arch} x {shape_name}: SKIP ({why})")
+                    continue
+                meshes = [False] if args.single_pod_only else [False, True]
+                for mp in meshes:
+                    try:
+                        rec = run_cell(arch, shape_name, mp)
+                        save_record(rec, args.out)
+                    except Exception as e:  # noqa: BLE001
+                        failures.append((arch, shape_name, mp, str(e)))
+        if failures:
+            print(f"[dryrun] {len(failures)} FAILURES:")
+            for f in failures:
+                print("   ", f)
+            raise SystemExit(1)
+        print("[dryrun] all cells OK")
+        return
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    rec = run_cell(args.arch, args.shape, args.multi_pod)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("collectives",)}, indent=1))
+    save_record(rec, args.out)
+
+
+if __name__ == "__main__":
+    main()

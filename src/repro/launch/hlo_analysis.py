@@ -1,0 +1,55 @@
+"""Per-op collective attribution from partitioned HLO (hillclimb profiler).
+
+The dry-run's aggregate collective bytes say *how much*; this module says
+*where*: each collective op is reported with its effective trip-count
+multiplier (nested while expansion) and its ``metadata op_name`` source
+string, ranked by wire bytes. This is the 'profile' the §Perf hypothesis
+loop reads — no real hardware, so the lowered IR is the profiler.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List
+
+from repro.launch.dryrun import (_COLL_KINDS, _line_collective, _COMP_RE,
+                                 _TRIP_RE, _WHILE_RE, _split_computations)
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def top_collectives(hlo_text: str, k: int = 25) -> List[Dict[str, Any]]:
+    comps, entry = _split_computations(hlo_text)
+    rows: List[Dict[str, Any]] = []
+
+    def walk(name: str, mult: float, stack: str):
+        for line in comps.get(name, ()):
+            col = _line_collective(line)
+            if col is not None:
+                kind, nbytes, wire = col
+                m = _META_RE.search(line)
+                rows.append({
+                    "kind": kind, "bytes": nbytes, "trips": mult,
+                    "wire_total": wire * mult,
+                    "op_name": (m.group(1) if m else "?")[:120],
+                })
+                continue
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                walk(wm.group(1), mult * trip, stack + f">{trip}x")
+
+    if entry:
+        walk(entry, 1.0, "")
+    rows.sort(key=lambda r: -r["wire_total"])
+    return rows[:k]
+
+
+def summarize(rows: List[Dict[str, Any]]) -> str:
+    lines = [f"{'wire_GB':>9} {'kind':>18} {'trips':>6} {'payload_MB':>11}"
+             f"  op_name"]
+    for r in rows:
+        lines.append(
+            f"{r['wire_total'] / 1e9:9.2f} {r['kind']:>18} "
+            f"{r['trips']:6.0f} {r['bytes'] / 1e6:11.1f}  {r['op_name']}")
+    return "\n".join(lines)

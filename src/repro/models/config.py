@@ -1,0 +1,173 @@
+"""Model configuration for the assigned LM-family architectures.
+
+One :class:`ModelConfig` describes any of the ten assigned architectures:
+dense decoders, GQA, local/global attention mixes, MoE (top-1 / top-8,
+optional shared expert), encoder-decoder (whisper), modality-frontend
+stubs (audio/vision), RG-LRU hybrids (recurrentgemma) and xLSTM stacks.
+
+The per-layer structure is a tuple of :class:`LayerSpec`; consecutive
+identical specs are grouped into **runs** and executed with a single
+``jax.lax.scan`` over stacked parameters (MaxText-style), which keeps the
+HLO size — and hence XLA compile time and SPMD-partitioning time — constant
+in depth. This matters doubly here: the dry-run compiles 10 architectures x
+4 shapes x 2 meshes on one CPU core.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# Mixer kinds.
+ATTN_GLOBAL = "attn_global"     # causal full attention
+ATTN_LOCAL = "attn_local"       # causal sliding-window attention
+ATTN_BIDIR = "attn_bidir"       # encoder (non-causal) attention
+RGLRU = "rglru"                 # RecurrentGemma RG-LRU block
+MLSTM = "mlstm"                 # xLSTM matrix-memory block
+SLSTM = "slstm"                 # xLSTM scalar-memory block
+
+# FFN kinds.
+FFN_DENSE = "dense"
+FFN_MOE = "moe"
+FFN_NONE = "none"               # xLSTM blocks carry their own projections
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str
+    ffn: str
+    cross_attn: bool = False    # decoder layer attending to encoder output
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    n_layers: int
+    n_frames: int               # stub-frontend sequence length
+    d_input: int                # stub-frontend feature dim (pre-projection)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | audio | vlm | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int             # raw (paper) vocab
+    layers: Tuple[LayerSpec, ...]
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    vocab_pad_to: int = 128     # embedding padded for TP divisibility
+    window: int = 0             # sliding window for ATTN_LOCAL
+    pos_emb: str = "rope"       # "rope" | "sinusoidal" (whisper)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    act: str = "silu"
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    expert_ff: int = 0
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_impl: str = "gather"    # "gather" (baseline) | "shardmap" (EP a2a)
+    seq_shard: bool = False     # 2D fully-sharded activations (§Perf)
+    vp_loss: bool = False       # vocab-parallel CE (no logit gathers)
+    serve_rules: bool = False   # no-FSDP weight layout for decode (§Perf)
+    weight_quant: str = "none"  # "int8": SNE-style low-bit decode weights
+    sd_decode_frac: float = 0.0  # >0: sigma-delta event-gated decode (§Perf)
+    # --- encoder-decoder / frontends ---
+    encoder: Optional[EncoderConfig] = None
+    frontend: Optional[str] = None      # "audio" | "vision" | None
+    n_patches: int = 0                  # vision stub: patches prepended
+    # --- recurrent blocks ---
+    conv1d_width: int = 4
+    lru_width: int = 0          # 0 -> d_model
+    # --- numerics / execution ---
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # "full": recompute everything (baseline); "boundaries": save the
+    # post-collective layer outputs so the backward pass does not replay
+    # forward collectives (§Perf hillclimb; costs ~2 x (B,S,d)/layer HBM)
+    remat_policy: str = "full"
+    attn_chunk_q: int = 1024
+    attn_chunk_kv: int = 1024
+    causal_fold: bool = False   # folded causal schedule (see attention.py)
+    # --- training memory knobs ---
+    grad_accum: int = 1         # microbatch accumulation steps
+    grad_dtype: str = "float32"
+    moment_dtype: str = "float32"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        p = self.vocab_pad_to
+        return ((self.vocab_size + p - 1) // p) * p
+
+    @property
+    def jdtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    @property
+    def lru_dim(self) -> int:
+        return self.lru_width or self.d_model
+
+    def runs(self) -> Tuple[Tuple[LayerSpec, int], ...]:
+        """Group consecutive identical LayerSpecs into (spec, count) runs."""
+        out = []
+        for spec in self.layers:
+            if out and out[-1][0] == spec:
+                out[-1] = (spec, out[-1][1] + 1)
+            else:
+                out.append((spec, 1))
+        return tuple(out)
+
+    def scan_groups(self) -> Tuple[Tuple[Tuple[LayerSpec, ...], int], ...]:
+        """Group the layer stack into (cycle, repeat) scan groups.
+
+        Patterned stacks (llama4's dense/MoE alternation, gemma3's 5:1
+        local:global, xlstm's 7:1 m:s) repeat a short cycle; scanning over
+        whole cycles keeps the HLO at O(cycle) regardless of depth — the
+        difference between compiling 2 layers x scan 24 and unrolling 48.
+        """
+        layers = self.layers
+        n = len(layers)
+        for p in range(1, n + 1):
+            k = n // p
+            if k > 1 and tuple(layers[:p] * k) == tuple(layers[:p * k]):
+                groups = [(tuple(layers[:p]), k)]
+                rem = tuple(layers[p * k:])
+                if rem:
+                    groups.append((rem, 1))
+                return tuple(groups)
+        return ((tuple(layers), 1),)
+
+    def validate(self) -> None:
+        assert len(self.layers) == self.n_layers, (
+            f"{self.name}: {len(self.layers)} layer specs != {self.n_layers}")
+        assert self.n_heads % self.n_kv_heads == 0
+        if any(l.ffn == FFN_MOE for l in self.layers):
+            assert self.n_experts > 0 and self.top_k > 0 and self.expert_ff > 0
+        if any(l.mixer == ATTN_LOCAL for l in self.layers):
+            assert self.window > 0
+        if any(l.cross_attn for l in self.layers):
+            assert self.encoder is not None
+
+
+def uniform_layers(n: int, mixer: str, ffn: str = FFN_DENSE,
+                   cross: bool = False) -> Tuple[LayerSpec, ...]:
+    return tuple(LayerSpec(mixer, ffn, cross) for _ in range(n))
+
+
+def pattern_layers(n: int, cycle: Tuple[LayerSpec, ...]) -> Tuple[LayerSpec, ...]:
+    """Repeat ``cycle`` until ``n`` layers (truncating the last cycle)."""
+    out = []
+    while len(out) < n:
+        out.extend(cycle)
+    return tuple(out[:n])

@@ -1,0 +1,51 @@
+"""Modality frontend STUBS (per assignment: backbone-only for audio/vlm).
+
+The assigned ``[audio]`` / ``[vlm]`` architectures specify the transformer
+backbone only; ``input_specs()`` provides *precomputed* frame / patch
+embeddings. The stub here is the single linear projection that adapts the
+precomputed features to ``d_model`` (the seam where whisper's conv frontend
+or InternViT would plug in), so the backbone graph is complete and the
+dry-run exercises the real embedding traffic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import DeclTree, ParamDecl, ParamTree
+
+
+def frontend_decls(cfg: ModelConfig) -> Optional[DeclTree]:
+    """Projection from precomputed feature dim -> d_model."""
+    if cfg.frontend == "audio":
+        assert cfg.encoder is not None
+        return {
+            "proj": ParamDecl((cfg.encoder.d_input, cfg.d_model),
+                              (None, "p_embed"), dtype=cfg.jdtype),
+        }
+    if cfg.frontend == "vision":
+        # patch embeddings arrive at d_model-sized features from the stubbed
+        # ViT; the projection is the cross-modal connector (MLP in InternVL).
+        return {
+            "proj": ParamDecl((cfg.d_model, cfg.d_model),
+                              ("p_embed", None), dtype=cfg.jdtype),
+        }
+    return None
+
+
+def apply_frontend(p: ParamTree, cfg: ModelConfig,
+                   feats: jnp.ndarray) -> jnp.ndarray:
+    """feats: (B, n_positions, d_input) precomputed embeddings -> (B, n, d)."""
+    return jnp.einsum("bnf,fd->bnd", feats, p["proj"].astype(feats.dtype))
+
+
+def frontend_feature_shape(cfg: ModelConfig, batch: int):
+    """ShapeDtypeStruct-compatible shape of the stub inputs."""
+    if cfg.frontend == "audio":
+        assert cfg.encoder is not None
+        return (batch, cfg.encoder.n_frames, cfg.encoder.d_input)
+    if cfg.frontend == "vision":
+        return (batch, cfg.n_patches, cfg.d_model)
+    return None

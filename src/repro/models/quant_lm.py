@@ -1,0 +1,90 @@
+"""Low-bit weight storage for LM decode — SNE §III-D4 transferred.
+
+The paper stores synaptic weights in 4 bits and dequantises nothing (its
+datapath is integer). On TPU decode the same insight attacks the dominant
+roofline term: decode is weight-read-bound, so storing weights in int8
+(per-output-channel scales) halves HBM traffic per token; the dequant is a
+negligible VPU multiply fused into the consuming GEMM. int4 (two codes per
+int8 byte, as core/quant.pack_int4 does for the eCNN) would halve it again
+— int8 is used here because XLA CPU lacks int4 compute for the validation
+path; the storage format supports both.
+
+Mechanics: a quantised weight leaf ``W (.., n)`` becomes
+``{"__q": int8 codes, "__s": f32 (n,) scale}``; :func:`dequant_params`
+restores the original tree structure right at the top of the step function
+so model code is untouched, and the dry-run's parameter specs (and hence
+the analytic memory term) see the int8 storage truthfully.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDecl
+
+Q_KEY, S_KEY = "__q", "__s"
+
+
+def _quantizable(d: ParamDecl) -> bool:
+    return (len(d.shape) >= 2 and
+            d.dtype in (jnp.bfloat16, jnp.float32, jnp.float16))
+
+
+def quantize_decls(decls: Any) -> Any:
+    """ParamDecl tree -> tree with int8 storage for every weight matrix."""
+    def one(d: ParamDecl):
+        if not _quantizable(d):
+            return d
+        return {
+            Q_KEY: dataclasses.replace(d, dtype=jnp.int8),
+            S_KEY: ParamDecl((d.shape[-1],), (d.axes[-1],),
+                             init="ones", dtype=jnp.float32),
+        }
+    return jax.tree.map(one, decls,
+                        is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def _is_qleaf(x) -> bool:
+    return isinstance(x, dict) and set(x) == {Q_KEY, S_KEY}
+
+
+def dequant_params(tree: Any, dtype=jnp.bfloat16,
+                   decls: Any = None) -> Any:
+    """Rebuild the float param tree (dequant fuses into consumers).
+
+    ``decls`` (the matching ParamDecl tree) re-pins each dequantised weight
+    to its storage sharding — without it the partitioner loses the layout
+    at the dequant multiply and may all-gather full weights (observed on
+    the long_500k cell: a 40x collective regression; EXPERIMENTS.md §Perf
+    cell C, refuted iteration C1a).
+    """
+    from repro.distributed.sharding import logical
+
+    def walk(node, decl):
+        if _is_qleaf(node):
+            deq = node[Q_KEY].astype(dtype) * node[S_KEY].astype(dtype)
+            if decl is not None:
+                deq = logical(deq, *decl.axes)
+            return deq
+        if isinstance(node, dict):
+            return {k: walk(v, decl[k] if decl is not None else None)
+                    for k, v in node.items()}
+        return node
+    return walk(tree, decls)
+
+
+def quantize_params(params: Any, dtype=jnp.bfloat16) -> Any:
+    """Value-level quantisation (tests / real serving deployment)."""
+    def one(w):
+        if w.ndim >= 2 and jnp.issubdtype(w.dtype, jnp.floating):
+            amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=tuple(
+                range(w.ndim - 1)))
+            scale = jnp.maximum(amax, 1e-8) / 127.0
+            q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale),
+                         -127, 127).astype(jnp.int8)
+            return {Q_KEY: q, S_KEY: scale}
+        return w
+    return jax.tree.map(one, params)

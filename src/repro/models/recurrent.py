@@ -1,0 +1,122 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The SNE tie-in (DESIGN.md §Arch-applicability): the RG-LRU recurrence
+``h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t)`` is a gated leaky
+integrator — the same dynamical family as the paper's LIF membrane
+``V_t = V_{t-1} - L + sum W S``. The lazy-TLU idea (skip state updates in
+idle periods) reappears here as sigma-delta gated decode (core/lm_events).
+
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence
+(O(S log S) work, parallel depth log S — the TPU-native way to run a linear
+recurrence); decode is the O(1) single-step update.
+
+Gates are per-channel (diagonal) as in Griffin's block-diagonal small-block
+limit; the surrounding linear projections carry the model capacity.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DeclTree, ParamDecl, ParamTree
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def rglru_decls(d_model: int, d_lru: int, conv_w: int) -> DeclTree:
+    return {
+        "w_in": ParamDecl((d_model, d_lru), ("p_embed", "p_mlp")),
+        "w_gate": ParamDecl((d_model, d_lru), ("p_embed", "p_mlp")),
+        "conv_w": ParamDecl((conv_w, d_lru), (None, "p_mlp"),
+                            scale=conv_w ** -0.5),
+        "conv_b": ParamDecl((d_lru,), ("p_mlp",), init="zeros"),
+        "a_w": ParamDecl((d_lru,), ("p_mlp",), scale=1.0),
+        "a_b": ParamDecl((d_lru,), ("p_mlp",), init="zeros"),
+        "x_w": ParamDecl((d_lru,), ("p_mlp",), scale=1.0),
+        "x_b": ParamDecl((d_lru,), ("p_mlp",), init="zeros"),
+        "lam": ParamDecl((d_lru,), ("p_mlp",), init="ones"),
+        "w_out": ParamDecl((d_lru, d_model), ("p_mlp", "p_embed")),
+    }
+
+
+def _gates(p: ParamTree, xc: jnp.ndarray):
+    """Per-channel recurrence/input gates on the post-conv signal (f32)."""
+    x32 = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 * p["a_w"] + p["a_b"])
+    i = jax.nn.sigmoid(x32 * p["x_w"] + p["x_b"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # log a_t  (<= 0)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably as sqrt(-expm1(2 log a))
+    b_scale = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = b_scale * (i * x32)
+    return a, b
+
+
+def conv1d_causal(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over (B, S, D) with width-W taps (shift-add)."""
+    W = w.shape[0]
+    out = x * w[W - 1]
+    for k in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, :-k, :]
+        out = out + shifted * w[W - 1 - k]
+    return out + b
+
+
+def rglru_scan(p: ParamTree, xc: jnp.ndarray,
+               h0: jnp.ndarray | None = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the recurrence over (B, S, D). Returns (h_seq, h_last)."""
+    a, b = _gates(p, xc)
+    if h0 is not None:
+        # fold the carried state into the first step's additive term
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del a_s
+    return h.astype(xc.dtype), h[:, -1, :]
+
+
+def rglru_step(p: ParamTree, xc_t: jnp.ndarray,
+               h: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step. xc_t: (B, D) post-conv input; h: (B, D) state."""
+    a, b = _gates(p, xc_t[:, None, :])
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new.astype(xc_t.dtype), h_new
+
+
+def rglru_block(p: ParamTree, x: jnp.ndarray, act) -> Tuple[jnp.ndarray, Dict]:
+    """Full block, training/prefill mode. x: (B, S, d_model)."""
+    dt = x.dtype
+    x1 = jnp.einsum("bsd,dl->bsl", x, p["w_in"].astype(dt))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dl->bsl", x, p["w_gate"].astype(dt)))
+    xc = conv1d_causal(x1, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    h, h_last = rglru_scan(p, xc)
+    out = jnp.einsum("bsl,ld->bsd", h * gate, p["w_out"].astype(dt))
+    state = {"h": h_last.astype(jnp.float32),
+             "conv": x1[:, -(p["conv_w"].shape[0] - 1):, :]}
+    return out, state
+
+
+def rglru_block_step(p: ParamTree, x_t: jnp.ndarray, state: Dict,
+                     act) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step. x_t: (B, 1, d_model); state: {h, conv}."""
+    dt = x_t.dtype
+    x1 = jnp.einsum("bsd,dl->bsl", x_t, p["w_in"].astype(dt))[:, 0]   # (B, L)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dl->bsl", x_t, p["w_gate"].astype(dt)))[:, 0]
+    # causal depthwise conv over the ring of the last W-1 inputs
+    w = p["conv_w"].astype(dt)
+    W = w.shape[0]
+    hist = state["conv"]                                  # (B, W-1, L)
+    window = jnp.concatenate([hist, x1[:, None, :]], axis=1)  # (B, W, L)
+    xc = jnp.einsum("bwl,wl->bl", window, w) + p["conv_b"].astype(dt)
+    h_out, h_new = rglru_step(p, xc, state["h"])
+    out = jnp.einsum("bl,ld->bd", h_out * gate, p["w_out"].astype(dt))
+    new_state = {"h": h_new, "conv": window[:, 1:, :]}
+    return out[:, None, :], new_state

@@ -1,0 +1,51 @@
+"""Scan wrapper with a global unroll switch (FLOPs-accounting mode).
+
+XLA's HLO cost analysis counts a while-loop body ONCE, not times the trip
+count — so the scan-stacked layer groups (and chunked attention / loss
+scans) would hide ~L x the FLOPs from ``cost_analysis()``. The dry-run
+therefore lowers each cell a second time with every ``xscan`` fully
+unrolled and reads exact FLOPs from ``lowered.cost_analysis()`` (no backend
+compile needed); the scanned version remains the one that is compiled, and
+the one whose memory/collectives are reported.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_STATE = {"unroll": False}
+
+
+def set_unroll(v: bool) -> None:
+    _STATE["unroll"] = bool(v)
+
+
+def unrolling() -> bool:
+    return _STATE["unroll"]
+
+
+@contextlib.contextmanager
+def unrolled(v: bool = True):
+    prev = _STATE["unroll"]
+    _STATE["unroll"] = v
+    try:
+        yield
+    finally:
+        _STATE["unroll"] = prev
+
+
+def xscan(f, init, xs, length=None):
+    """jax.lax.scan honoring the global unroll-for-analysis switch."""
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if _STATE["unroll"] else 1)
+
+
+def xscan_seq(f, init, xs, length=None):
+    """Scan over the *sequence* dimension — exempt from analysis unrolling.
+
+    A 32k-step recurrence (xLSTM prefill) cannot be unrolled into the IR;
+    its FLOPs are added analytically by the dry-run instead
+    (``repro.launch.dryrun._recurrence_flops``).
+    """
+    return jax.lax.scan(f, init, xs, length=length)

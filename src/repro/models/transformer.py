@@ -1,0 +1,724 @@
+"""Transformer assembly: decoder / encoder-decoder over all assigned archs.
+
+Structure (MaxText-style): consecutive identical :class:`LayerSpec`s form
+**runs**; each run's parameters are stacked with a leading layer dimension
+and executed with one ``jax.lax.scan`` — HLO size (and SPMD partitioning
+time) is constant in depth, which is what makes compiling 10 archs x 4
+shapes x 2 meshes tractable on one CPU.
+
+Three entry points, matching the assigned input shapes:
+
+  * :func:`lm_loss`      — training forward + chunked CE (train_4k)
+  * :func:`prefill`      — full-sequence forward that also fills the decode
+                           caches and returns last-token logits (prefill_32k)
+  * :func:`decode_step`  — one-token step against the caches
+                           (decode_32k / long_500k)
+
+Every parameter and cache tensor carries *logical* sharding axes
+(``p_embed``, ``p_heads``, ``kv_seq``, ...) resolved against the mesh by
+:mod:`repro.distributed.sharding` — the same declaration drives both init
+and the dry-run's in_shardings, so they cannot drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.distributed.sharding import current_mesh, logical
+from repro.models import config as C
+from repro.models.attention import (cache_insert, decode_attention,
+                                    flash_attention)
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.frontend import apply_frontend, frontend_decls
+from repro.models.layers import (DeclTree, ParamDecl, ParamTree, ffn_apply,
+                                 ffn_decls, init_tree, rms_norm, rope,
+                                 sinusoidal_positions, stack_tree)
+from repro.models.moe import (MoeStats, moe_apply, moe_apply_shardmap,
+                              moe_decls)
+from repro.models.recurrent import (rglru_block, rglru_block_step,
+                                    rglru_decls)
+from repro.models.scan_util import xscan
+from repro.models.xlstm import (mlstm_block, mlstm_block_step, mlstm_decls,
+                                slstm_block, slstm_block_step, slstm_decls)
+
+# ---------------------------------------------------------------------------
+# Parameter declarations
+# ---------------------------------------------------------------------------
+
+
+def _norm_decl(d: int, dtype) -> ParamDecl:
+    return ParamDecl((d,), ("p_embed",), init="zeros", dtype=dtype)
+
+
+def attn_decls(cfg: ModelConfig) -> DeclTree:
+    d, H, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.jdtype
+    return {
+        "wq": ParamDecl((d, H * hd), ("p_embed", "p_heads"), dtype=dt),
+        "wk": ParamDecl((d, Hk * hd), ("p_embed", "p_kv_heads"), dtype=dt),
+        "wv": ParamDecl((d, Hk * hd), ("p_embed", "p_kv_heads"), dtype=dt),
+        "wo": ParamDecl((H * hd, d), ("p_heads", "p_embed"), dtype=dt),
+    }
+
+
+def layer_decls(cfg: ModelConfig, spec: LayerSpec) -> DeclTree:
+    d = cfg.d_model
+    dt = cfg.jdtype
+    out: DeclTree = {"norm": _norm_decl(d, dt)}
+    if spec.mixer in (C.ATTN_GLOBAL, C.ATTN_LOCAL, C.ATTN_BIDIR):
+        out["attn"] = attn_decls(cfg)
+    elif spec.mixer == C.RGLRU:
+        out["rglru"] = rglru_decls(d, cfg.lru_dim, cfg.conv1d_width)
+    elif spec.mixer == C.MLSTM:
+        out["mlstm"] = mlstm_decls(d, cfg.n_heads)
+    elif spec.mixer == C.SLSTM:
+        out["slstm"] = slstm_decls(d, cfg.n_heads)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attn:
+        out["cross_norm"] = _norm_decl(d, dt)
+        out["cross"] = attn_decls(cfg)
+    if spec.ffn == C.FFN_DENSE:
+        out["ffn_norm"] = _norm_decl(d, dt)
+        out["ffn"] = ffn_decls(d, cfg.d_ff)
+    elif spec.ffn == C.FFN_MOE:
+        out["ffn_norm"] = _norm_decl(d, dt)
+        out["moe"] = moe_decls(d, cfg.n_experts, cfg.expert_ff,
+                               cfg.shared_expert, cfg.d_ff)
+    # propagate model dtype into every leaf
+    return jax.tree.map(
+        lambda p: dataclasses.replace(p, dtype=dt),
+        out, is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def model_decls(cfg: ModelConfig) -> DeclTree:
+    dt = cfg.jdtype
+    out: DeclTree = {
+        "embed": ParamDecl((cfg.vocab_padded, cfg.d_model),
+                           ("p_vocab", "p_embed"), scale=0.02, dtype=dt),
+        "final_norm": _norm_decl(cfg.d_model, dt),
+        "groups": {
+            f"g{i}": stack_tree(
+                {f"l{j}": layer_decls(cfg, s) for j, s in enumerate(specs)},
+                count)
+            for i, (specs, count) in enumerate(cfg.scan_groups())},
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamDecl((cfg.d_model, cfg.vocab_padded),
+                                   ("p_embed", "p_vocab"), dtype=dt)
+    if cfg.encoder is not None:
+        enc_spec = LayerSpec(C.ATTN_BIDIR, C.FFN_DENSE)
+        out["encoder"] = {
+            "groups": {"g0": stack_tree({"l0": layer_decls(cfg, enc_spec)},
+                                        cfg.encoder.n_layers)},
+            "final_norm": _norm_decl(cfg.d_model, dt),
+        }
+    fe = frontend_decls(cfg)
+    if fe is not None:
+        out["frontend"] = fe
+    return out
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> ParamTree:
+    return init_tree(key, model_decls(cfg))
+
+
+def decl_axes(decls: DeclTree):
+    """Tree of logical-axis tuples, aligned with the param tree."""
+    return jax.tree.map(lambda d: d.axes, decls,
+                        is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    from repro.models.layers import count_params
+    return count_params(model_decls(cfg))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top_k of n_experts)."""
+    total = param_count(cfg)
+    if cfg.n_experts == 0:
+        return total
+    # subtract the inactive expert share
+    expert = 3 * cfg.d_model * cfg.expert_ff
+    n_moe = sum(1 for l in cfg.layers if l.ffn == C.FFN_MOE)
+    inactive = n_moe * (cfg.n_experts - cfg.top_k) * expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Mixer / FFN application (full-sequence = train & prefill)
+# ---------------------------------------------------------------------------
+
+
+def gathered(w: jnp.ndarray, *axes: Optional[str]) -> jnp.ndarray:
+    """ZeRO-3 use-time gather discipline for FSDP-sharded weights.
+
+    Constraining the weight to its un-FSDP form (p_embed axis dropped)
+    right before the GEMM makes XLA emit one small weight all-gather
+    instead of its preferred partial-GEMM + giant activation all-reduce
+    (the dominant term in the llama4 train profile — §Perf iteration 3).
+    """
+    return logical(w, *axes)
+
+
+def _attention(p: ParamTree, cfg: ModelConfig, spec_mixer: str,
+               x: jnp.ndarray, positions: jnp.ndarray,
+               kv_src: Optional[jnp.ndarray] = None,
+               kv_positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence attention. kv_src != None -> cross attention."""
+    B, S, d = x.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = x.dtype
+    src = x if kv_src is None else kv_src
+    Skv = src.shape[1]
+    wq = gathered(p["wq"], "use_embed", "use_heads")
+    wk = gathered(p["wk"], "use_embed", "use_kv")
+    wv = gathered(p["wv"], "use_embed", "use_kv")
+    q = jnp.einsum("bsd,dh->bsh", x, wq.astype(dt)).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", src, wk.astype(dt)).reshape(B, Skv, Hk, hd)
+    v = jnp.einsum("bsd,dh->bsh", src, wv.astype(dt)).reshape(B, Skv, Hk, hd)
+    q = logical(q, "batch", "seq", "act_heads", None)
+    if cfg.seq_shard:
+        # 2D layout: q stays sequence-sharded; kv is gathered once per
+        # layer (GQA keeps it small) so the blockwise scan runs without
+        # per-block permutes/gathers — the bwd d(kv) costs one kv-sized
+        # all-reduce (§Perf iteration 5).
+        k = logical(k, "batch", None, None, None)
+        v = logical(v, "batch", None, None, None)
+    else:
+        k = logical(k, "batch", "seq", "act_kv_heads", None)
+        v = logical(v, "batch", "seq", "act_kv_heads", None)
+    if cfg.pos_emb == "rope" and kv_src is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions if kv_positions is not None else positions,
+                 cfg.rope_theta)
+    causal = spec_mixer in (C.ATTN_GLOBAL, C.ATTN_LOCAL) and kv_src is None
+    window = cfg.window if spec_mixer == C.ATTN_LOCAL else 0
+    o = flash_attention(
+        q, k, v, causal=causal, window=window,
+        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+        fold=cfg.causal_fold)
+    o = logical(o, "batch", "seq", "act_heads", None)
+    wo = gathered(p["wo"], "use_heads", "use_embed")
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * hd),
+                     wo.astype(dt))
+    return out, (k, v)
+
+
+def _zero_stats() -> MoeStats:
+    return MoeStats(aux_loss=jnp.zeros((), jnp.float32),
+                    dropped_frac=jnp.zeros((), jnp.float32))
+
+
+def _moe(p: ParamTree, cfg: ModelConfig, h: jnp.ndarray):
+    """MoE impl dispatch: baseline gather vs shard_map EP (hillclimb)."""
+    mesh = current_mesh()
+    if cfg.moe_impl == "shardmap" and mesh is not None:
+        return moe_apply_shardmap(
+            p, h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, act=cfg.act,
+            shared=cfg.shared_expert, mesh=mesh, seq_shard=cfg.seq_shard)
+    return moe_apply(p, h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                     capacity_factor=cfg.capacity_factor, act=cfg.act,
+                     shared=cfg.shared_expert)
+
+
+def _layer_forward(p: ParamTree, cfg: ModelConfig, spec: LayerSpec,
+                   x: jnp.ndarray, positions: jnp.ndarray,
+                   enc_out: Optional[jnp.ndarray] = None,
+                   want_cache: bool = False):
+    """One layer, full sequence. Returns (x, stats, cache_contrib)."""
+    stats = _zero_stats()
+    cache: Dict[str, Any] = {}
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    if spec.mixer in (C.ATTN_GLOBAL, C.ATTN_LOCAL, C.ATTN_BIDIR):
+        o, (k, v) = _attention(p["attn"], cfg, spec.mixer, h, positions)
+        if want_cache:
+            cache["k"], cache["v"] = k, v
+        x = x + o
+    elif spec.mixer == C.RGLRU:
+        o, st = rglru_block(p["rglru"], h, cfg.act)
+        if want_cache:
+            cache["rglru"] = st
+        x = x + o
+    elif spec.mixer == C.MLSTM:
+        o, st = mlstm_block(p["mlstm"], h, cfg.n_heads)
+        if want_cache:
+            cache["mlstm"] = st
+        x = x + o
+    elif spec.mixer == C.SLSTM:
+        o, st = slstm_block(p["slstm"], h, cfg.n_heads)
+        if want_cache:
+            cache["slstm"] = st
+        x = x + o
+    x = checkpoint_name(x, "mixer_out")
+    if spec.cross_attn:
+        assert enc_out is not None
+        hc = rms_norm(x, p["cross_norm"], cfg.norm_eps)
+        o, (ck, cv) = _attention(p["cross"], cfg, C.ATTN_BIDIR, hc,
+                                 positions, kv_src=enc_out)
+        if want_cache:
+            cache["cross_k"], cache["cross_v"] = ck, cv
+        x = x + o
+    if spec.ffn == C.FFN_DENSE:
+        h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        x = x + ffn_apply(p["ffn"], h, cfg.act)
+    elif spec.ffn == C.FFN_MOE:
+        h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        o, stats = _moe(p["moe"], cfg, h)
+        x = x + o
+    x = logical(x, "batch", "seq", "act_embed")
+    x = checkpoint_name(x, "layer_out")
+    return x, stats, cache
+
+
+def _group_forward(params_group: ParamTree, cfg: ModelConfig,
+                   specs: Tuple[LayerSpec, ...],
+                   x: jnp.ndarray, positions: jnp.ndarray,
+                   enc_out: Optional[jnp.ndarray] = None,
+                   want_cache: bool = False):
+    """Scan one group's stacked layer-cycles.
+
+    Returns (x, summed stats, group cache {l<j>: stacked}).
+    """
+
+    def body(xc, p_cycle):
+        sts, caches = [], {}
+        for j, spec in enumerate(specs):
+            xc, st, cache = _layer_forward(p_cycle[f"l{j}"], cfg, spec, xc,
+                                           positions, enc_out, want_cache)
+            sts.append(st)
+            caches[f"l{j}"] = cache
+        st = MoeStats(aux_loss=sum(s.aux_loss for s in sts),
+                      dropped_frac=sum(s.dropped_frac for s in sts) / len(sts))
+        return xc, (st, caches)
+
+    if cfg.remat:
+        if cfg.remat_policy == "boundaries":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.save_only_these_names(
+                    "mixer_out", "layer_out"))
+        else:
+            body = jax.checkpoint(body)
+    x, (stats, cache) = xscan(body, x, params_group)
+    total = MoeStats(aux_loss=jnp.sum(stats.aux_loss),
+                     dropped_frac=jnp.mean(stats.dropped_frac))
+    return x, total, cache
+
+
+def _embed_tokens(params: ParamTree, cfg: ModelConfig,
+                  tokens: jnp.ndarray) -> jnp.ndarray:
+    table = gathered(params["embed"], "use_vocab", "use_embed")
+    x = jnp.take(table, tokens, axis=0)
+    return logical(x, "batch", "seq", "act_embed")
+
+
+def _encoder_forward(params: ParamTree, cfg: ModelConfig,
+                     frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper-style encoder over stub frame embeddings (B, F, d_in)."""
+    enc = params["encoder"]
+    x = apply_frontend(params["frontend"], cfg, frames)
+    Sf = x.shape[1]
+    x = x + sinusoidal_positions(Sf, cfg.d_model).astype(x.dtype)[None]
+    pos = jnp.arange(Sf)
+    spec = LayerSpec(C.ATTN_BIDIR, C.FFN_DENSE)
+    x, _, _ = _group_forward(enc["groups"]["g0"], cfg, (spec,), x, pos)
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def forward(params: ParamTree, cfg: ModelConfig, tokens: jnp.ndarray,
+            frames: Optional[jnp.ndarray] = None,
+            patches: Optional[jnp.ndarray] = None,
+            want_cache: bool = False):
+    """Full-sequence forward. Returns (hidden (B,S,d), stats, caches).
+
+    ``frames`` — audio stub features (enc-dec cross-attention source).
+    ``patches`` — vision stub embeddings; overwrite the first n_patches
+    token positions (VLM prefix).
+    """
+    B, S = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+    if cfg.frontend == "vision":
+        assert patches is not None
+        pe = apply_frontend(params["frontend"], cfg, patches).astype(x.dtype)
+        npat = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, npat:, :]], axis=1)
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+    enc_out = None
+    if cfg.encoder is not None:
+        assert frames is not None
+        enc_out = _encoder_forward(params, cfg, frames)
+    positions = jnp.arange(S)
+    stats_all = []
+    caches = {}
+    for i, (specs, n) in enumerate(cfg.scan_groups()):
+        x, st, cache = _group_forward(params["groups"][f"g{i}"], cfg, specs,
+                                      x, positions, enc_out, want_cache)
+        stats_all.append(st)
+        caches[f"g{i}"] = cache
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    stats = MoeStats(
+        aux_loss=sum(s.aux_loss for s in stats_all),
+        dropped_frac=sum(s.dropped_frac for s in stats_all) / len(stats_all))
+    return x, stats, caches
+
+
+def _unembed(params: ParamTree, cfg: ModelConfig,
+             x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        w = gathered(params["embed"], "use_vocab", "use_embed")
+        logits = jnp.einsum("bsd,vd->bsv", x, w.astype(dt))
+    else:
+        w = gathered(params["lm_head"], "use_embed", "use_vocab")
+        logits = jnp.einsum("bsd,dv->bsv", x, w.astype(dt))
+    return logical(logits, "batch", "seq", "act_vocab")
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked over sequence so the (B, S, V) logits never materialise)
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params: ParamTree, cfg: ModelConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray, frames: Optional[jnp.ndarray] = None,
+            patches: Optional[jnp.ndarray] = None,
+            loss_chunk: int = 512):
+    """Causal-LM loss. Returns (loss, metrics dict).
+
+    The CE is computed per sequence chunk inside a rematerialised scan: the
+    (B, C, V) logits chunk exists only transiently (fwd) / is recomputed
+    (bwd).  For gemma3's 262k vocab this cuts peak activation memory by
+    ~S/C x vs a monolithic (B, S, V) softmax.
+    """
+    x, stats, _ = forward(params, cfg, tokens, frames, patches)
+    B, S, d = x.shape
+    CS = min(loss_chunk, S)
+    assert S % CS == 0
+    n_chunks = S // CS
+    xc = x.reshape(B, n_chunks, CS, d).swapaxes(0, 1)        # (n, B, CS, d)
+    lc = labels.reshape(B, n_chunks, CS).swapaxes(0, 1)      # (n, B, CS)
+
+    vocab = cfg.vocab_size
+
+    def _vp_logits(xb):
+        """Logits with the vocab axis KEPT model-sharded (p_vocab)."""
+        dt = xb.dtype
+        if cfg.tie_embeddings:
+            w = logical(params["embed"], "p_vocab", "use_embed")
+            lg = jnp.einsum("bsd,vd->bsv", xb, w.astype(dt))
+        else:
+            w = logical(params["lm_head"], "use_embed", "p_vocab")
+            lg = jnp.einsum("bsd,dv->bsv", xb, w.astype(dt))
+        return logical(lg, "batch", None, "p_vocab")
+
+    def chunk_loss(carry, xl):
+        xb, lb = xl
+        if cfg.vp_loss:
+            # Megatron-style vocab-parallel CE: the (B, C, V) logits stay
+            # vocab-sharded; logsumexp and the one-hot target extraction
+            # reduce over the sharded axis with (B, C)-sized collectives
+            # instead of gathering the logits (§Perf iteration 5).
+            xb = logical(xb, "batch", None, None)
+            logits = _vp_logits(xb).astype(jnp.float32)
+            iota = jnp.arange(cfg.vocab_padded)
+            logits = jnp.where(iota < vocab, logits, -1e30)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            tgt = jnp.sum(jnp.where(iota[None, None, :] == lb[..., None],
+                                    logits, 0.0), axis=-1)
+            nll = lse - tgt
+        else:
+            logits = _unembed(params, cfg, xb).astype(jnp.float32)
+            # mask padded vocab tail
+            if cfg.vocab_padded > vocab:
+                pad_mask = jnp.arange(cfg.vocab_padded) < vocab
+                logits = jnp.where(pad_mask, logits, -1e30)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, lb[..., None], axis=-1)[..., 0]
+        ok = (lb >= 0).astype(jnp.float32)
+        return (carry[0] + jnp.sum(nll * ok), carry[1] + jnp.sum(ok)), None
+
+    body = jax.checkpoint(chunk_loss)
+    (total, denom), _ = xscan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc))
+    loss = total / jnp.maximum(denom, 1.0)
+    if cfg.n_experts:
+        loss = loss + cfg.router_aux_coef * stats.aux_loss
+    metrics = {"ce": total / jnp.maximum(denom, 1.0),
+               "aux_loss": stats.aux_loss,
+               "moe_dropped": stats.dropped_frac,
+               "tokens": denom}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode: cache declaration, prefill, single step
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(cfg: ModelConfig, spec: LayerSpec, S: int) -> int:
+    if spec.mixer == C.ATTN_LOCAL:
+        return min(S, cfg.window)
+    return S
+
+
+def cache_decls(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree + logical axes for the decode caches."""
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.jdtype
+    out: Dict[str, Any] = {}
+    for i, (specs, n) in enumerate(cfg.scan_groups()):
+        cg: Dict[str, Any] = {}
+        for j, spec in enumerate(specs):
+            c: Dict[str, Any] = {}
+            cg[f"l{j}"] = c
+            if spec.mixer in (C.ATTN_GLOBAL, C.ATTN_LOCAL, C.ATTN_BIDIR):
+                L = _cache_len(cfg, spec, S)
+                seq_ax = ("kv_seq" if spec.mixer != C.ATTN_LOCAL
+                          else "kv_window")
+                kv = ParamDecl((n, B, L, Hk, hd),
+                               ("p_layers", "batch", seq_ax, "p_kv_heads",
+                                None),
+                               init="zeros", dtype=dt)
+                c["k"], c["v"] = kv, kv
+            elif spec.mixer == C.RGLRU:
+                c["rglru"] = {
+                    "h": ParamDecl((n, B, cfg.lru_dim),
+                                   ("p_layers", "batch", "act_mlp"),
+                                   init="zeros", dtype=jnp.float32),
+                    "conv": ParamDecl(
+                        (n, B, cfg.conv1d_width - 1, cfg.lru_dim),
+                        ("p_layers", "batch", None, "act_mlp"),
+                        init="zeros", dtype=dt),
+                }
+                if cfg.sd_decode_frac > 0:
+                    from repro.core.sd_decode import sd_state_decls
+                    c["sd"] = sd_state_decls(n, B, cfg.d_model,
+                                             cfg.lru_dim, cfg.d_ff)
+            elif spec.mixer == C.MLSTM:
+                di = 2 * cfg.d_model
+                hdm = di // cfg.n_heads
+                c["mlstm"] = {
+                    "C": ParamDecl((n, B, H, hdm, hdm),
+                                   ("p_layers", "batch", None, None,
+                                    "act_mlp"),
+                                   init="zeros", dtype=jnp.float32),
+                    "n": ParamDecl((n, B, H, hdm),
+                                   ("p_layers", "batch", None, "act_mlp"),
+                                   init="zeros", dtype=jnp.float32),
+                    "m": ParamDecl((n, B, H), ("p_layers", "batch", None),
+                                   init="zeros", dtype=jnp.float32),
+                }
+            elif spec.mixer == C.SLSTM:
+                # sLSTM state is small and feeds per-step recurrent matvecs:
+                # model-sharding it would force an all-reduce per timestep,
+                # so it rides replicated (batch-sharded only).
+                hds = cfg.d_model // cfg.n_heads
+                st = ParamDecl((n, B, H, hds),
+                               ("p_layers", "batch", None, None),
+                               init="zeros", dtype=jnp.float32)
+                c["slstm"] = {"c": st, "n": st, "m": st, "h": st}
+            if spec.cross_attn:
+                assert cfg.encoder is not None
+                kv = ParamDecl((n, B, cfg.encoder.n_frames, Hk, hd),
+                               ("p_layers", "batch", "kv_seq", "p_kv_heads",
+                                None),
+                               init="zeros", dtype=dt)
+                c["cross_k"], c["cross_v"] = kv, kv
+        out[f"g{i}"] = cg
+    return out
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int):
+    decls = cache_decls(cfg, B, S)
+    return jax.tree.map(lambda d: jnp.zeros(d.shape, d.dtype), decls,
+                        is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def _ring_gather(k_seq: jnp.ndarray, P: int, W: int) -> jnp.ndarray:
+    """Lay the last W of P prefill tokens out in ring order (slot = t % W).
+
+    k_seq: (B, P, Hk, hd) -> (B, W, Hk, hd); unwritten slots (P < W) hold
+    garbage that decode masks via abs-position < 0.
+    """
+    i = jnp.arange(W)
+    t = (P - 1) - ((P - 1 - i) % W)
+    return jnp.take(k_seq, jnp.clip(t, 0, P - 1), axis=1)
+
+
+def _ring_abs_positions(pos: jnp.ndarray, W: int) -> jnp.ndarray:
+    """Absolute token position held by each ring slot after writing ``pos``.
+
+    pos: (B,) per-row positions -> (B, W) absolute positions (negative =
+    slot not yet written).
+    """
+    i = jnp.arange(W)[None, :]
+    r = (pos % W)[:, None]
+    p = pos[:, None]
+    return jnp.where(i <= r, p - r + i, p - r - W + i)
+
+
+def prefill(params: ParamTree, cfg: ModelConfig, tokens: jnp.ndarray,
+            frames: Optional[jnp.ndarray] = None,
+            patches: Optional[jnp.ndarray] = None,
+            cache_len: Optional[int] = None):
+    """Run the prompt, fill the caches. Returns (last_logits, cache, pos)."""
+    B, P = tokens.shape
+    S = cache_len or P
+    x, _, raw = forward(params, cfg, tokens, frames, patches,
+                        want_cache=True)
+    cache = init_cache(cfg, B, S)
+    for i, (specs, n) in enumerate(cfg.scan_groups()):
+        for j, spec in enumerate(specs):
+            rc, c = raw[f"g{i}"][f"l{j}"], cache[f"g{i}"][f"l{j}"]
+            if "k" in rc:
+                L = _cache_len(cfg, spec, S)
+                if spec.mixer == C.ATTN_LOCAL:
+                    kk = jax.vmap(lambda a: _ring_gather(a, P, L))(rc["k"])
+                    vv = jax.vmap(lambda a: _ring_gather(a, P, L))(rc["v"])
+                    c["k"], c["v"] = kk, vv
+                else:
+                    c["k"] = jax.lax.dynamic_update_slice(
+                        c["k"], rc["k"].astype(c["k"].dtype), (0, 0, 0, 0, 0))
+                    c["v"] = jax.lax.dynamic_update_slice(
+                        c["v"], rc["v"].astype(c["v"].dtype), (0, 0, 0, 0, 0))
+            for key in ("rglru", "mlstm", "slstm"):
+                if key in rc:
+                    c[key] = jax.tree.map(
+                        lambda new, z: new.astype(z.dtype), rc[key], c[key])
+            if "cross_k" in rc:
+                c["cross_k"], c["cross_v"] = rc["cross_k"], rc["cross_v"]
+    logits = _unembed(params, cfg, x[:, -1:, :])
+    return logits, cache, jnp.int32(P - 1)
+
+
+def _layer_step(p: ParamTree, cfg: ModelConfig, spec: LayerSpec,
+                x_t: jnp.ndarray, cache: Dict[str, Any], pos: jnp.ndarray):
+    """One token through one layer. x_t: (B, 1, d); pos: (B,) per-row
+    positions (continuous batching). Returns (x_t, cache)."""
+    B = x_t.shape[0]
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = x_t.dtype
+    h = rms_norm(x_t, p["norm"], cfg.norm_eps)
+    new_cache = dict(cache)
+    if spec.mixer in (C.ATTN_GLOBAL, C.ATTN_LOCAL):
+        q = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wq"].astype(dt)) \
+            .reshape(B, 1, H, hd)
+        k = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wk"].astype(dt)) \
+            .reshape(B, 1, Hk, hd)
+        v = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wv"].astype(dt)) \
+            .reshape(B, 1, Hk, hd)
+        if cfg.pos_emb == "rope":
+            pp = pos[:, None].astype(jnp.int32)              # (B, 1)
+            q = rope(q, pp, cfg.rope_theta)
+            k = rope(k, pp, cfg.rope_theta)
+        W = cache["k"].shape[1]
+        slot = pos % W if spec.mixer == C.ATTN_LOCAL else pos
+        rows = jnp.arange(B)
+        kc = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache["k"], new_cache["v"] = kc, vc
+        if spec.mixer == C.ATTN_LOCAL:
+            # ring cache: mask = slots actually written (abs >= 0)
+            abs_pos = _ring_abs_positions(pos, W)            # (B, W)
+            qg = q.reshape(B, Hk, H // Hk, hd)
+            s = jnp.einsum("bkgd,bskd->bkgs", qg, kc).astype(jnp.float32)
+            s *= hd ** -0.5
+            s = jnp.where((abs_pos >= 0)[:, None, None, :], s, -1e30)
+            prob = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bkgs,bskd->bkgd", prob.astype(vc.dtype), vc)
+            o = o.reshape(B, 1, H, hd).astype(dt)
+        else:
+            o = decode_attention(q, kc, vc, pos)
+        o = jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, H * hd),
+                       p["attn"]["wo"].astype(dt))
+        x_t = x_t + o
+    elif spec.mixer == C.RGLRU:
+        if cfg.sd_decode_frac > 0:
+            from repro.core.sd_decode import rglru_step_sd
+            o, st, sd = rglru_step_sd(p["rglru"], h, cache["rglru"],
+                                      cache["sd"], cfg.act,
+                                      cfg.sd_decode_frac)
+            new_cache["rglru"] = st
+            new_cache["sd"] = sd
+        else:
+            o, st = rglru_block_step(p["rglru"], h, cache["rglru"], cfg.act)
+            new_cache["rglru"] = {
+                "h": st["h"],
+                "conv": st["conv"].astype(cache["rglru"]["conv"].dtype)}
+        x_t = x_t + o
+    elif spec.mixer == C.MLSTM:
+        o, st = mlstm_block_step(p["mlstm"], h, cache["mlstm"], cfg.n_heads)
+        new_cache["mlstm"] = st
+        x_t = x_t + o
+    elif spec.mixer == C.SLSTM:
+        o, st = slstm_block_step(p["slstm"], h, cache["slstm"], cfg.n_heads)
+        new_cache["slstm"] = st
+        x_t = x_t + o
+    if spec.cross_attn:
+        hc = rms_norm(x_t, p["cross_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dh->bsh", hc, p["cross"]["wq"].astype(dt)) \
+            .reshape(B, 1, H, hd)
+        kc, vc = cache["cross_k"], cache["cross_v"]
+        Sf = kc.shape[1]
+        o = decode_attention(q, kc, vc, jnp.int32(Sf - 1))
+        o = jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, H * hd),
+                       p["cross"]["wo"].astype(dt))
+        x_t = x_t + o
+    if spec.ffn == C.FFN_DENSE:
+        h = rms_norm(x_t, p["ffn_norm"], cfg.norm_eps)
+        if cfg.sd_decode_frac > 0 and spec.mixer == C.RGLRU:
+            from repro.core.sd_decode import ffn_step_sd
+            o, sd = ffn_step_sd(p["ffn"], h, new_cache["sd"], cfg.act,
+                                cfg.sd_decode_frac)
+            new_cache["sd"] = sd
+            x_t = x_t + o
+        else:
+            x_t = x_t + ffn_apply(p["ffn"], h, cfg.act)
+    elif spec.ffn == C.FFN_MOE:
+        h = rms_norm(x_t, p["ffn_norm"], cfg.norm_eps)
+        o, _ = _moe(p["moe"], cfg, h)
+        x_t = x_t + o
+    return x_t, new_cache
+
+
+def decode_step(params: ParamTree, cfg: ModelConfig, cache: Dict[str, Any],
+                token: jnp.ndarray, pos: jnp.ndarray):
+    """One decode step. token: (B, 1) int32; pos: () or (B,) int32 position
+    of the *new* token per row. Returns (logits (B,1,V), new cache, pos+1)."""
+    B = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    x_t = _embed_tokens(params, cfg, token)
+    if cfg.pos_emb == "sinusoidal":
+        half = cfg.d_model // 2
+        dim = jnp.arange(half, dtype=jnp.float32)[None, :]
+        ang = pos.astype(jnp.float32)[:, None] \
+            / (10000.0 ** (2 * dim / cfg.d_model))           # (B, half)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x_t = x_t + pe.astype(x_t.dtype)[:, None, :]
+    new_cache = {}
+    for i, (specs, n) in enumerate(cfg.scan_groups()):
+        grp_p = params["groups"][f"g{i}"]
+        grp_c = cache[f"g{i}"]
+
+        def body(xc, pc, specs=specs):
+            p_cyc, c_cyc = pc
+            c_new = {}
+            for j, spec in enumerate(specs):
+                xc, c_new[f"l{j}"] = _layer_step(p_cyc[f"l{j}"], cfg, spec,
+                                                 xc, c_cyc[f"l{j}"], pos)
+            return xc, c_new
+
+        x_t, new_grp_c = xscan(body, x_t, (grp_p, grp_c))
+        new_cache[f"g{i}"] = new_grp_c
+    x_t = rms_norm(x_t, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x_t)
+    return logits, new_cache, pos + 1

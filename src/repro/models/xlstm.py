@@ -1,0 +1,199 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Both are exponential-gated leaky integrators — the closest assigned-pool
+relatives of the paper's LIF dynamics (DESIGN.md §Arch-applicability): the
+stabiliser state ``m`` plays the role of the membrane's saturation logic
+and the forget gate is a learned, input-dependent leak.
+
+Baseline execution is the faithful per-timestep ``lax.scan`` recurrence
+(state kept in f32). The chunkwise-parallel mLSTM form is a §Perf
+hillclimb (it converts the hd x hd outer-product stream into MXU-sized
+GEMMs; see EXPERIMENTS.md).
+
+Projections are per-head block-diagonal (as in the xLSTM paper) so the
+parameter count stays in the published 1.3B class.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DeclTree, ParamDecl, ParamTree
+from repro.models.scan_util import xscan_seq
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_decls(d_model: int, n_heads: int, proj_factor: int = 2) -> DeclTree:
+    di = proj_factor * d_model
+    hd = di // n_heads
+    return {
+        "up": ParamDecl((d_model, 2 * di), ("p_embed", "p_mlp")),
+        "wq": ParamDecl((n_heads, hd, hd), ("p_heads", None, None)),
+        "wk": ParamDecl((n_heads, hd, hd), ("p_heads", None, None)),
+        "wv": ParamDecl((n_heads, hd, hd), ("p_heads", None, None)),
+        "wi": ParamDecl((di, n_heads), ("p_mlp", None), scale=di ** -0.5),
+        "bi": ParamDecl((n_heads,), (None,), init="zeros"),
+        "wf": ParamDecl((di, n_heads), ("p_mlp", None), scale=di ** -0.5),
+        "bf": ParamDecl((n_heads,), (None,), init="ones"),
+        "down": ParamDecl((di, d_model), ("p_mlp", "p_embed")),
+    }
+
+
+def _mlstm_qkvif(p: ParamTree, xm: jnp.ndarray, n_heads: int):
+    """xm: (B, S, di) -> per-head q,k,v (B,S,H,hd) and log-gates (B,S,H)."""
+    B, S, di = xm.shape
+    hd = di // n_heads
+    xh = xm.reshape(B, S, n_heads, hd)
+    q = jnp.einsum("bshx,hxy->bshy", xh, p["wq"].astype(xm.dtype))
+    k = jnp.einsum("bshx,hxy->bshy", xh, p["wk"].astype(xm.dtype)) * hd ** -0.5
+    v = jnp.einsum("bshx,hxy->bshy", xh, p["wv"].astype(xm.dtype))
+    li = (jnp.einsum("bsd,dh->bsh", xm, p["wi"].astype(xm.dtype))
+          + p["bi"].astype(xm.dtype)).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        (jnp.einsum("bsd,dh->bsh", xm, p["wf"].astype(xm.dtype))
+         + p["bf"].astype(xm.dtype)).astype(jnp.float32))
+    return q, k, v, li, lf
+
+
+def _mlstm_cell(q_t, k_t, v_t, li_t, lf_t, state):
+    """One recurrence step (all f32 state). Shapes: q/k/v (B,H,hd)."""
+    C, n, m = state                     # (B,H,hd,hd), (B,H,hd), (B,H)
+    m_new = jnp.maximum(lf_t + m, li_t)
+    i_p = jnp.exp(li_t - m_new)[..., None]               # (B,H,1)
+    f_p = jnp.exp(lf_t + m - m_new)[..., None]
+    kv = jnp.einsum("bhx,bhy->bhxy", k_t.astype(jnp.float32),
+                    v_t.astype(jnp.float32))
+    C = f_p[..., None] * C + i_p[..., None] * kv
+    n = f_p * n + i_p * k_t.astype(jnp.float32)
+    h_num = jnp.einsum("bhx,bhxy->bhy", q_t.astype(jnp.float32), C)
+    h_den = jnp.abs(jnp.einsum("bhx,bhx->bh", q_t.astype(jnp.float32), n))
+    h = h_num / jnp.maximum(h_den, 1.0)[..., None]       # (B,H,hd)
+    return (C, n, m_new), h
+
+
+def mlstm_block(p: ParamTree, x: jnp.ndarray,
+                n_heads: int) -> Tuple[jnp.ndarray, Dict]:
+    """Training/prefill over (B, S, d). Scan of the recurrence over S."""
+    dt = x.dtype
+    B, S, d = x.shape
+    up = jnp.einsum("bsd,dk->bsk", x, p["up"].astype(dt))
+    xm, z = jnp.split(up, 2, axis=-1)                    # (B,S,di) each
+    q, k, v, li, lf = _mlstm_qkvif(p, xm, n_heads)
+    di = xm.shape[-1]
+    hd = di // n_heads
+
+    C0 = jnp.zeros((B, n_heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, n_heads, hd), jnp.float32)
+    m0 = jnp.zeros((B, n_heads), jnp.float32)
+
+    def step(state, t):
+        state, h = _mlstm_cell(*t, state)
+        return state, h
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          li.swapaxes(0, 1), lf.swapaxes(0, 1))
+    state, hs = xscan_seq(step, (C0, n0, m0), xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, di).astype(dt)   # (B,S,di)
+    out = jnp.einsum("bsk,kd->bsd", h * jax.nn.silu(z),
+                     p["down"].astype(dt))
+    C, n, m = state
+    return out, {"C": C, "n": n, "m": m}
+
+
+def mlstm_block_step(p: ParamTree, x_t: jnp.ndarray, state: Dict,
+                     n_heads: int) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step. x_t: (B, 1, d)."""
+    dt = x_t.dtype
+    up = jnp.einsum("bsd,dk->bsk", x_t, p["up"].astype(dt))
+    xm, z = jnp.split(up, 2, axis=-1)
+    q, k, v, li, lf = _mlstm_qkvif(p, xm, n_heads)
+    st = (state["C"], state["n"], state["m"])
+    st, h = _mlstm_cell(q[:, 0], k[:, 0], v[:, 0], li[:, 0], lf[:, 0], st)
+    di = xm.shape[-1]
+    h = h.reshape(x_t.shape[0], 1, di).astype(dt)
+    out = jnp.einsum("bsk,kd->bsd", h * jax.nn.silu(z), p["down"].astype(dt))
+    return out, {"C": st[0], "n": st[1], "m": st[2]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_decls(d_model: int, n_heads: int) -> DeclTree:
+    hd = d_model // n_heads
+    return {
+        "wz": ParamDecl((d_model, d_model), ("p_embed", "p_mlp")),
+        "wi": ParamDecl((d_model, d_model), ("p_embed", "p_mlp")),
+        "wf": ParamDecl((d_model, d_model), ("p_embed", "p_mlp")),
+        "wo": ParamDecl((d_model, d_model), ("p_embed", "p_mlp")),
+        "rz": ParamDecl((n_heads, hd, hd), ("p_heads", None, None)),
+        "ri": ParamDecl((n_heads, hd, hd), ("p_heads", None, None)),
+        "rf": ParamDecl((n_heads, hd, hd), ("p_heads", None, None)),
+        "ro": ParamDecl((n_heads, hd, hd), ("p_heads", None, None)),
+        "down": ParamDecl((d_model, d_model), ("p_mlp", "p_embed")),
+    }
+
+
+def _slstm_cell(p, zx, ix, fx, ox, state, n_heads):
+    """One step. zx..ox: (B,H,hd) pre-activations from x; state f32."""
+    c, n, m, h = state                                   # (B,H,hd) each
+    rec = lambda w: jnp.einsum("bhx,hxy->bhy", h, w.astype(jnp.float32))
+    z = jnp.tanh(zx + rec(p["rz"]))
+    li = ix + rec(p["ri"])
+    lf = jax.nn.log_sigmoid(fx + rec(p["rf"]))
+    o = jax.nn.sigmoid(ox + rec(p["ro"]))
+    m_new = jnp.maximum(lf + m, li)
+    i_p = jnp.exp(li - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new, h_new), h_new
+
+
+def _slstm_pre(p: ParamTree, x: jnp.ndarray, n_heads: int):
+    dt = x.dtype
+    B, S, d = x.shape
+    hd = d // n_heads
+    pre = lambda w: jnp.einsum("bsd,dk->bsk", x, w.astype(dt)) \
+        .reshape(B, S, n_heads, hd).astype(jnp.float32)
+    return pre(p["wz"]), pre(p["wi"]), pre(p["wf"]), pre(p["wo"])
+
+
+def slstm_block(p: ParamTree, x: jnp.ndarray,
+                n_heads: int) -> Tuple[jnp.ndarray, Dict]:
+    dt = x.dtype
+    B, S, d = x.shape
+    hd = d // n_heads
+    zx, ix, fx, ox = _slstm_pre(p, x, n_heads)
+    z0 = jnp.zeros((B, n_heads, hd), jnp.float32)
+    state0 = (z0, z0, z0, z0)
+
+    def step(state, t):
+        state, h = _slstm_cell(p, *t, state, n_heads)
+        return state, h
+
+    xs = tuple(a.swapaxes(0, 1) for a in (zx, ix, fx, ox))
+    state, hs = xscan_seq(step, state0, xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(dt)
+    out = jnp.einsum("bsd,dk->bsk", h, p["down"].astype(dt))
+    c, n, m, hl = state
+    return out, {"c": c, "n": n, "m": m, "h": hl}
+
+
+def slstm_block_step(p: ParamTree, x_t: jnp.ndarray, state: Dict,
+                     n_heads: int) -> Tuple[jnp.ndarray, Dict]:
+    dt = x_t.dtype
+    B = x_t.shape[0]
+    d = x_t.shape[-1]
+    zx, ix, fx, ox = _slstm_pre(p, x_t, n_heads)
+    st = (state["c"], state["n"], state["m"], state["h"])
+    st, h = _slstm_cell(p, zx[:, 0], ix[:, 0], fx[:, 0], ox[:, 0], st, n_heads)
+    h = h.reshape(B, 1, d).astype(dt)
+    out = jnp.einsum("bsd,dk->bsk", h, p["down"].astype(dt))
+    return out, {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}

@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (AdamWState, OptState, adamw_init,
+                                    adamw_update, clip_by_global_norm,
+                                    sgd_init, sgd_update)
+from repro.optim.schedules import (constant, cosine_decay, linear_warmup,
+                                   warmup_cosine)
+
+__all__ = [
+    "AdamWState", "OptState", "adamw_init", "adamw_update",
+    "clip_by_global_norm", "sgd_init", "sgd_update",
+    "constant", "cosine_decay", "linear_warmup", "warmup_cosine",
+]

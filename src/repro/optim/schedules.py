@@ -1,0 +1,36 @@
+"""Learning-rate schedules (pure functions of the step index)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+    return f
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        s = jnp.minimum(step.astype(jnp.float32), total_steps)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * s / max(total_steps, 1)))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = (s + 1.0) / max(warmup_steps, 1)
+        post = jnp.maximum(s - warmup_steps, 0.0)
+        denom = max(total_steps - warmup_steps, 1)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * jnp.minimum(post / denom, 1.0)))
+        decay = final_frac + (1.0 - final_frac) * cos
+        return lr * jnp.where(s < warmup_steps, warm, decay)
+    return f

@@ -1,0 +1,145 @@
+"""Batched serving engine: slot-based continuous batching over the decode
+caches.
+
+The engine owns a fixed-capacity batch of **slots** (the static-shape
+analogue of vLLM's running set — static shapes are the XLA constraint, the
+same one that shaped the event-capacity design in core/events.py). Requests
+are admitted into free slots, prefilled, then all active slots advance
+together through the jitted one-token ``decode_step``; finished slots
+(EOS / max_tokens) are released and refilled without stopping the batch.
+
+The SNE connection: a slot-batched decode step does work proportional to
+the number of *active* slots x active layers — the serving-level face of
+the paper's energy-proportionality (idle slots are masked lanes, exactly
+like the address-filtered clusters).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (P,) int32
+    max_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Greedy/temperature sampling over a slot batch.
+
+    For simplicity each admitted request is prefilled individually (B=1
+    prefill) and its caches are written into the slot's rows; decode runs
+    batched. That matches the prefill/decode split of disaggregated servers.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, batch_slots: int,
+                 cache_len: int, eos_id: int = 1,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_slots
+        self.S = cache_len
+        self.eos = eos_id
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = T.init_cache(cfg, batch_slots, cache_len)
+        self.pos = np.zeros((batch_slots,), np.int32)       # next position
+        self.active = np.zeros((batch_slots,), bool)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.last_token = np.zeros((batch_slots,), np.int32)
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0,
+                      "generated": 0}
+
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl,
+                                static_argnames=("prompt_len",))
+
+    # --- jitted internals -------------------------------------------------
+
+    def _prefill_impl(self, tokens, prompt_len: int):
+        logits, cache, _ = T.prefill(self.params, self.cfg, tokens,
+                                     cache_len=self.S)
+        return logits[:, -1, :], cache
+
+    def _decode_impl(self, cache, tokens, pos_per_slot, active):
+        """Batched decode; decode_step takes per-slot positions directly."""
+        del active  # inactive slots produce garbage rows, released on host
+        logits, cache, _ = T.decode_step(self.params, self.cfg, cache,
+                                         tokens[:, None], pos_per_slot)
+        return logits[:, 0, :], cache
+
+    # --- host API ----------------------------------------------------------
+
+    def try_admit(self, req: Request) -> bool:
+        free = np.nonzero(~self.active)[0]
+        if len(free) == 0:
+            return False
+        slot = int(free[0])
+        P = len(req.prompt)
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, cache1 = self._prefill(tokens, prompt_len=P)
+        # copy the single-row caches into this slot's row
+        def write(dst, src):
+            return dst.at[:, slot:slot + 1].set(src.astype(dst.dtype))
+        self.cache = jax.tree.map(write, self.cache, cache1)
+        tok = self._sample(np.asarray(logits)[0])
+        self.slot_req[slot] = req
+        self.active[slot] = True
+        self.pos[slot] = P
+        self.last_token[slot] = tok
+        req.out_tokens.append(int(tok))
+        self.stats["prefill_tokens"] += P
+        return True
+
+    def _sample(self, logits: np.ndarray) -> int:
+        logits = logits[:self.cfg.vocab_size]
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits))
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(
+            sub, jnp.asarray(logits) / self.temperature))
+
+    def step(self) -> int:
+        """One decode step for every active slot; returns #active."""
+        n_active = int(self.active.sum())
+        if n_active == 0:
+            return 0
+        logits, self.cache = self._decode(
+            self.cache, jnp.asarray(self.last_token),
+            jnp.asarray(self.pos), jnp.asarray(self.active))
+        logits = np.asarray(logits)
+        self.stats["decode_steps"] += 1
+        for slot in np.nonzero(self.active)[0]:
+            req = self.slot_req[slot]
+            tok = self._sample(logits[slot])
+            req.out_tokens.append(tok)
+            self.pos[slot] += 1
+            self.last_token[slot] = tok
+            self.stats["generated"] += 1
+            if tok == self.eos or len(req.out_tokens) >= req.max_tokens \
+                    or self.pos[slot] >= self.S - 1:
+                req.done = True
+                self.active[slot] = False
+                self.slot_req[slot] = None
+        return n_active
+
+    def run(self, requests: List[Request], max_steps: int = 10_000) -> None:
+        """Continuous batching: admit as slots free, decode until drained."""
+        pending = list(requests)
+        for _ in range(max_steps):
+            while pending and self.try_admit(pending[0]):
+                pending.pop(0)
+            if self.step() == 0 and not pending:
+                break

@@ -1,0 +1,137 @@
+"""Training step + loop: grad accumulation, checkpointing, fault hooks.
+
+``make_train_step`` builds the jit-able pure step (this is also what the
+multi-pod dry-run lowers); ``train_loop`` is the host driver with
+checkpoint/restore, preemption handling and straggler accounting.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import lm_loss
+from repro.models.scan_util import xscan
+from repro.optim import adamw_init, adamw_update
+from repro.train import checkpoint as ckpt_lib
+from repro.train.fault import PreemptionGuard, StepWatchdog, with_retries
+
+Batch = Dict[str, jnp.ndarray]
+
+
+def make_loss_fn(cfg: ModelConfig, loss_chunk: int = 512):
+    def loss_fn(params, batch: Batch):
+        return lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                       frames=batch.get("frames"),
+                       patches=batch.get("patches"),
+                       loss_chunk=loss_chunk)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, lr_schedule: Callable,
+                    loss_chunk: int = 512,
+                    max_grad_norm: Optional[float] = 1.0,
+                    weight_decay: float = 0.1):
+    """Pure (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``cfg.grad_accum > 1`` splits the global batch into microbatches scanned
+    sequentially, accumulating grads in ``cfg.grad_dtype`` — the standard
+    memory/throughput trade (activations live for one microbatch only).
+    """
+    loss_fn = make_loss_fn(cfg, loss_chunk)
+    accum = max(cfg.grad_accum, 1)
+    acc_dtype = {"float32": jnp.float32,
+                 "bfloat16": jnp.bfloat16}[cfg.grad_dtype]
+
+    def train_step(params, opt_state, batch: Batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype) / accum, g_acc, g)
+                return (g_acc, l_acc + l / accum), m
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (grads, loss), ms = xscan(micro, (g0, 0.0), mbs)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        lr = lr_schedule(opt_state.step)
+        params, opt_state, om = adamw_update(
+            grads, opt_state, params, lr, weight_decay=weight_decay,
+            max_grad_norm=max_grad_norm)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig):
+    from repro.models.transformer import init_model
+    params = init_model(key, cfg)
+    moment_dtype = {"float32": jnp.float32,
+                    "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+    opt_state = adamw_init(params, moment_dtype)
+    return params, opt_state
+
+
+def train_loop(cfg: ModelConfig, batches: Iterator[Batch], n_steps: int,
+               lr_schedule: Callable, *, seed: int = 0,
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
+               log_every: int = 10, loss_chunk: int = 512,
+               log_fn: Callable[[str], None] = print) -> Dict[str, Any]:
+    """Host driver: restore-if-present, step, checkpoint, handle SIGTERM."""
+    params, opt_state = init_train_state(jax.random.PRNGKey(seed), cfg)
+    start = 0
+    if ckpt_dir:
+        last = ckpt_lib.latest(ckpt_dir)
+        if last is not None:
+            (params, opt_state), extras = ckpt_lib.restore(
+                ckpt_dir, last, (params, opt_state))
+            start = extras.get("next_step", last)
+            log_fn(f"[train] restored step {last} -> resuming at {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, lr_schedule, loss_chunk))
+    guard = PreemptionGuard()
+    watchdog = StepWatchdog()
+    history = []
+    t_begin = time.time()
+    for step in range(start, n_steps):
+        batch = next(batches)
+        watchdog.start()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = watchdog.stop(step)
+        metrics["step_time_s"] = dt
+        history.append(metrics)
+        if step % log_every == 0 or step == n_steps - 1:
+            log_fn(f"[train] step {step:5d} loss {metrics['loss']:.4f} "
+                   f"lr {metrics['lr']:.2e} {dt*1e3:.0f} ms")
+        want_ckpt = ckpt_dir and (
+            (step + 1) % ckpt_every == 0 or step == n_steps - 1
+            or guard.requested)
+        if want_ckpt:
+            with_retries(lambda: ckpt_lib.save(
+                ckpt_dir, step + 1, (params, opt_state),
+                extras={"next_step": step + 1, "data_cursor": step + 1}))
+        if guard.requested:
+            log_fn(f"[train] preemption requested; checkpointed at "
+                   f"step {step + 1}, exiting cleanly")
+            break
+    guard.restore()
+    return {"params": params, "opt_state": opt_state, "history": history,
+            "stragglers": watchdog.events,
+            "wall_time_s": time.time() - t_begin}

@@ -1,0 +1,107 @@
+"""Blockwise/folded attention vs naive reference; decode paths; GQA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (decode_attention, flash_attention,
+                                    cache_insert)
+
+
+def naive_attention(q, k, v, causal, window=0):
+    B, Sq, H, hd = q.shape
+    Skv, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Sq, Hk, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    s *= hd ** -0.5
+    iq = jnp.arange(Sq)[:, None]
+    ikv = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= ikv <= iq
+    if window > 0:
+        ok &= ikv > iq - window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+
+
+def _qkv(seed, B=2, S=64, H=4, Hk=2, hd=16, Skv=None):
+    rng = np.random.default_rng(seed)
+    Skv = Skv or S
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, Skv, Hk, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, Skv, Hk, hd)).astype(np.float32))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_blockwise_matches_naive(causal, chunk):
+    q, k, v = _qkv(0)
+    got = flash_attention(q, k, v, causal=causal, chunk_q=chunk,
+                          chunk_kv=chunk)
+    want = naive_attention(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [8, 16, 48])
+def test_sliding_window_matches_naive(window):
+    q, k, v = _qkv(1)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          chunk_q=16, chunk_kv=16)
+    want = naive_attention(q, k, v, True, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 16])
+def test_folded_causal_matches_naive(chunk):
+    q, k, v = _qkv(2)
+    got = flash_attention(q, k, v, causal=True, chunk_q=chunk,
+                          chunk_kv=chunk, fold=True)
+    want = naive_attention(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_nondivisible_seq_padding():
+    q, k, v = _qkv(3, S=50, Skv=50)
+    got = flash_attention(q, k, v, causal=True, chunk_q=16, chunk_kv=16)
+    want = naive_attention(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_equals_full_row():
+    """decode_attention at pos p == row p of full causal attention."""
+    q, k, v = _qkv(4, S=32)
+    full = naive_attention(q, k, v, True)
+    for p in (0, 7, 31):
+        got = decode_attention(q[:, p:p + 1], k, v, jnp.int32(p))
+        np.testing.assert_allclose(np.asarray(got)[:, 0],
+                                   np.asarray(full)[:, p],
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_decode_per_row_positions():
+    q, k, v = _qkv(5, B=3, S=32)
+    full = naive_attention(q, k, v, True)
+    pos = jnp.asarray([3, 17, 31])
+    qsel = jnp.stack([q[i, p] for i, p in enumerate([3, 17, 31])])[:, None]
+    got = decode_attention(qsel, k, v, pos)
+    for i, p in enumerate([3, 17, 31]):
+        np.testing.assert_allclose(np.asarray(got)[i, 0],
+                                   np.asarray(full)[i, p],
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_cache_insert():
+    cache = jnp.zeros((2, 8, 2, 4))
+    new = jnp.ones((2, 1, 2, 4))
+    out = cache_insert(cache, new, jnp.int32(3))
+    assert float(out[:, 3].sum()) == 2 * 2 * 4
+    assert float(out.sum()) == 2 * 2 * 4

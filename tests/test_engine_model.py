@@ -1,0 +1,92 @@
+"""The SNE hardware model must reproduce every number the paper reports."""
+import math
+
+import pytest
+
+from repro.core import engine as eng
+
+
+def test_peak_performance_51_2_gsops():
+    cfg = eng.SneConfig(n_slices=8)
+    assert eng.peak_sops(cfg) == pytest.approx(51.2e9)
+
+
+def test_neuron_count_8192():
+    assert eng.SneConfig(n_slices=8).n_neurons == 8192
+
+
+def test_energy_per_sop_0_221pj():
+    cfg = eng.SneConfig(n_slices=8)
+    assert eng.energy_per_sop_j(cfg) == pytest.approx(0.221e-12, rel=0.01)
+
+
+def test_efficiency_4_54_tsops_w():
+    cfg = eng.SneConfig(n_slices=8)
+    assert eng.efficiency_tsops_w(cfg) == pytest.approx(4.54, rel=0.01)
+
+
+def test_power_11_29_mw():
+    cfg = eng.SneConfig(n_slices=8)
+    assert eng.power_w(cfg) == pytest.approx(11.29e-3, rel=0.01)
+
+
+def test_event_consumed_in_120ns():
+    cfg = eng.SneConfig()
+    assert eng.time_per_event_s(cfg) == pytest.approx(120e-9)
+
+
+def test_table1_dvs_gesture_energy_range():
+    """80 uJ/inf at 7.1 ms and 261 uJ/inf at 23.12 ms (Table I + §IV-B)."""
+    cfg = eng.SneConfig(n_slices=8)
+    # paper: inference takes 7.1 ms (best) / 23.12 ms (worst) at 120 ns/event
+    ev_best = 7.1e-3 / eng.time_per_event_s(cfg)
+    ev_worst = 23.12e-3 / eng.time_per_event_s(cfg)
+    e_best = eng.inference_energy_j(cfg, ev_best)
+    e_worst = eng.inference_energy_j(cfg, ev_worst)
+    assert e_best == pytest.approx(80e-6, rel=0.02)
+    assert e_worst == pytest.approx(261e-6, rel=0.02)
+    assert eng.inference_rate_hz(cfg, ev_best) == pytest.approx(141, rel=0.02)
+    assert eng.inference_rate_hz(cfg, ev_worst) == pytest.approx(43, rel=0.02)
+
+
+def test_performance_scales_with_slices():
+    """Fig. 5b: SOP/s proportional to slice count."""
+    perfs = [eng.peak_sops(eng.SneConfig(n_slices=s)) for s in (1, 2, 4, 8)]
+    for a, b in zip(perfs, perfs[1:]):
+        assert b == pytest.approx(2 * a)
+
+
+def test_energy_proportionality():
+    """2x the events -> 2x the time and 2x the energy (the core claim)."""
+    cfg = eng.SneConfig(n_slices=8)
+    t1 = eng.inference_time_s(cfg, 1e5)
+    t2 = eng.inference_time_s(cfg, 2e5)
+    assert t2 == pytest.approx(2 * t1)
+    e1 = eng.inference_energy_j(cfg, 1e5)
+    e2 = eng.inference_energy_j(cfg, 2e5)
+    assert e2 == pytest.approx(2 * e1)
+
+
+def test_area_scaling_fig4():
+    """DMA area constant; slice area proportional (Fig. 4)."""
+    a1 = eng.area_kge(eng.SneConfig(n_slices=1))
+    a8 = eng.area_kge(eng.SneConfig(n_slices=8))
+    assert a1["dma"] == a8["dma"]
+    assert a8["slices"] == pytest.approx(8 * a1["slices"])
+    # fixed cost progressively absorbed
+    assert a1["dma"] / a1["total"] > a8["dma"] / a8["total"]
+
+
+def test_slices_required():
+    cfg = eng.SneConfig()
+    assert eng.slices_required(1024, cfg) == 1
+    assert eng.slices_required(1025, cfg) == 2
+
+
+def test_soa_table_sne_row_is_best_efficiency():
+    sne = eng.SOA_TABLE[0]
+    others = [r for r in eng.SOA_TABLE[1:] if r[3] is not None]
+    assert all(sne[3] > o[3] for o in others)
+    # 3.55x over Tianjic (paper §IV-C)
+    tianjic = next(r for r in eng.SOA_TABLE if r[0] == "Tianjic")
+    assert sne[3] / tianjic[3] == pytest.approx(3.55, rel=0.01)

@@ -1,0 +1,114 @@
+"""THE correctness anchor (DESIGN.md §4): event path == dense path.
+
+The SNE execution model (explicit events, scatter-accumulate, lazy TLU
+leak, FIRE at boundaries) must produce the same membrane trajectories and
+output spikes as the dense frame-based simulation — that is the contract
+that makes the accelerator compute the network the GPU trained.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import events as ev
+from repro.core.econv import (EConvSpec, dense_forward, event_forward,
+                              init_econv)
+from repro.core.lif import LifParams
+
+
+def _spikes(seed, T, H, W, C, p):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.random((T, H, W, C)) < p).astype(np.float32))
+
+
+def _run_both(spec, spikes, seed=0):
+    params = init_econv(jax.random.PRNGKey(seed), spec)
+    T = spikes.shape[0]
+    dense_out, v_dense = dense_forward(params, spec, spikes)
+    cap = int(spikes.size)
+    stream = ev.dense_to_events(spikes, cap)
+    out_cap = int(np.prod(dense_out.shape))
+    out_stream, v_event, stats = event_forward(params, spec, stream,
+                                               out_cap, T)
+    event_out = ev.events_to_dense(out_stream, dense_out.shape)
+    return dense_out, v_dense, event_out, v_event, stats
+
+
+@given(seed=st.integers(0, 2**16), p=st.floats(0.02, 0.4))
+@settings(max_examples=15, deadline=None)
+def test_conv_event_equals_dense(seed, p):
+    spec = EConvSpec("conv", (8, 8, 2), 4, kernel=3, padding=1,
+                     lif=LifParams(threshold=0.8, leak=0.05))
+    spikes = _spikes(seed, 5, 8, 8, 2, p)
+    d_out, v_d, e_out, v_e, _ = _run_both(spec, spikes, seed)
+    np.testing.assert_allclose(np.asarray(e_out), np.asarray(d_out),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v_e), np.asarray(v_d), atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_pool_event_equals_dense(seed):
+    spec = EConvSpec("pool", (8, 8, 3), 3, kernel=2, stride=2,
+                     lif=LifParams(threshold=0.999, leak=0.0))
+    spikes = _spikes(seed, 4, 8, 8, 3, 0.2)
+    d_out, v_d, e_out, v_e, _ = _run_both(spec, spikes, seed)
+    np.testing.assert_allclose(np.asarray(e_out), np.asarray(d_out),
+                               atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_fc_event_equals_dense(seed):
+    spec = EConvSpec("fc", (4, 4, 2), 6, lif=LifParams(threshold=1.2,
+                                                       leak=0.1))
+    spikes = _spikes(seed, 6, 4, 4, 2, 0.25)
+    d_out, v_d, e_out, v_e, _ = _run_both(spec, spikes, seed)
+    np.testing.assert_allclose(np.asarray(e_out), np.asarray(d_out),
+                               atol=1e-5)
+
+
+def test_idle_timesteps_cost_nothing():
+    """TLU lazy-leak property: an input with long idle gaps consumes only
+    the events present — boundaries processed scale with *active* steps."""
+    spec = EConvSpec("conv", (6, 6, 1), 2, kernel=3, padding=1,
+                     lif=LifParams(threshold=0.7, leak=0.03))
+    T = 50
+    spikes = jnp.zeros((T, 6, 6, 1)).at[0, 2, 2, 0].set(1.0) \
+        .at[T - 1, 3, 3, 0].set(1.0)
+    d_out, v_d, e_out, v_e, stats = _run_both(spec, spikes)
+    np.testing.assert_allclose(np.asarray(e_out), np.asarray(d_out),
+                               atol=1e-5)
+    assert int(stats.n_update_events) == 2
+    # only 2 boundaries crossed despite 50 timesteps
+    assert int(stats.n_boundaries) <= 3
+
+
+def test_energy_proportionality_sops():
+    """#SOPs == #events x K^2 x C_o — the operation-count proportionality
+    claim of the paper (abstract: 'performs a number of operations
+    proportional to the number of events')."""
+    spec = EConvSpec("conv", (8, 8, 2), 4, kernel=3, padding=1)
+    for p in (0.05, 0.1, 0.2):
+        spikes = _spikes(42, 5, 8, 8, 2, p)
+        *_, stats = _run_both(spec, spikes)
+        n_ev = int(jnp.sum(spikes))
+        assert int(stats.n_update_events) == n_ev
+        assert int(stats.n_sops) == n_ev * 9 * 4
+
+
+def test_rst_op_resets_state():
+    spec = EConvSpec("conv", (6, 6, 1), 2, kernel=3, padding=1,
+                     lif=LifParams(threshold=10.0, leak=0.0))
+    spikes = jnp.zeros((3, 6, 6, 1)).at[0, 2, 2, 0].set(1.0)
+    params = init_econv(jax.random.PRNGKey(0), spec)
+    stream = ev.dense_to_events(spikes, 16)
+    # append an explicit RST at t=1
+    rst = ev.EventStream(
+        t=jnp.array([1], jnp.int32), x=jnp.array([0], jnp.int32),
+        y=jnp.array([0], jnp.int32), c=jnp.array([0], jnp.int32),
+        op=jnp.array([ev.OP_RST], jnp.int32), valid=jnp.array([True]))
+    merged = ev.concatenate_streams(stream, rst)
+    _, v_fin, _ = event_forward(params, spec, merged, 128, 3)
+    np.testing.assert_allclose(np.asarray(v_fin), 0.0, atol=1e-6)

@@ -1,0 +1,80 @@
+"""4-bit weight / 8-bit state quantisation (paper §III-D4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant as q
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=20, deadline=None)
+def test_int4_range(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(5, 5, 3, 8)).astype(np.float32))
+    qi, s = q.quantize_weights_int(w)
+    assert qi.dtype == jnp.int8
+    assert int(qi.min()) >= q.INT4_MIN and int(qi.max()) <= q.INT4_MAX
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_int4(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 64))
+    codes = jnp.asarray(rng.integers(-8, 8, size=n).astype(np.int8))
+    packed = q.pack_int4(codes)
+    assert packed.size == (n + 1) // 2
+    back = q.unpack_int4(packed, n)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_fake_quant_is_idempotent():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    w1 = q.fake_quant_weights(w)
+    w2 = q.fake_quant_weights(w1)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-6)
+
+
+def test_fake_quant_error_bound():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    wq = q.fake_quant_weights(w, per_channel=True)
+    s = q.weight_scale(w, per_channel=True)
+    err = jnp.abs(w - wq)
+    assert float((err <= 0.5 * s + 1e-6).all())
+
+
+def test_ste_gradient_passthrough():
+    g = jax.grad(lambda w: jnp.sum(q.fake_quant_weights(w) ** 2))
+    w = jnp.asarray(np.random.default_rng(2).normal(size=(8, 4)),
+                    jnp.float32)
+    gw = g(w)
+    assert jnp.isfinite(gw).all()
+    assert float(jnp.abs(gw).sum()) > 0
+
+
+def test_state_quant_roundtrip():
+    v = jnp.asarray([-3.0, -0.4, 0.0, 0.7, 2.9])
+    scale = 3.0 / 127
+    qs = q.quantize_state(v, scale)
+    assert qs.dtype == jnp.int8
+    back = q.dequantize_state(qs, scale)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(v),
+                               atol=scale)
+
+
+def test_quantized_layer_preserves_firing_semantics():
+    """Integer-domain layer: scaled threshold/leak keep relative dynamics."""
+    from repro.core.econv import EConvSpec, init_econv
+    from repro.core.quant import QuantizedLayer
+    spec = EConvSpec("conv", (6, 6, 2), 4, kernel=3, padding=1)
+    params = init_econv(jax.random.PRNGKey(0), spec)
+    ql = QuantizedLayer.from_float(spec, params)
+    assert ql.spec.lif.state_clip == 127.0
+    assert ql.spec.lif.threshold >= 1
+    w = np.asarray(ql.params.w)
+    assert w.min() >= q.INT4_MIN and w.max() <= q.INT4_MAX
+    assert np.allclose(w, np.round(w))  # integer codes in f32 carrier

@@ -1,0 +1,148 @@
+"""RG-LRU and xLSTM blocks: scan-vs-step consistency, stability, and the
+sigma-delta (SNE sigma-delta/TLU transfer) gating semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lm_events import (SigmaDelta, decode_energy_estimate,
+                                  gated_rglru_step, sd_encode, sd_init)
+from repro.models.layers import init_tree
+from repro.models.recurrent import (conv1d_causal, rglru_block,
+                                    rglru_block_step, rglru_decls,
+                                    rglru_scan, rglru_step)
+from repro.models.xlstm import (mlstm_block, mlstm_block_step, mlstm_decls,
+                                slstm_block, slstm_block_step, slstm_decls)
+
+
+def test_rglru_scan_equals_stepwise():
+    d, L = 8, 8
+    p = init_tree(jax.random.PRNGKey(0), rglru_decls(d, L, 4))
+    xc = jnp.asarray(np.random.default_rng(0).normal(size=(2, 12, L)),
+                     jnp.float32)
+    h_seq, h_last = rglru_scan(p, xc)
+    h = jnp.zeros((2, L), jnp.float32)
+    outs = []
+    for t in range(12):
+        o, h = rglru_step(p, xc[:, t], h)
+        outs.append(o)
+    step_seq = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(h_seq), np.asarray(step_seq),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_block_prefill_state_matches_decode():
+    d = 8
+    p = init_tree(jax.random.PRNGKey(1), rglru_decls(d, d, 4))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(1, 10, d)),
+                    jnp.float32)
+    out_full, st = rglru_block(p, x, None)
+    out_pre, st_pre = rglru_block(p, x[:, :9], None)
+    out_step, st_step = rglru_block_step(p, x[:, 9:10], st_pre, None)
+    np.testing.assert_allclose(np.asarray(out_full[:, 9:10]),
+                               np.asarray(out_step), rtol=1e-4, atol=1e-5)
+
+
+def test_conv1d_causal_is_causal():
+    x = jnp.zeros((1, 8, 4)).at[0, 3, :].set(1.0)
+    w = jnp.ones((4, 4))
+    y = conv1d_causal(x, w, jnp.zeros((4,)))
+    assert float(jnp.abs(y[0, :3]).sum()) == 0.0   # nothing before t=3
+    assert float(jnp.abs(y[0, 3]).sum()) > 0
+
+
+@pytest.mark.parametrize("block,decls,step", [
+    (mlstm_block, mlstm_decls, mlstm_block_step),
+    (slstm_block, slstm_decls, slstm_block_step),
+])
+def test_xlstm_prefill_matches_decode(block, decls, step):
+    d, H = 16, 2
+    p = init_tree(jax.random.PRNGKey(2), decls(d, H))
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(2, 9, d)),
+                    jnp.float32)
+    out_full, _ = block(p, x, H)
+    out_pre, st = block(p, x[:, :8], H)
+    out_step, _ = step(p, x[:, 8:9], st, H)
+    np.testing.assert_allclose(np.asarray(out_full[:, 8:9]),
+                               np.asarray(out_step), rtol=1e-3, atol=1e-4)
+
+
+def test_xlstm_long_rollout_stable():
+    d, H = 16, 2
+    p = init_tree(jax.random.PRNGKey(3), mlstm_decls(d, H))
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(1, 256, d)),
+                    jnp.float32)
+    out, st = mlstm_block(p, x, H)
+    assert bool(jnp.isfinite(out).all())
+    assert bool(jnp.isfinite(st["C"]).all())
+
+
+# --- sigma-delta event gating (core/lm_events) ------------------------------
+
+
+def test_sigma_delta_zero_threshold_is_identity():
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(2, 8)),
+                    jnp.float32)
+    sd = sd_init(x)
+    x_eff, sd2, fires = sd_encode(sd, x, threshold=0.0)
+    np.testing.assert_array_equal(np.asarray(x_eff), np.asarray(x))
+    assert bool(fires.all())
+
+
+def test_sigma_delta_gates_small_deltas():
+    sd = sd_init(jnp.zeros((4,)))
+    x1 = jnp.asarray([1.0, 0.05, 0.0, -2.0])
+    x_eff, sd, f1 = sd_encode(sd, x1, threshold=0.1)
+    np.testing.assert_array_equal(np.asarray(f1),
+                                  [True, False, False, True])
+    # non-firing channel kept the reference (0.0), firing ones updated
+    np.testing.assert_allclose(np.asarray(x_eff), [1.0, 0.0, 0.0, -2.0])
+    # a second, nearly identical input fires nothing
+    _, sd, f2 = sd_encode(sd, x1 + 0.01, threshold=0.1)
+    assert not bool(f2.any())
+
+
+def test_gated_rglru_threshold_zero_exact():
+    d = 8
+    p = init_tree(jax.random.PRNGKey(5), rglru_decls(d, d, 4))
+    xc = jnp.asarray(np.random.default_rng(5).normal(size=(2, d)),
+                     jnp.float32)
+    h = jnp.asarray(np.random.default_rng(6).normal(size=(2, d)),
+                    jnp.float32)
+    o_ref, h_ref = rglru_step(p, xc, h)
+    sd = sd_init(xc)
+    o_g, h_g, _, frac = gated_rglru_step(p, xc, h, sd, threshold=0.0)
+    np.testing.assert_allclose(np.asarray(o_g), np.asarray(o_ref),
+                               rtol=1e-6)
+    assert float(frac) == 1.0
+
+
+def test_gated_rglru_event_rate_drops_with_threshold():
+    d = 16
+    p = init_tree(jax.random.PRNGKey(7), rglru_decls(d, d, 4))
+    rng = np.random.default_rng(8)
+    base = rng.normal(size=(1, d)).astype(np.float32)
+    h = jnp.zeros((1, d), jnp.float32)
+    sd = sd_init(jnp.asarray(base))
+    fracs = {}
+    for th in (0.0, 0.2, 1.0):
+        sd_t = sd_init(jnp.asarray(base))
+        f_total = 0.0
+        hh = h
+        for t in range(20):
+            x_t = jnp.asarray(base + 0.05 * rng.normal(size=(1, d)),
+                              jnp.float32)
+            _, hh, sd_t, frac = gated_rglru_step(p, x_t, hh, sd_t, th)
+            f_total += float(frac)
+        fracs[th] = f_total / 20
+    assert fracs[0.0] == 1.0
+    assert fracs[0.2] < fracs[0.0]
+    assert fracs[1.0] <= fracs[0.2]
+
+
+def test_decode_energy_estimate_proportional():
+    e1 = decode_energy_estimate(0.1, 256, 4, 100)
+    e2 = decode_energy_estimate(0.2, 256, 4, 100)
+    assert e2["energy_j"] == pytest.approx(2 * e1["energy_j"])

@@ -1,0 +1,135 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The heavy lifting happens in the examples/benchmarks; these tests assert
+the system-level claims on CPU-sized instances:
+
+  * the eCNN trains (loss drops, accuracy above chance) with surrogate
+    gradients, with and without 4-bit QAT;
+  * the trained network runs identically through the event path, with
+    event counts feeding the energy model;
+  * the LM substrate trains (loss drops on the structured synthetic set).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core import events as ev
+from repro.core.sne_net import (SNNSpec, ce_loss, default_capacities,
+                                dense_apply, event_apply, event_predict,
+                                init_snn, predict, quantize_snn, tiny_net)
+from repro.data.events_ds import TINY, batch_at
+from repro.optim import adamw_init, adamw_update
+
+
+def _train_tiny(qat=False, steps=30, batch=8, seed=0):
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(seed), spec)
+    opt = adamw_init(params)
+
+    def loss_fn(params, spikes, labels):
+        def one(s, l):
+            out, _ = dense_apply(params, spec, s, train=True, qat=qat)
+            return ce_loss(out, l)
+        return jnp.mean(jax.vmap(one)(spikes, labels))
+
+    @jax.jit
+    def step(params, opt, spikes, labels):
+        l, g = jax.value_and_grad(loss_fn)(params, spikes, labels)
+        params, opt, _ = adamw_update(g, opt, params, jnp.asarray(3e-3),
+                                      weight_decay=0.0)
+        return params, opt, l
+
+    losses = []
+    for i in range(steps):
+        spikes, labels = batch_at(seed, i, batch, TINY)
+        params, opt, l = step(params, opt, spikes, labels)
+        losses.append(float(l))
+    return spec, params, losses
+
+
+def _accuracy(spec, params, n=32, seed=100, qat=False):
+    spikes, labels = batch_at(seed, 999, n, TINY)
+    correct = 0
+    for i in range(n):
+        out, _ = dense_apply(params, spec, spikes[i], qat=qat)
+        correct += int(predict(out) == int(labels[i]))
+    return correct / n
+
+
+def test_ecnn_training_learns():
+    spec, params, losses = _train_tiny()
+    assert losses[-1] < losses[0] * 0.8, (losses[0], losses[-1])
+    acc = _accuracy(spec, params)
+    assert acc > 0.4, acc   # 4 classes, chance = 0.25
+
+
+def test_ecnn_qat_training_learns():
+    spec, params, losses = _train_tiny(qat=True)
+    assert losses[-1] < losses[0] * 0.85
+    acc = _accuracy(spec, params, qat=True)
+    assert acc > 0.35, acc
+
+
+def test_trained_network_event_path_agrees():
+    """Dense and event execution agree on the trained network's outputs."""
+    spec, params, _ = _train_tiny(steps=15)
+    spikes, labels = batch_at(0, 555, 4, TINY)
+    caps = default_capacities(spec, activity=0.1, slack=6.0)
+    for i in range(2):
+        out_d, _ = dense_apply(params, spec, spikes[i])
+        stream = ev.dense_to_events(spikes[i], ev.capacity_for(
+            spikes[i].shape, 0.2, slack=4.0))
+        pred_e, counts_e, stats = event_predict(params, spec, stream, caps)
+        counts_d = jnp.sum(out_d, axis=0).reshape(-1)
+        np.testing.assert_allclose(np.asarray(counts_e),
+                                   np.asarray(counts_d), atol=1e-4)
+        assert int(stats.per_layer[0].n_dropped) == 0
+
+
+def test_event_counts_feed_energy_model():
+    spec, params, _ = _train_tiny(steps=5)
+    spikes, _ = batch_at(0, 7, 1, TINY)
+    caps = default_capacities(spec, activity=0.15, slack=6.0)
+    stream = ev.dense_to_events(spikes[0], ev.capacity_for(
+        spikes[0].shape, 0.25, slack=4.0))
+    _, _, stats = event_predict(params, spec, stream, caps)
+    cfg = eng.SneConfig(n_slices=8)
+    t = eng.inference_time_s(cfg, float(stats.total_events))
+    e = eng.inference_energy_j(cfg, float(stats.total_events))
+    assert t > 0 and e > 0
+    # energy proportionality: doubling events doubles energy
+    assert eng.inference_energy_j(cfg, 2 * float(stats.total_events)) \
+        == pytest.approx(2 * e)
+
+
+def test_quantize_snn_produces_integer_domain():
+    spec, params, _ = _train_tiny(steps=5)
+    qp, qspec = quantize_snn(params, spec)
+    for p, l in zip(qp, qspec.layers):
+        if l.kind != "pool":
+            w = np.asarray(p.w)
+            assert np.allclose(w, np.round(w))
+        assert l.lif.state_clip == 127.0
+
+
+def test_lm_training_learns():
+    from repro.configs import get_smoke
+    from repro.data.lm_ds import LmDatasetSpec, batch_at as lm_batch
+    from repro.optim.schedules import warmup_cosine
+    from repro.train.loop import init_train_state, make_train_step
+    cfg = get_smoke("granite-8b")
+    ds = LmDatasetSpec(vocab_size=cfg.vocab_size, seq_len=32)
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(cfg, warmup_cosine(3e-3, 5, 60),
+                                   loss_chunk=16))
+    losses = []
+    for i in range(60):
+        t, l = lm_batch(ds, 0, i, 8)
+        params, opt, m = step(params, opt, {"tokens": t, "labels": l})
+        losses.append(float(m["loss"]))
+    # structured bigram data: loss must drop well below ln(V) = 6.2
+    assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])

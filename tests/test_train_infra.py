@@ -1,0 +1,165 @@
+"""Training infrastructure: checkpoint atomicity/restore, fault handling,
+grad accumulation equivalence, optimizer, schedules, data determinism."""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.data.lm_ds import LmDatasetSpec, batch_at
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedules import warmup_cosine
+from repro.train import checkpoint as ck
+from repro.train.fault import PreemptionGuard, StepWatchdog, with_retries
+from repro.train.loop import init_train_state, make_train_step
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    ck.save(str(tmp_path), 7, tree, extras={"next_step": 7})
+    assert ck.latest(str(tmp_path)) == 7
+    target = jax.tree.map(jnp.zeros_like, tree)
+    restored, extras = ck.restore(str(tmp_path), 7, target)
+    assert extras["next_step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_last_k(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in range(5):
+        ck.save(str(tmp_path), s, tree, keep_last=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2
+    assert ck.latest(str(tmp_path)) == 4
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    ck.save(str(tmp_path), 1, tree)
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ck.save(str(tmp_path), 0, {"x": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        ck.restore(str(tmp_path), 0, {"x": jnp.zeros((3,))})
+
+
+def test_training_resume_bitexact(tmp_path):
+    """Stop at step 3, restore, continue -> identical to uninterrupted."""
+    cfg = get_smoke("granite-8b")
+    ds = LmDatasetSpec(vocab_size=cfg.vocab_size, seq_len=16)
+    step_fn = jax.jit(make_train_step(cfg, warmup_cosine(1e-3, 2, 10),
+                                      loss_chunk=16))
+
+    def batch(i):
+        t, l = batch_at(ds, 0, i, 4)
+        return {"tokens": t, "labels": l}
+
+    p0, o0 = init_train_state(jax.random.PRNGKey(0), cfg)
+    # uninterrupted 6 steps
+    p, o = p0, o0
+    for i in range(6):
+        p, o, _ = step_fn(p, o, batch(i))
+    ref = p
+    # interrupted at 3 + checkpoint + restore + continue
+    p, o = p0, o0
+    for i in range(3):
+        p, o, _ = step_fn(p, o, batch(i))
+    ck.save(str(tmp_path), 3, (p, o), extras={"next_step": 3})
+    (p2, o2), ex = ck.restore(str(tmp_path), 3,
+                              (jax.tree.map(jnp.zeros_like, p),
+                               jax.tree.map(jnp.zeros_like, o)))
+    for i in range(ex["next_step"], 6):
+        p2, o2, _ = step_fn(p2, o2, batch(i))
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_accum_equals_full_batch():
+    """accum=4 over B=8 == accum=1 over the same batch (within fp tol)."""
+    import dataclasses
+    cfg = get_smoke("granite-8b")
+    ds = LmDatasetSpec(vocab_size=cfg.vocab_size, seq_len=16)
+    t, l = batch_at(ds, 0, 0, 8)
+    b = {"tokens": t, "labels": l}
+    p, o = init_train_state(jax.random.PRNGKey(0), cfg)
+    s1 = jax.jit(make_train_step(cfg, lambda s: 1e-3, loss_chunk=16))
+    cfg4 = dataclasses.replace(cfg, grad_accum=4)
+    s4 = jax.jit(make_train_step(cfg4, lambda s: 1e-3, loss_chunk=16))
+    p1, _, m1 = s1(p, o, b)
+    p4, _, m4 = s4(p, o, b)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-3
+    for a, c in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=2e-2, atol=2e-4)
+
+
+def test_adamw_step_and_clip():
+    params = {"w": jnp.ones((4,)) * 2.0}
+    grads = {"w": jnp.ones((4,)) * 10.0}
+    st = adamw_init(params)
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["w"])) == pytest.approx(1.0)
+    p2, st2, m = adamw_update(grads, st, params, jnp.asarray(1e-2))
+    assert int(st2.step) == 1
+    assert float(p2["w"][0]) < 2.0  # moved against the gradient
+
+
+def test_schedule_shapes():
+    f = warmup_cosine(1e-3, 10, 100)
+    lrs = [float(f(jnp.asarray(s))) for s in (0, 9, 10, 50, 100, 200)]
+    assert lrs[0] < lrs[1] <= lrs[2] == pytest.approx(1e-3, rel=0.01)
+    assert lrs[3] < lrs[2] and lrs[4] == pytest.approx(1e-4, rel=0.05)
+    assert lrs[5] == lrs[4]
+
+
+def test_lm_data_deterministic_and_sharded():
+    ds = LmDatasetSpec(vocab_size=977, seq_len=32)
+    t1, l1 = batch_at(ds, 7, 3, 8)
+    t2, l2 = batch_at(ds, 7, 3, 8)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    # shards partition the global batch? each shard is its own stream slice
+    s0, _ = batch_at(ds, 7, 3, 8, shard=0, n_shards=2)
+    s1, _ = batch_at(ds, 7, 3, 8, shard=1, n_shards=2)
+    assert s0.shape == (4, 32)
+    assert not np.array_equal(np.asarray(s0), np.asarray(s1))
+    # labels are next-token aligned under the structured process
+    assert float((l1[:, :-1] == t1[:, 1:]).mean()) == 1.0
+
+
+def test_preemption_guard_sigterm():
+    g = PreemptionGuard()
+    assert not g.requested
+    os.kill(os.getpid(), signal.SIGTERM)
+    assert g.requested
+    g.restore()
+
+
+def test_watchdog_flags_straggler():
+    wd = StepWatchdog(threshold=1.5, ema_decay=0.0)
+    import time as _t
+    for dt in (0.01, 0.01, 0.05):
+        wd.start()
+        _t.sleep(dt)
+        wd.stop(0)
+    assert len(wd.events) == 1
+
+
+def test_with_retries():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return 42
+
+    assert with_retries(flaky, n=5, base_delay=0.001) == 42
+    assert len(calls) == 3
