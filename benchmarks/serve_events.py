@@ -1,0 +1,117 @@
+"""Event-serving benchmark: throughput + energy proportionality at scale.
+
+Part 1 — kernel contract: the batched Pallas event-conv kernel (slot axis
+as a grid dimension, interpret mode on CPU) must match the single-stream
+kernel and the pure-jnp reference **bit-for-bit per slab**.
+
+Part 2 — serving sweep: requests at >= 3 sensor-activity levels are served
+through the slot-batched engine at >= 2 slot counts. Modeled energy per
+inference must scale linearly with measured events (R^2 ~ 1, the paper's
+§IV-A3 claim lifted to the serving layer), and per-window wall time should
+grow sublinearly with slot count (the batching win).
+
+    PYTHONPATH=src python -m benchmarks.serve_events [--fast] [--pallas]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sne_net import init_snn, tiny_net
+from repro.data.events_ds import TINY, batch_at
+from repro.kernels.event_conv.ref import selfcheck_batched_bitexact
+from repro.serve.event_engine import EventRequest, EventServeEngine
+from repro.serve.telemetry import summarize
+
+
+def check_batched_kernel_bitexact(n_slots: int = 4) -> None:
+    """Batched kernel (interpret mode) == per-slot single-stream path."""
+    selfcheck_batched_bitexact(N=n_slots, H=12, W=12, Co=8, K=3, Ci=4, E=32)
+    print(f"  batched kernel bit-for-bit vs single-stream kernel and ref "
+          f"({n_slots} slots x 32 events): OK")
+
+
+def _requests_at_activity(seed: int, n: int, thin: float):
+    """n requests with the sensor stream thinned to ``thin`` of its events."""
+    spikes, _ = batch_at(seed, 0, n, TINY)
+    reqs = []
+    for i in range(n):
+        mask = (jax.random.uniform(jax.random.PRNGKey(100 + i),
+                                   spikes[i].shape) < thin)
+        reqs.append(EventRequest.from_dense(i, spikes[i] * mask))
+    return reqs
+
+
+def sweep(slot_counts=(2, 4), activities=(0.25, 0.5, 1.0),
+          n_requests: int = 6, window: int = 4, use_pallas=False,
+          seed: int = 0):
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(seed), spec)
+    rows = []
+    for n_slots in slot_counts:
+        eng = EventServeEngine(spec, params, n_slots=n_slots, window=window,
+                               use_pallas=use_pallas)
+        for thin in activities:
+            reqs = _requests_at_activity(seed, n_requests, thin)
+            t0 = time.time()
+            eng.run(reqs)
+            dt = time.time() - t0
+            assert all(r.done for r in reqs)
+            tele = [r.telemetry for r in reqs]
+            agg = summarize(tele)
+            rows.append({
+                "slots": n_slots, "activity_frac": thin,
+                "events": agg["mean_events"],
+                "activity_meas": agg["mean_activity"],
+                "energy_uj": agg["mean_sne_energy_j"] * 1e6,
+                "sne_ms": agg["mean_sne_time_s"] * 1e3,
+                "par_ms": agg["mean_sne_time_par_s"] * 1e3,
+                "wall_s": dt,
+            })
+    return rows
+
+
+def main(fast: bool = False, use_pallas: bool = False) -> None:
+    print("serve_events [slot-batched event serving; §IV-A3 at the "
+          "serving layer]")
+    check_batched_kernel_bitexact()
+    n_req = 4 if fast else 6
+    rows = sweep(n_requests=n_req, use_pallas=use_pallas)
+    print(f"  {'slots':>5} {'thin':>5} {'events':>8} {'act%':>6} "
+          f"{'uJ/inf':>8} {'sne_ms':>7} {'par_ms':>7} {'wall_s':>7}")
+    for r in rows:
+        print(f"  {r['slots']:>5} {r['activity_frac']:>5.2f} "
+              f"{r['events']:>8.0f} {r['activity_meas'] * 100:>6.2f} "
+              f"{r['energy_uj']:>8.3f} {r['sne_ms']:>7.3f} "
+              f"{r['par_ms']:>7.3f} {r['wall_s']:>7.2f}")
+
+    # proportionality across the whole sweep. Modeled latency is exactly
+    # linear in events (120 ns/event); energy is *near*-linear because the
+    # telemetry feeds each request's measured activity into the power
+    # model, which varies weakly below the 5% calibration point.
+    xs = [r["events"] for r in rows]
+    r2_t = float(np.corrcoef(xs, [r["sne_ms"] for r in rows])[0, 1] ** 2)
+    r2_e = float(np.corrcoef(xs, [r["energy_uj"] for r in rows])[0, 1] ** 2)
+    print(f"  time-vs-events linearity   R^2 = {r2_t:.6f}  (claim: 1.0)")
+    print(f"  energy-vs-events linearity R^2 = {r2_e:.5f}   (claim: ~1.0)")
+    assert r2_t > 0.9999, r2_t
+    assert r2_e > 0.98, r2_e
+    # more activity => more events => more energy, at every slot count
+    for n_slots in sorted({r["slots"] for r in rows}):
+        sub = [r for r in rows if r["slots"] == n_slots]
+        evs = [r["events"] for r in sub]
+        es = [r["energy_uj"] for r in sub]
+        assert evs == sorted(evs) and es == sorted(es), (n_slots, evs, es)
+    # layer-parallel mapping (mode 1) must not be slower than serial
+    assert all(r["par_ms"] <= r["sne_ms"] + 1e-12 for r in rows)
+    print("  proportionality holds across "
+          f"{len(set(r['activity_frac'] for r in rows))} activity levels x "
+          f"{len(set(r['slots'] for r in rows))} slot counts")
+
+
+if __name__ == "__main__":
+    main(fast="--fast" in sys.argv, use_pallas="--pallas" in sys.argv)

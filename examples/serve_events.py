@@ -1,0 +1,76 @@
+"""Serve concurrent DVS event streams through the slot-batched engine.
+
+    PYTHONPATH=src python examples/serve_events.py [--requests 8] \
+        [--slots 4] [--window 4] [--oracle]
+
+Synthetic DVS recordings (tiny config for CPU) are admitted into the
+fixed-slot event engine; all active slots advance together through the
+jitted per-window step, with conv layers scattering every slot's event
+batch in one batched Pallas launch. Each completed inference reports its
+measured event counts mapped through the analytic SNE hardware model —
+latency, energy, and activity per request.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.sne_net import init_snn, tiny_net
+from repro.data.events_ds import TINY, batch_at
+from repro.serve.event_engine import EventRequest, EventServeEngine
+from repro.serve.telemetry import proportionality_r2, summarize
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--window", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--oracle", action="store_true",
+                    help="use the pure-jnp kernel oracle instead of the "
+                    "Pallas kernel (interpret mode on CPU)")
+    args = ap.parse_args()
+
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(args.seed), spec)
+    eng = EventServeEngine(spec, params, n_slots=args.slots,
+                           window=args.window,
+                           use_pallas=False if args.oracle else None)
+
+    spikes, labels = batch_at(args.seed, 0, args.requests, TINY)
+    reqs = [EventRequest.from_dense(i, spikes[i])
+            for i in range(args.requests)]
+    print(f"=== serving {args.requests} event streams "
+          f"({args.slots} slots, window {args.window}, "
+          f"{'oracle' if args.oracle else 'pallas'}) ===")
+
+    t0 = time.time()
+    eng.run(reqs)
+    dt = time.time() - t0
+    assert all(r.done for r in reqs)
+
+    print(f"{'req':>4} {'pred':>4} {'label':>5} {'events':>8} {'act%':>6} "
+          f"{'sne_ms':>7} {'par_ms':>7} {'uJ':>7} {'drops':>5}")
+    for r, lab in zip(reqs, np.asarray(labels)):
+        t = r.telemetry
+        print(f"{r.uid:>4} {r.prediction:>4} {int(lab):>5} "
+              f"{t.total_events:>8.0f} {t.activity * 100:>6.2f} "
+              f"{t.sne_time_s * 1e3:>7.2f} {t.sne_time_par_s * 1e3:>7.2f} "
+              f"{t.sne_energy_j * 1e6:>7.2f} "
+              f"{t.input_dropped + int(sum(t.inter_layer_dropped)):>5}")
+
+    agg = summarize([r.telemetry for r in reqs])
+    occ = sum(r.n_timesteps for r in reqs) / (
+        eng.stats["windows"] * args.window * args.slots)
+    print(f"done in {dt:.2f}s wall | {eng.stats['windows']} windows | "
+          f"mean occupancy {occ:.2f}")
+    print(f"modeled: {agg['modeled_rate_hz']:.0f} inf/s | "
+          f"{agg['mean_sne_energy_j'] * 1e6:.2f} uJ/inf | "
+          f"energy-vs-events R^2 = "
+          f"{proportionality_r2([r.telemetry for r in reqs]):.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -98,17 +98,56 @@ def time_per_event_s(cfg: SneConfig) -> float:
 
 
 def inference_time_s(cfg: SneConfig, total_events: float,
-                     n_parallel_slices: int | None = None) -> float:
+                     n_parallel_slices: int | None = None,
+                     per_layer_events: Sequence[float] | None = None) -> float:
     """Events are consumed serially per slice; layers mapped to different
-    slices run in parallel (paper §III-D5 mapping mode 1).  With layer-
-    parallel mapping the critical path is the busiest slice; the default
-    conservatively assumes the whole stream is serialised (mode 2)."""
-    del n_parallel_slices
-    return total_events * time_per_event_s(cfg)
+    slices run in parallel (paper §III-D5 mapping mode 1).
+
+    * ``n_parallel_slices=None`` (default) — mapping mode 2: the whole
+      stream is serialised through one logical slice (conservative).
+    * ``n_parallel_slices=k`` with ``per_layer_events`` — mapping mode 1:
+      layers are assigned greedily (longest-processing-time first) to the
+      ``k`` slices and the critical path is the busiest slice's total.
+      This is the achievable figure; prefer it whenever layer counts are
+      known.
+    * ``n_parallel_slices=k`` without layer counts — idealized balance
+      bound ``total_events / k``, which assumes at least ``k`` layers
+      with perfectly balanced loads. With fewer or imbalanced layers the
+      real critical path is longer (at least the busiest layer), so treat
+      this branch as a lower bound, not an attainable latency.
+
+    ``k`` is clamped to ``cfg.n_slices`` — one layer group per physical
+    slice is the most the C-XBAR can route concurrently.
+    """
+    tpe = time_per_event_s(cfg)
+    if n_parallel_slices is None:
+        if per_layer_events is not None:
+            raise ValueError("per_layer_events given without "
+                             "n_parallel_slices — pass k to get mapping "
+                             "mode 1, or drop the layer counts for mode 2")
+        return total_events * tpe
+    if n_parallel_slices < 1:
+        raise ValueError(f"n_parallel_slices={n_parallel_slices} < 1")
+    k = min(n_parallel_slices, cfg.n_slices)
+    if per_layer_events is None:
+        return total_events / k * tpe
+    layer_sum = sum(per_layer_events)
+    if abs(layer_sum - total_events) > 1e-6 * max(1.0, total_events):
+        raise ValueError(
+            f"per_layer_events sums to {layer_sum}, inconsistent with "
+            f"total_events={total_events}")
+    loads = [0.0] * k
+    for ev_n in sorted(per_layer_events, reverse=True):
+        loads[loads.index(min(loads))] += ev_n
+    return max(loads) * tpe
 
 
 def inference_energy_j(cfg: SneConfig, total_events: float,
                        activity: float = 0.05) -> float:
+    """Energy is mapping-invariant: the same events trigger the same SOPs
+    at ~0.221 pJ/SOP whether layers run serial or slice-parallel, so this
+    is always power x *serial* time. Parallel mapping shortens latency
+    (see :func:`inference_time_s`), it does not cut energy."""
     return power_w(cfg, activity) * inference_time_s(cfg, total_events)
 
 

@@ -84,17 +84,58 @@ class EventFormat:
 DEFAULT_FORMAT = EventFormat()
 
 
-def pack_events(stream: EventStream, fmt: EventFormat = DEFAULT_FORMAT) -> jnp.ndarray:
-    """Pack an EventStream into uint32 words (memory format, Fig. 1)."""
-    op_s, t_s, c_s, x_s, y_s = fmt.shifts
-    for name, arr, bits in (
+def _pack_fields(stream: EventStream, fmt: EventFormat):
+    return (
         ("op", stream.op, fmt.op_bits),
         ("t", stream.t, fmt.t_bits),
         ("c", stream.c, fmt.c_bits),
         ("x", stream.x, fmt.x_bits),
         ("y", stream.y, fmt.y_bits),
-    ):
-        del name, arr, bits  # range enforcement happens via masking below
+    )
+
+
+def pack_violations(stream: EventStream,
+                    fmt: EventFormat = DEFAULT_FORMAT) -> jnp.ndarray:
+    """Count *valid* events whose fields do not fit the packed format.
+
+    jit-safe (returns a traced int32 scalar) — the mask-and-count face of
+    range enforcement, usable as an overflow-style health metric where
+    :func:`pack_events`'s eager raise is unavailable (inside jit).
+    """
+    bad = jnp.zeros_like(stream.valid)
+    for _, arr, bits in _pack_fields(stream, fmt):
+        bad = bad | (arr < 0) | (arr >= (1 << bits))
+    return jnp.sum((bad & stream.valid).astype(jnp.int32))
+
+
+def pack_events(stream: EventStream, fmt: EventFormat = DEFAULT_FORMAT,
+                check: bool = True) -> jnp.ndarray:
+    """Pack an EventStream into uint32 words (memory format, Fig. 1).
+
+    Round-trip guarantee: ``unpack_events(pack_events(s), s.valid)``
+    reproduces every *valid* slot of ``s`` exactly, provided each field of
+    each valid slot fits its bit budget (``0 <= field < 2**bits``).
+    Padding slots carry no guarantee — their fields are masked modulo the
+    bit width (e.g. the sentinel ``t`` of a padding slot wraps).
+
+    With ``check=True`` (default) out-of-range fields in valid slots raise
+    ``ValueError`` when the arrays are concrete; under a jit trace the
+    eager check is unavailable, so callers inside jit should consult
+    :func:`pack_violations` instead. ``check=False`` skips validation and
+    silently masks (the hardware DMA behaviour).
+    """
+    op_s, t_s, c_s, x_s, y_s = fmt.shifts
+    if check and not any(isinstance(f, jax.core.Tracer) for f in stream):
+        import numpy as _np
+        valid = _np.asarray(stream.valid)
+        for name, arr, bits in _pack_fields(stream, fmt):
+            a = _np.asarray(arr)[valid]
+            if a.size and (a.min() < 0 or a.max() >= (1 << bits)):
+                raise ValueError(
+                    f"pack_events: field '{name}' of a valid event is out "
+                    f"of range for {bits} bits (min={a.min()}, "
+                    f"max={a.max()}); enlarge EventFormat.{name}_bits or "
+                    f"pre-mask with check=False")
     mask = lambda v, b: jnp.uint32(v.astype(jnp.uint32) & ((1 << b) - 1))
     word = (
         (mask(stream.op, fmt.op_bits) << op_s)

@@ -43,6 +43,10 @@ class LifParams:
             raise ValueError("event path requires leak >= 0")
         if self.threshold <= 0:
             raise ValueError("event path requires threshold > 0")
+        if self.leak_mode not in ("toward_zero", "subtract"):
+            raise ValueError(f"unknown leak mode {self.leak_mode!r}")
+        if self.reset_mode not in ("zero", "subtract"):
+            raise ValueError(f"unknown reset mode {self.reset_mode!r}")
 
 
 def apply_leak(v: jnp.ndarray, leak, dt, mode: str) -> jnp.ndarray:

@@ -37,28 +37,32 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _event_conv_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *, K: int,
-                       n_events: int):
-    """One grid step: consume all events against one channel slab.
+def _event_conv_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
+                               K: int, n_events: int):
+    """One grid step: one slot's event batch against one channel slab.
 
-    ev_ref:   (E, 3) int32 in SMEM-like memory — event (x, y, c).
-    gate_ref: (E, 1) float32 — 1.0 valid / 0.0 padding.
-    w_ref:    (K, K, Ci, CO_BLK) float32 — *flipped* weights (host pre-flips).
-    v_ref:    (Hp, Wp, CO_BLK) float32 — membrane slab (input).
-    o_ref:    (Hp, Wp, CO_BLK) float32 — membrane slab (output, aliased).
+    The slot axis only selects which event batch / membrane slab is
+    resident, exactly like the C-XBAR steering one stream to one slice;
+    the single-stream path is the N=1 special case of this kernel.
+
+    ev_ref:   (1, E, 3) int32 — this slot's events (x, y, c).
+    gate_ref: (1, E, 1) float32 — 1.0 valid / 0.0 padding.
+    w_ref:    (K, K, Ci, CO_BLK) float32 — flipped weights, shared by slots.
+    v_ref:    (1, Hp, Wp, CO_BLK) float32 — this slot's membrane slab.
+    o_ref:    (1, Hp, Wp, CO_BLK) float32 — output slab.
     """
     # Bring the slab into registers/VMEM once; all events accumulate on it.
     o_ref[...] = v_ref[...]
 
     def body(i, _):
-        x = ev_ref[i, 0]
-        y = ev_ref[i, 1]
-        c = ev_ref[i, 2]
-        g = gate_ref[i, 0]
+        x = ev_ref[0, i, 0]
+        y = ev_ref[0, i, 1]
+        c = ev_ref[0, i, 2]
+        g = gate_ref[0, i, 0]
         # (K, K, CO_BLK) patch for this event's input channel, gated.
         patch = w_ref[:, :, c, :] * g
-        cur = o_ref[pl.dslice(x, K), pl.dslice(y, K), :]
-        o_ref[pl.dslice(x, K), pl.dslice(y, K), :] = cur + patch
+        cur = o_ref[0, pl.dslice(x, K), pl.dslice(y, K), :]
+        o_ref[0, pl.dslice(x, K), pl.dslice(y, K), :] = cur + patch
         return ()
 
     jax.lax.fori_loop(0, n_events, body, ())
@@ -71,7 +75,9 @@ def event_conv_pallas(v: jnp.ndarray, weights: jnp.ndarray,
     """Scatter-accumulate an event batch into the membrane state.
 
     Matches :func:`repro.kernels.event_conv.ref.event_conv_ref` bit-for-bit
-    (float32 adds happen in the same order per channel slab).
+    (float32 adds happen in the same order per channel slab). This is the
+    single-stream entry point — one kernel body serves both it and the
+    batched path, so the two can never drift apart.
 
     Args:
       v:        (Hp, Wp, Co) halo-padded membrane state.
@@ -80,27 +86,60 @@ def event_conv_pallas(v: jnp.ndarray, weights: jnp.ndarray,
       ev_gate:  (E,) float32 validity gate.
       co_blk:   output-channel block size (lane dimension of the slab).
     """
-    Hp, Wp, Co = v.shape
+    return event_conv_batched_pallas(v[None], weights, ev_xyc[None],
+                                     ev_gate[None], co_blk=co_blk,
+                                     interpret=interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("co_blk", "interpret"))
+def event_conv_batched_pallas(v: jnp.ndarray, weights: jnp.ndarray,
+                              ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                              co_blk: int = 128, interpret: bool = False):
+    """Scatter N slots' event batches into N membrane slabs in one launch.
+
+    The batch (slot) axis is a grid dimension: grid step ``(n, co)`` owns
+    slot *n*'s ``(Hp, Wp, CO_BLK)`` slab and consumes slot *n*'s event
+    batch against it. Weights are shared across slots (one model serving
+    many streams — the C-XBAR multicast of a weight set to all slices).
+
+    Per-slab accumulation order matches the single-stream kernel exactly,
+    so outputs are bit-for-bit equal to running ``event_conv_pallas`` per
+    slot (and to the per-slot reference).
+
+    Args:
+      v:        (N, Hp, Wp, Co) halo-padded membrane states, one per slot.
+      weights:  (K, K, Ci, Co) conv weights, shared (unflipped).
+      ev_xyc:   (N, E, 3) int32 events per slot; halo coordinates.
+      ev_gate:  (N, E) float validity gates (0.0 = padding slot).
+      co_blk:   output-channel block size.
+    """
+    N, Hp, Wp, Co = v.shape
     K = weights.shape[0]
-    E = ev_xyc.shape[0]
+    if ev_xyc.shape[0] != N or ev_gate.shape[0] != N:
+        raise ValueError(
+            f"slot-axis mismatch: v has {N} slots, events "
+            f"{ev_xyc.shape[0]}, gates {ev_gate.shape[0]}")
+    E = ev_xyc.shape[1]
     co_blk = min(co_blk, Co)
     if Co % co_blk:
         raise ValueError(f"Co={Co} not divisible by co_blk={co_blk}")
     w_f = jnp.flip(jnp.flip(weights, 0), 1)
-    gate2 = ev_gate.astype(v.dtype).reshape(E, 1)
+    gate3 = ev_gate.astype(v.dtype).reshape(N, E, 1)
 
-    grid = (Co // co_blk,)
+    grid = (N, Co // co_blk)
     return pl.pallas_call(
-        functools.partial(_event_conv_kernel, K=K, n_events=E),
+        functools.partial(_event_conv_batched_kernel, K=K, n_events=E),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((E, 3), lambda co: (0, 0)),              # events: replicated
-            pl.BlockSpec((E, 1), lambda co: (0, 0)),              # gates: replicated
+            pl.BlockSpec((1, E, 3), lambda n, co: (n, 0, 0)),   # slot events
+            pl.BlockSpec((1, E, 1), lambda n, co: (n, 0, 0)),   # slot gates
             pl.BlockSpec((K, K, weights.shape[2], co_blk),
-                         lambda co: (0, 0, 0, co)),               # weight slab
-            pl.BlockSpec((Hp, Wp, co_blk), lambda co: (0, 0, co)),  # v slab
+                         lambda n, co: (0, 0, 0, co)),          # shared weights
+            pl.BlockSpec((1, Hp, Wp, co_blk),
+                         lambda n, co: (n, 0, 0, co)),          # slot v slab
         ],
-        out_specs=pl.BlockSpec((Hp, Wp, co_blk), lambda co: (0, 0, co)),
+        out_specs=pl.BlockSpec((1, Hp, Wp, co_blk),
+                               lambda n, co: (n, 0, 0, co)),
         out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
         interpret=interpret,
-    )(ev_xyc, gate2, w_f, v)
+    )(ev_xyc, gate3, w_f, v)

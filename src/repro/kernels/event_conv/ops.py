@@ -9,8 +9,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.event_conv.kernel import event_conv_pallas
-from repro.kernels.event_conv.ref import event_conv_ref
+from repro.kernels.event_conv.kernel import (event_conv_batched_pallas,
+                                             event_conv_pallas)
+from repro.kernels.event_conv.ref import (event_conv_batched_ref,
+                                          event_conv_ref)
 
 
 def _on_tpu() -> bool:
@@ -29,3 +31,20 @@ def event_conv(v: jnp.ndarray, weights: jnp.ndarray, ev_xyc: jnp.ndarray,
         return event_conv_ref(v, weights, ev_xyc, ev_gate)
     return event_conv_pallas(v, weights, ev_xyc, ev_gate, co_blk=co_blk,
                              interpret=not _on_tpu())
+
+
+def event_conv_batched(v: jnp.ndarray, weights: jnp.ndarray,
+                       ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                       co_blk: int = 128,
+                       use_pallas: bool | None = None) -> jnp.ndarray:
+    """Accumulate N slots' event batches into N membrane slabs at once.
+
+    The slot axis is a grid dimension of a single ``pallas_call`` (the TPU
+    analogue of the C-XBAR broadcasting event streams across engine
+    slices); weights are shared across slots. Same auto-selection rules as
+    :func:`event_conv`.
+    """
+    if use_pallas is False:
+        return event_conv_batched_ref(v, weights, ev_xyc, ev_gate)
+    return event_conv_batched_pallas(v, weights, ev_xyc, ev_gate,
+                                     co_blk=co_blk, interpret=not _on_tpu())

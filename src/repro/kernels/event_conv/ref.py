@@ -42,3 +42,53 @@ def event_conv_ref(v: jnp.ndarray, weights: jnp.ndarray,
 
     v, _ = jax.lax.scan(body, v, (ev_xyc, ev_gate))
     return v
+
+
+def event_conv_batched_ref(v: jnp.ndarray, weights: jnp.ndarray,
+                           ev_xyc: jnp.ndarray,
+                           ev_gate: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the batched kernel: the single-stream oracle per slot.
+
+    Args:
+      v:       (N, Hp, Wp, Co) membrane states, one per slot.
+      weights: (K, K, Ci, Co) shared convolution weights.
+      ev_xyc:  (N, E, 3) per-slot event coordinates.
+      ev_gate: (N, E) per-slot gates.
+
+    vmap over the slot axis keeps the per-slab accumulation order identical
+    to running :func:`event_conv_ref` slot by slot, so the batched kernel's
+    bit-for-bit claim is checked against exactly the single-stream path.
+    """
+    return jax.vmap(event_conv_ref, in_axes=(0, None, 0, 0))(
+        v, weights, ev_xyc, ev_gate)
+
+
+def selfcheck_batched_bitexact(N: int, H: int, W: int, Co: int, K: int,
+                               Ci: int, E: int, seed: int = 0) -> None:
+    """Assert the batched kernel == per-slot kernel == oracle, bit-for-bit.
+
+    One source of truth for the equivalence contract, shared by the test
+    suite and `benchmarks/serve_events.py` so the two can't drift apart.
+    Raises AssertionError on any mismatch.
+    """
+    import numpy as np
+
+    from repro.kernels.event_conv.ops import event_conv, event_conv_batched
+
+    rng = np.random.default_rng(seed)
+    Hp, Wp = H + K - 1, W + K - 1
+    v = jnp.asarray(rng.normal(size=(N, Hp, Wp, Co)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)).astype(np.float32))
+    xyc = jnp.asarray(np.stack([rng.integers(0, H, (N, E)),
+                                rng.integers(0, W, (N, E)),
+                                rng.integers(0, Ci, (N, E))],
+                               -1).astype(np.int32))
+    gate = jnp.asarray((rng.random((N, E)) < 0.8).astype(np.float32))
+    batched = np.asarray(event_conv_batched(v, w, xyc, gate, co_blk=Co))
+    ref = np.asarray(event_conv_batched_ref(v, w, xyc, gate))
+    per_slot = np.stack([
+        np.asarray(event_conv(v[i], w, xyc[i], gate[i], co_blk=Co))
+        for i in range(N)])
+    assert (batched == ref).all(), "batched kernel != reference oracle"
+    assert (batched == per_slot).all(), \
+        "batched kernel != per-slot single-stream kernel"

@@ -1,0 +1,482 @@
+"""Slot-batched continuous serving of concurrent DVS event streams.
+
+The LM serving engine (`repro.serve.engine`) batches token decode over
+fixed slots; this module is its event-domain twin — the missing subsystem
+between "one DVS recording at a time" (`core/sne_net.event_apply` over
+`core/econv.event_forward`) and a production event-serving system. It mirrors the SNE macro-architecture
+(paper §III-D):
+
+  * **slots == engine slices** — a fixed-capacity set of concurrent
+    inferences, each owning one batched row of every layer's membrane
+    state (static shapes are the XLA constraint, exactly the constraint
+    that sized the ASIC's per-slice state memories);
+  * **collector** — the host-side stage that merges per-slot event streams
+    into padded per-window event batches, reusing the
+    ``EventStream`` capacity/overflow semantics from `core/events.py` as
+    back-pressure: a (slot, timestep) bucket that exceeds its static
+    capacity drops the excess and *counts* it (FIFO overflow), and
+    admission blocks when no slot is free (queue back-pressure);
+  * **batched step == C-XBAR broadcast** — all active slots advance
+    together through one jitted per-window step; conv layers scatter all
+    slots' event batches into all slots' membrane slabs in a single
+    ``pallas_call`` with a batch grid dimension
+    (`kernels.event_conv.event_conv_batched`), the TPU analogue of the
+    C-XBAR multicasting an event stream across parallel engine slices.
+
+Work in the synaptic path is proportional to measured events (the paper's
+energy-proportionality), and every completed request carries a telemetry
+record mapping its measured event counts through the analytic hardware
+model (`serve/telemetry.py`).
+
+Execution semantics: per timestep and per layer the step computes
+``leak -> scatter(events) -> clip -> fire -> reset``, which is exactly
+`core.lif.lif_step` with the dense synaptic current replaced by the event
+scatter — so engine outputs match the dense path (`sne_net.dense_apply`)
+up to float summation order, and the conv scatter itself is bit-for-bit
+the single-stream kernel per slab.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.econv import EConvParams, EConvSpec, _halo
+from repro.core.engine import SneConfig
+from repro.core.lif import apply_leak, fire_and_reset
+from repro.core.sne_net import SNNSpec
+from repro.kernels.event_conv.ops import event_conv_batched
+from repro.serve.telemetry import RequestTelemetry, request_telemetry
+
+
+@dataclasses.dataclass
+class EventRequest:
+    """One inference over an event recording (the serving unit of work)."""
+
+    uid: int
+    stream: ev.EventStream          # time-sorted UPDATE events
+    n_timesteps: int
+    dropped_at_ingest: int = 0      # overflow counted when the stream was built
+    # filled on completion:
+    class_counts: Optional[np.ndarray] = None
+    prediction: Optional[int] = None
+    telemetry: Optional[RequestTelemetry] = None
+    done: bool = False
+    # memo so run()'s up-front pass and try_admit don't scan the stream twice
+    _validated: bool = dataclasses.field(default=False, repr=False)
+
+    @staticmethod
+    def from_dense(uid: int, spikes: jnp.ndarray,
+                   capacity: Optional[int] = None) -> "EventRequest":
+        """Build a request from a dense ``(T, H, W, C)`` spike tensor."""
+        if capacity is None:
+            n = int(jnp.sum((spikes != 0).astype(jnp.int32)))
+            capacity = max(8, ((n + 7) // 8) * 8)
+        stream = ev.dense_to_events(spikes, capacity)
+        dropped = int(ev.overflow_count(spikes, capacity))
+        return EventRequest(uid=uid, stream=stream,
+                            n_timesteps=int(spikes.shape[0]),
+                            dropped_at_ingest=dropped)
+
+
+# the halo rule is single-sourced in econv._halo; these two helpers are the
+# slot-batched (4D) variants of econv's 3D interior accessors
+def _interior(vp: jnp.ndarray, h: int) -> jnp.ndarray:
+    if h == 0:
+        return vp
+    return vp[:, h:vp.shape[1] - h, h:vp.shape[2] - h, :]
+
+
+def _write_interior(vp: jnp.ndarray, x: jnp.ndarray, h: int) -> jnp.ndarray:
+    if h == 0:
+        return x
+    return vp.at[:, h:vp.shape[1] - h, h:vp.shape[2] - h, :].set(x)
+
+
+def _frame_to_events(s: jnp.ndarray, cap: int):
+    """Slot-batched dense spike frames -> padded event lists.
+
+    s: (N, H, W, C) binary spike frames. Returns ``(xyc (N,cap,3),
+    gate (N,cap), n_drop (N,))``. Event order is row-major (the same order
+    ``dense_to_events`` emits within a timestep); overflow beyond ``cap``
+    is dropped and counted — the inter-layer FIFO back-pressure.
+    """
+    N, H, W, C = s.shape
+    S = H * W * C
+    cap = min(cap, S)
+    flat = s.reshape(N, S)
+    nz = flat != 0
+    # first `cap` nonzero sites in row-major order: nonzero sites keep
+    # their flat index as sort key, zeros get the sentinel S; top_k of the
+    # negated keys is O(S log cap) vs a full argsort's O(S log S).
+    idx = jax.lax.broadcasted_iota(jnp.int32, (N, S), 1)
+    key = jnp.where(nz, idx, S)
+    order = -jax.lax.top_k(-key, cap)[0]                          # (N, cap)
+    gate = (order < S).astype(s.dtype)
+    order = jnp.minimum(order, S - 1)                             # clamp pads
+    x = order // (W * C)
+    y = (order // C) % W
+    c = order % C
+    xyc = jnp.stack([x, y, c], axis=-1)
+    n = jnp.sum(nz.astype(jnp.int32), axis=1)
+    n_drop = jnp.maximum(n - cap, 0)
+    return xyc, gate, n_drop
+
+
+def _scatter_batched(p: EConvParams, lspec: EConvSpec, vp: jnp.ndarray,
+                     xyc: jnp.ndarray, gate: jnp.ndarray, co_blk: int,
+                     use_pallas: Optional[bool]) -> jnp.ndarray:
+    """Accumulate all slots' event batches into all slots' membranes."""
+    if lspec.kind == "conv":
+        # shift into halo coordinates (same arithmetic as econv._scatter_event)
+        off = jnp.asarray([lspec.padding, lspec.padding, 0], jnp.int32)
+        return event_conv_batched(vp, p.w, xyc + off, gate,
+                                  co_blk=min(co_blk, lspec.out_channels),
+                                  use_pallas=use_pallas)
+    if lspec.kind == "pool":
+        s_ = lspec.stride
+
+        def one(vps, xy, g):
+            val = jnp.take(p.w, xy[:, 2]) * g
+            return vps.at[xy[:, 0] // s_, xy[:, 1] // s_, xy[:, 2]].add(val)
+
+        return jax.vmap(one)(vp, xyc, gate)
+    # fc: flatten (x, y, c) -> weight-matrix rows, sum the gated rows
+    H, W, C = lspec.in_shape
+    flat = (xyc[..., 0] * W + xyc[..., 1]) * C + xyc[..., 2]       # (N, E)
+    rows = jnp.take(p.w, flat, axis=0) * gate[..., None]           # (N, E, D)
+    return vp + jnp.sum(rows, axis=1)[:, None, None, :]
+
+
+def _layer_timestep(p: EConvParams, lspec: EConvSpec, vp: jnp.ndarray,
+                    xyc: jnp.ndarray, gate: jnp.ndarray,
+                    alive_t: jnp.ndarray, co_blk: int,
+                    use_pallas: Optional[bool]):
+    """One layer x one timestep for every slot: leak -> scatter -> fire.
+
+    ``alive_t`` (N,) freezes slots whose request has no timestep here (the
+    tail of a window past a short request) — their state and spikes are
+    held/zeroed so a frozen slot is bit-identical to not stepping it.
+    """
+    lp = lspec.lif
+    h = _halo(lspec)
+    interior = _interior(vp, h)
+    vp_l = _write_interior(vp, apply_leak(interior, lp.leak, 1, lp.leak_mode), h)
+    vp_s = _scatter_batched(p, lspec, vp_l, xyc, gate, co_blk, use_pallas)
+    v = _interior(vp_s, h)
+    if lp.state_clip is not None:
+        v = jnp.clip(v, -lp.state_clip, lp.state_clip)
+    v, s = fire_and_reset(v, lp)
+    vp_new = _write_interior(vp_s, v, h)
+    m = alive_t.reshape(-1, 1, 1, 1)
+    return jnp.where(m > 0, vp_new, vp), s * m
+
+
+def _window_step(params: Sequence[EConvParams], states, class_counts,
+                 ev_xyc, ev_gate, alive, *, spec: SNNSpec,
+                 caps: Tuple[int, ...], co_blk: int,
+                 use_pallas: Optional[bool]):
+    """Advance every slot through one window of timesteps (jitted).
+
+    Args:
+      states:       tuple of per-layer membrane slabs, each (N, Hp, Wp, C).
+      class_counts: (N, n_classes) running rate-decode accumulator.
+      ev_xyc:       (W, N, E0, 3) collector output — layer-0 events binned
+                    by timestep-within-window, per slot.
+      ev_gate:      (W, N, E0) validity gates.
+      alive:        (W, N) 1.0 where the slot has a real timestep there.
+
+    Returns new states, class_counts, per-layer per-slot consumed-event
+    counts (L, N) and inter-layer overflow drops (L, N) for this window.
+    """
+    L = len(spec.layers)
+    N = class_counts.shape[0]
+
+    def one_t(carry, xs_t):
+        states, class_counts, counts, drops = carry
+        xyc, gate, alive_t = xs_t
+        states = list(states)
+        s = None
+        for l, (p, lspec) in enumerate(zip(params, spec.layers)):
+            if l > 0:
+                xyc, gate, n_drop = _frame_to_events(s, caps[l])
+                drops = drops.at[l].add(n_drop)
+            counts = counts.at[l].add(jnp.sum(gate, axis=1))
+            states[l], s = _layer_timestep(p, lspec, states[l], xyc, gate,
+                                           alive_t, co_blk, use_pallas)
+        class_counts = class_counts + jnp.sum(s, axis=(1, 2))
+        return (tuple(states), class_counts, counts, drops), None
+
+    counts0 = jnp.zeros((L, N), jnp.float32)
+    drops0 = jnp.zeros((L, N), jnp.int32)
+    (states, class_counts, counts, drops), _ = jax.lax.scan(
+        one_t, (tuple(states), class_counts, counts0, drops0),
+        (ev_xyc, ev_gate, alive))
+    return states, class_counts, counts, drops
+
+
+def default_step_capacities(spec: SNNSpec, activity: float = 0.25,
+                            slack: float = 4.0,
+                            align: int = 8) -> List[int]:
+    """Per-layer *per-timestep* input-event capacities (collector + FIFOs).
+
+    Unlike `sne_net.default_capacities` (whole-inference buffers), these
+    size one timestep's bucket; ``activity`` is the expected per-step
+    fraction of active input sites and ``slack`` over-provisions like the
+    ASIC FIFO sizing.
+    """
+    caps = []
+    for l in spec.layers:
+        caps.append(ev.capacity_for((1,) + l.in_shape, activity, slack,
+                                    align=align))
+    return caps
+
+
+class EventServeEngine:
+    """Continuous slot-batched inference over concurrent event streams."""
+
+    def __init__(self, spec: SNNSpec, params: Sequence[EConvParams],
+                 n_slots: int, window: int = 4,
+                 step_capacities: Optional[Sequence[int]] = None,
+                 sne_cfg: Optional[SneConfig] = None,
+                 n_parallel_slices: Optional[int] = None,
+                 co_blk: int = 128, use_pallas: Optional[bool] = None):
+        if n_slots < 1 or window < 1:
+            raise ValueError("need n_slots >= 1 and window >= 1")
+        # fail fast — not inside _finish after a request was fully served
+        if n_parallel_slices is not None and n_parallel_slices < 1:
+            raise ValueError(f"n_parallel_slices={n_parallel_slices} < 1")
+        self.spec = spec
+        self.params = list(params)
+        self.N = n_slots
+        self.W = window
+        self.caps = tuple(step_capacities
+                          if step_capacities is not None
+                          else default_step_capacities(spec))
+        if len(self.caps) != len(spec.layers):
+            raise ValueError("need one per-timestep capacity per layer")
+        self.cfg = sne_cfg or SneConfig()
+        self.n_parallel_slices = n_parallel_slices
+        L = len(spec.layers)
+
+        self.states = tuple(self._zero_state(l) for l in spec.layers)
+        self.class_counts = jnp.zeros((n_slots, spec.n_classes), jnp.float32)
+
+        # host-side slot bookkeeping (the collector's view)
+        self.slot_req: List[Optional[EventRequest]] = [None] * n_slots
+        self.active = np.zeros((n_slots,), bool)
+        self.tau = np.zeros((n_slots,), np.int64)        # local time cursor
+        self.ptr = np.zeros((n_slots,), np.int64)        # event array cursor
+        self._ev: List[Optional[np.ndarray]] = [None] * n_slots  # (M,4) t,x,y,c
+        self.acc_counts = np.zeros((L, n_slots), np.float64)
+        self.acc_drops = np.zeros((L, n_slots), np.float64)
+        self.collector_drops = np.zeros((n_slots,), np.int64)  # capacity
+        self.oor_drops = np.zeros((n_slots,), np.int64)        # out-of-range
+        self.windows = np.zeros((n_slots,), np.int64)
+        self.admit_time = np.zeros((n_slots,), np.float64)
+        self.stats = {"windows": 0, "admitted": 0, "completed": 0,
+                      "collector_dropped": 0, "out_of_range_dropped": 0}
+
+        self._step = jax.jit(partial(
+            _window_step, spec=spec, caps=self.caps, co_blk=co_blk,
+            use_pallas=use_pallas))
+
+    # --- helpers -----------------------------------------------------------
+
+    def _zero_state(self, lspec: EConvSpec) -> jnp.ndarray:
+        Ho, Wo, Co = lspec.out_shape
+        h = _halo(lspec)
+        return jnp.zeros((self.N, Ho + 2 * h, Wo + 2 * h, Co), jnp.float32)
+
+    def _reset_slot_state(self, slot: int) -> None:
+        self.states = tuple(v.at[slot].set(0.0) for v in self.states)
+        self.class_counts = self.class_counts.at[slot].set(0.0)
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    @property
+    def n_free(self) -> int:
+        return self.N - self.n_active
+
+    # --- admission (queue back-pressure) -----------------------------------
+
+    def validate_request(self, req: EventRequest) -> None:
+        """Raise if a request can never be served (checked pre-admission)."""
+        if req._validated:
+            return
+        if req.n_timesteps < 1:
+            raise ValueError(f"request {req.uid}: n_timesteps < 1")
+        s = req.stream
+        n_other_op = int(np.sum(np.asarray(s.valid)
+                                & (np.asarray(s.op) != ev.OP_UPDATE)))
+        if n_other_op:
+            # the batched window step has no RST/FIRE datapath; refusing is
+            # the loud alternative to silently diverging from event_forward
+            raise ValueError(
+                f"request {req.uid}: stream contains {n_other_op} valid "
+                f"non-UPDATE events (OP_RST/OP_FIRE); the serving engine "
+                f"supports UPDATE-only streams — run such streams through "
+                f"core.sne_net.event_apply instead")
+        req._validated = True
+
+    def try_admit(self, req: EventRequest) -> bool:
+        """Admit into a free slot; False when the engine is full.
+
+        The free-slot check runs first so a full engine answers False
+        without rescanning the head-of-queue stream every window.
+        """
+        free = np.nonzero(~self.active)[0]
+        if len(free) == 0:
+            return False
+        self.validate_request(req)
+        slot = int(free[0])
+        s = req.stream
+        keep = np.asarray(s.valid) & (np.asarray(s.op) == ev.OP_UPDATE)
+        arr = np.stack([np.asarray(s.t)[keep], np.asarray(s.x)[keep],
+                        np.asarray(s.y)[keep], np.asarray(s.c)[keep]],
+                       axis=1).astype(np.int64)
+        arr = arr[np.argsort(arr[:, 0], kind="stable")]  # collector sort
+        H, W, C = self.spec.in_shape
+        in_range = ((arr[:, 1] >= 0) & (arr[:, 1] < H)
+                    & (arr[:, 2] >= 0) & (arr[:, 2] < W)
+                    & (arr[:, 3] >= 0) & (arr[:, 3] < C)
+                    & (arr[:, 0] >= 0) & (arr[:, 0] < req.n_timesteps))
+        self._ev[slot] = arr[in_range]
+        self.slot_req[slot] = req
+        self.active[slot] = True
+        self.tau[slot] = 0
+        self.ptr[slot] = 0
+        self.acc_counts[:, slot] = 0.0
+        self.acc_drops[:, slot] = 0.0
+        # out-of-range events are a data-quality loss, not back-pressure —
+        # kept distinct from collector capacity drops so operators tuning
+        # step_capacities see only what capacity can actually fix
+        n_oor = int(np.sum(~in_range))
+        self.collector_drops[slot] = 0
+        self.oor_drops[slot] = n_oor
+        self.stats["out_of_range_dropped"] += n_oor
+        self.windows[slot] = 0
+        self.admit_time[slot] = time.time()
+        # slot state is already zero: engines start zeroed and _finish
+        # re-zeroes on release, so admission needs no device writes
+        self.stats["admitted"] += 1
+        return True
+
+    # --- the collector ------------------------------------------------------
+
+    def _collect_window(self):
+        """Bin each active slot's next ``W`` timesteps of events.
+
+        Returns (ev_xyc (W,N,E0,3) int32, gate (W,N,E0) f32, alive (W,N)
+        f32). A (slot, timestep) bucket holds at most ``caps[0]`` events;
+        the excess is dropped and counted (EventStream overflow semantics
+        — the serving-side FIFO back-pressure).
+        """
+        W, N, E0 = self.W, self.N, self.caps[0]
+        xyc = np.zeros((W, N, E0, 3), np.int32)
+        gate = np.zeros((W, N, E0), np.float32)
+        alive = np.zeros((W, N), np.float32)
+        for slot in np.nonzero(self.active)[0]:
+            req = self.slot_req[slot]
+            arr = self._ev[slot]
+            t0 = self.tau[slot]
+            n_alive = min(self.W, req.n_timesteps - t0)
+            alive[:n_alive, slot] = 1.0
+            p = self.ptr[slot]
+            # arr is time-sorted (try_admit), so window and per-timestep
+            # boundaries are binary searches, not Python scans.
+            end = p + int(np.searchsorted(arr[p:, 0], t0 + n_alive, "left"))
+            win = arr[p:end]
+            self.ptr[slot] = end
+            bounds = np.searchsorted(win[:, 0],
+                                     np.arange(t0, t0 + n_alive + 1))
+            for dt in range(n_alive):
+                rows = win[bounds[dt]:bounds[dt + 1]]
+                if len(rows) > E0:
+                    dropped = len(rows) - E0
+                    self.collector_drops[slot] += dropped
+                    self.stats["collector_dropped"] += dropped
+                    rows = rows[:E0]
+                k = len(rows)
+                if k:
+                    xyc[dt, slot, :k, 0] = rows[:, 1]
+                    xyc[dt, slot, :k, 1] = rows[:, 2]
+                    xyc[dt, slot, :k, 2] = rows[:, 3]
+                    gate[dt, slot, :k] = 1.0
+        return jnp.asarray(xyc), jnp.asarray(gate), jnp.asarray(alive)
+
+    # --- stepping -----------------------------------------------------------
+
+    def step(self) -> int:
+        """Advance all active slots one window; returns #active before."""
+        n_active = self.n_active
+        if n_active == 0:
+            return 0
+        ev_xyc, gate, alive = self._collect_window()
+        self.states, self.class_counts, counts, drops = self._step(
+            self.params, self.states, self.class_counts, ev_xyc, gate, alive)
+        self.acc_counts += np.asarray(counts, np.float64)
+        self.acc_drops += np.asarray(drops, np.float64)
+        self.stats["windows"] += 1
+        for slot in np.nonzero(self.active)[0]:
+            self.tau[slot] += min(self.W,
+                                  self.slot_req[slot].n_timesteps
+                                  - self.tau[slot])
+            self.windows[slot] += 1
+            if self.tau[slot] >= self.slot_req[slot].n_timesteps:
+                self._finish(int(slot))
+        return n_active
+
+    def _finish(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        cc = np.asarray(self.class_counts[slot])
+        req.class_counts = cc
+        req.prediction = int(np.argmax(cc))
+        per_layer = self.acc_counts[:, slot]
+        sops = [n * l.updates_per_event()
+                for n, l in zip(per_layer, self.spec.layers)]
+        sites = sum(l.in_shape[0] * l.in_shape[1] * l.in_shape[2]
+                    for l in self.spec.layers)
+        req.telemetry = request_telemetry(
+            self.cfg, uid=req.uid, n_timesteps=req.n_timesteps,
+            n_windows=int(self.windows[slot]),
+            per_layer_events=list(per_layer), per_layer_sops=sops,
+            input_sites=sites,
+            input_dropped=req.dropped_at_ingest
+            + int(self.collector_drops[slot]) + int(self.oor_drops[slot]),
+            inter_layer_dropped=list(self.acc_drops[:, slot]),
+            wall_time_s=time.time() - self.admit_time[slot],
+            n_parallel_slices=self.n_parallel_slices)
+        req.done = True
+        self.slot_req[slot] = None
+        self.active[slot] = False
+        self._ev[slot] = None
+        self._reset_slot_state(slot)
+        self.stats["completed"] += 1
+
+    def run(self, requests: Sequence[EventRequest],
+            max_windows: int = 100_000) -> None:
+        """Continuous batching: admit as slots free, step until drained.
+
+        The whole queue is validated before any work starts, so one
+        malformed request rejects the batch up front instead of stranding
+        already-admitted requests mid-flight.
+        """
+        for r in requests:
+            self.validate_request(r)
+        pending = list(requests)
+        for _ in range(max_windows):
+            while pending and self.try_admit(pending[0]):
+                pending.pop(0)
+            if self.step() == 0 and not pending:
+                break
+        else:
+            raise RuntimeError("max_windows exceeded before drain")

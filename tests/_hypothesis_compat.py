@@ -1,0 +1,116 @@
+"""Deterministic fallback for ``hypothesis`` when it isn't installed.
+
+The container image does not ship hypothesis and nothing may be
+pip-installed, so the property tests fall back to this shim: ``@given``
+expands each strategy into a deterministic sample grid and runs the test
+once per drawn combination (bounded by ``settings(max_examples=...)``).
+Coverage is a fixed sample rather than adaptive search — boundary values
+first, then low-discrepancy interior points — which keeps the properties
+exercised and the suite reproducible.
+
+Usage (drop-in):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+Only the API surface used by this repo is implemented: ``given`` with
+keyword strategies, ``settings(max_examples=..., deadline=...)``, and
+``strategies.integers(min, max)`` / ``strategies.floats(min, max)``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+from typing import Any, Callable, Iterable, List
+
+
+class _Strategy:
+    """A bounded value source with a deterministic sample schedule."""
+
+    def __init__(self, samples: Callable[[int], List[Any]]):
+        self._samples = samples
+
+    def samples(self, n: int) -> List[Any]:
+        return self._samples(n)
+
+
+class strategies:  # noqa: N801 — mimics the hypothesis module name
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2 ** 16) -> _Strategy:
+        def gen(n: int) -> List[int]:
+            span = max_value - min_value
+            out: List[int] = []
+            # boundaries first, then a golden-ratio low-discrepancy walk
+            for v in (min_value, max_value, min_value + span // 2):
+                if v not in out:
+                    out.append(v)
+            x = 0.5
+            while len(out) < n:
+                x = (x + 0.6180339887498949) % 1.0
+                v = min_value + int(x * span)
+                if v not in out:
+                    out.append(v)
+                elif span < n:       # tiny ranges: allow repeats to fill
+                    out.append(v)
+            return out[:n]
+        return _Strategy(gen)
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+        def gen(n: int) -> List[float]:
+            span = max_value - min_value
+            out = [min_value, max_value, min_value + 0.5 * span]
+            x = 0.5
+            while len(out) < n:
+                x = (x + 0.6180339887498949) % 1.0
+                out.append(min_value + x * span)
+            return out[:n]
+        return _Strategy(gen)
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    """Records ``max_examples`` on the test for ``given`` to consume."""
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Run the test once per deterministic strategy-sample combination.
+
+    Single-strategy tests get ``max_examples`` draws; multi-strategy tests
+    get a *diagonal* (zipped) schedule capped at ``max_examples`` total
+    runs — paired samples like (min,min), (max,max), (mid,mid), not the
+    cross product, so boundary *combinations* (min,max) are not covered.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_compat_max_examples",
+                        getattr(fn, "_compat_max_examples", 10))
+            names = list(strategy_kwargs)
+            per = {k: s.samples(n) for k, s in strategy_kwargs.items()}
+            if len(names) == 1:
+                combos: Iterable = ([v] for v in per[names[0]])
+            else:
+                # zip the schedules (diagonal) so runs stay at max_examples
+                combos = zip(*(per[k] for k in names))
+            for values in itertools.islice(combos, n):
+                fn(*args, **dict(zip(names, values)), **kwargs)
+
+        # hide the strategy parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategy_kwargs])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -1,0 +1,310 @@
+"""Event-serving subsystem: batched kernel, collector, engine, telemetry.
+
+Covers the PR-1 checklist: pack/unpack round-trip across EventFormat
+variants, overflow/back-pressure accounting, batched-kernel vs per-slot
+reference equivalence (bit-for-bit), and admission/release/drain of
+EventServeEngine — plus the pack_events range checks and mapping mode 1
+of the analytic model.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:           # container has no hypothesis; see the shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import events as ev
+from repro.core.engine import SneConfig, inference_time_s
+from repro.core.sne_net import dense_apply, init_snn, spike_counts, tiny_net
+from repro.data.events_ds import TINY, batch_at
+from repro.kernels.event_conv.ops import event_conv_batched
+from repro.kernels.event_conv.ref import selfcheck_batched_bitexact
+from repro.serve.event_engine import (EventRequest, EventServeEngine,
+                                      default_step_capacities)
+from repro.serve.telemetry import (proportionality_r2, request_telemetry,
+                                   summarize)
+
+# ---------------------------------------------------------------------------
+# pack/unpack round trip across EventFormat variants (+ range checks)
+# ---------------------------------------------------------------------------
+
+FORMATS = [
+    ev.EventFormat(),                                       # default (Fig. 1)
+    ev.EventFormat(op_bits=2, t_bits=10, c_bits=6, x_bits=7, y_bits=7),
+    ev.EventFormat(op_bits=2, t_bits=6, c_bits=2, x_bits=4, y_bits=4),
+    ev.EventFormat(op_bits=2, t_bits=16, c_bits=2, x_bits=6, y_bits=6),
+]
+
+
+def _stream_for(fmt: ev.EventFormat, seed: int, n: int = 64):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, n))
+    mk = lambda bits: jnp.asarray(
+        rng.integers(0, 1 << bits, size=n).astype(np.int32))
+    valid = jnp.asarray(np.arange(n) < k)
+    return ev.EventStream(t=mk(fmt.t_bits), x=mk(fmt.x_bits),
+                          y=mk(fmt.y_bits), c=mk(fmt.c_bits),
+                          op=mk(fmt.op_bits), valid=valid)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=12, deadline=None)
+def test_pack_roundtrip_all_formats(seed):
+    """Valid slots survive pack->unpack exactly, for every field split."""
+    for fmt in FORMATS:
+        s = _stream_for(fmt, seed)
+        back = ev.unpack_events(ev.pack_events(s, fmt), s.valid, fmt)
+        m = np.asarray(s.valid)
+        for a, b in zip(s, back):
+            np.testing.assert_array_equal(np.asarray(a)[m],
+                                          np.asarray(b)[m])
+
+
+def test_pack_raises_on_out_of_range_valid_slot():
+    s = ev.EventStream(t=jnp.array([1 << 12], jnp.int32),
+                       x=jnp.zeros(1, jnp.int32), y=jnp.zeros(1, jnp.int32),
+                       c=jnp.zeros(1, jnp.int32), op=jnp.zeros(1, jnp.int32),
+                       valid=jnp.array([True]))
+    with pytest.raises(ValueError, match="field 't'"):
+        ev.pack_events(s)
+    # same fields on a padding slot are fine (masked, no guarantee)
+    s_pad = s._replace(valid=jnp.array([False]))
+    ev.pack_events(s_pad)
+    # mask-and-count face: jit-safe violation counter
+    assert int(ev.pack_violations(s)) == 1
+    assert int(ev.pack_violations(s_pad)) == 0
+    # check=False silently masks (hardware DMA behaviour)
+    assert ev.pack_events(s, check=False).dtype == jnp.uint32
+
+
+def test_pack_checked_under_jit_does_not_crash():
+    s = _stream_for(ev.DEFAULT_FORMAT, 0)
+    words = jax.jit(ev.pack_events)(s)
+    assert words.dtype == jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# batched kernel vs per-slot reference (bit-for-bit)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,H,W,Co,K,Ci,E", [
+    (1, 10, 10, 8, 3, 2, 16),
+    (3, 10, 10, 8, 3, 2, 16),
+    (4, 8, 8, 16, 5, 4, 32),
+    (2, 12, 12, 4, 1, 1, 8),
+])
+def test_batched_kernel_matches_per_slot_reference(N, H, W, Co, K, Ci, E):
+    # shared checker: batched == per-slot kernel == oracle, bit-for-bit
+    selfcheck_batched_bitexact(N, H, W, Co, K, Ci, E, seed=N + Co + E)
+
+
+def test_batched_kernel_slot_isolation():
+    """Events of slot i must never touch slot j's slab."""
+    rng = np.random.default_rng(0)
+    v = jnp.zeros((2, 8, 8, 4), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 2, 4)).astype(np.float32))
+    xyc = jnp.asarray([[[2, 2, 0]], [[3, 3, 1]]], jnp.int32)
+    gate = jnp.asarray([[1.0], [0.0]], jnp.float32)   # slot 1 gated off
+    out = np.asarray(event_conv_batched(v, w, xyc, gate, co_blk=4))
+    assert np.abs(out[0]).sum() > 0
+    np.testing.assert_array_equal(out[1], 0.0)
+
+
+def test_batched_kernel_rejects_slot_mismatch():
+    v = jnp.zeros((2, 8, 8, 4), jnp.float32)
+    w = jnp.zeros((3, 3, 2, 4), jnp.float32)
+    xyc = jnp.zeros((3, 1, 3), jnp.int32)
+    gate = jnp.zeros((3, 1), jnp.float32)
+    with pytest.raises(ValueError, match="slot-axis mismatch"):
+        event_conv_batched(v, w, xyc, gate, co_blk=4)
+
+
+# ---------------------------------------------------------------------------
+# collector overflow / back-pressure accounting
+# ---------------------------------------------------------------------------
+
+def _mini_engine(n_slots=2, window=4, caps=None, **kw):
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    eng = EventServeEngine(spec, params, n_slots=n_slots, window=window,
+                           step_capacities=caps, use_pallas=False, **kw)
+    return spec, params, eng
+
+
+def test_collector_overflow_drops_and_counts():
+    spec, params, eng = _mini_engine(
+        n_slots=1, caps=[8] + default_step_capacities(tiny_net())[1:])
+    T, H, W, C = (spec.n_timesteps,) + spec.in_shape
+    spikes = jnp.zeros((T, H, W, C)).at[0, :4, :4, 0].set(1.0)  # 16 > cap 8
+    req = EventRequest.from_dense(0, spikes)
+    eng.run([req])
+    assert req.done
+    t = req.telemetry
+    assert t.input_dropped == 8                      # 16 events, bucket of 8
+    assert t.per_layer_events[0] == 8.0              # consumed = capacity
+    assert eng.stats["collector_dropped"] == 8
+
+
+def test_ingest_overflow_counted():
+    spikes = jnp.ones((2, 4, 4, 1))                  # 32 events
+    req = EventRequest.from_dense(0, spikes, capacity=16)
+    assert req.dropped_at_ingest == 16
+    assert int(req.stream.count()) == 16
+
+
+def test_admission_backpressure_when_full():
+    spec, params, eng = _mini_engine(n_slots=2)
+    spikes, _ = batch_at(0, 0, 3, TINY)
+    reqs = [EventRequest.from_dense(i, spikes[i]) for i in range(3)]
+    assert eng.try_admit(reqs[0]) and eng.try_admit(reqs[1])
+    assert not eng.try_admit(reqs[2])                # engine full
+    assert eng.n_free == 0
+    while eng.step():
+        pass
+    assert eng.n_free == 2                           # slots released
+    assert eng.try_admit(reqs[2])
+
+
+# ---------------------------------------------------------------------------
+# engine admission / release / drain + correctness vs the dense path
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_dense_path_per_slot():
+    """Served class counts == dense-path rate decode, request by request."""
+    spec, params, eng = _mini_engine(n_slots=2, window=4)
+    spikes, _ = batch_at(0, 0, 4, TINY)
+    reqs = [EventRequest.from_dense(i, spikes[i]) for i in range(4)]
+    eng.run(reqs)
+    for i, r in enumerate(reqs):
+        dense_out, _ = dense_apply(params, spec, spikes[i])
+        want = np.asarray(spike_counts(dense_out))
+        np.testing.assert_allclose(r.class_counts, want, atol=1e-4)
+        assert r.prediction == int(np.argmax(want))
+
+
+def test_engine_continuous_batching_drains_more_requests_than_slots():
+    spec, params, eng = _mini_engine(n_slots=2, window=8)
+    spikes, _ = batch_at(1, 0, 5, TINY)
+    reqs = [EventRequest.from_dense(i, spikes[i]) for i in range(5)]
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    assert eng.stats["admitted"] == 5
+    assert eng.stats["completed"] == 5
+    assert eng.n_active == 0
+    # slot state is zeroed after release
+    for v in eng.states:
+        np.testing.assert_array_equal(np.asarray(v), 0.0)
+
+
+def test_engine_variable_length_requests():
+    """A short request in a long window must freeze cleanly at its T."""
+    spec, params, eng = _mini_engine(n_slots=2, window=8)
+    spikes, _ = batch_at(2, 0, 2, TINY)
+    short = spikes[0][:5]                            # T=5, window 8
+    reqs = [EventRequest.from_dense(0, short),
+            EventRequest.from_dense(1, spikes[1])]   # T=16
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    d0, _ = dense_apply(params, spec, short)
+    np.testing.assert_allclose(reqs[0].class_counts,
+                               np.asarray(spike_counts(d0)), atol=1e-4)
+    assert reqs[0].telemetry.n_windows == 1
+    assert reqs[1].telemetry.n_windows == 2
+
+
+def test_engine_slot_isolation_identical_results_any_cohort():
+    """A request's result must not depend on its slot neighbours."""
+    spec, params, _ = _mini_engine()
+    spikes, _ = batch_at(3, 0, 3, TINY)
+    solo_eng = EventServeEngine(spec, params, n_slots=1, window=4,
+                                use_pallas=False)
+    solo = EventRequest.from_dense(0, spikes[0])
+    solo_eng.run([solo])
+    _, _, eng = _mini_engine(n_slots=3)
+    cohort = [EventRequest.from_dense(i, spikes[i]) for i in range(3)]
+    eng.run(cohort)
+    np.testing.assert_array_equal(solo.class_counts, cohort[0].class_counts)
+    assert solo.telemetry.total_events == cohort[0].telemetry.total_events
+
+
+def test_engine_rejects_non_update_opcodes():
+    """The batched step has no RST/FIRE datapath — refuse loudly."""
+    spec, params, eng = _mini_engine()
+    spikes, _ = batch_at(5, 0, 1, TINY)
+    req = EventRequest.from_dense(0, spikes[0])
+    rst = ev.EventStream(
+        t=jnp.array([1], jnp.int32), x=jnp.array([0], jnp.int32),
+        y=jnp.array([0], jnp.int32), c=jnp.array([0], jnp.int32),
+        op=jnp.array([ev.OP_RST], jnp.int32), valid=jnp.array([True]))
+    req.stream = ev.concatenate_streams(req.stream, rst)
+    with pytest.raises(ValueError, match="non-UPDATE"):
+        eng.try_admit(req)
+
+
+def test_engine_rejects_bad_config():
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    with pytest.raises(ValueError):
+        EventServeEngine(spec, params, n_slots=0)
+    with pytest.raises(ValueError):
+        EventServeEngine(spec, params, n_slots=1, step_capacities=[4])
+
+
+# ---------------------------------------------------------------------------
+# telemetry + analytic-model mapping mode 1
+# ---------------------------------------------------------------------------
+
+def test_inference_time_mapping_modes():
+    cfg = SneConfig(n_slices=8)
+    t_serial = inference_time_s(cfg, 100.0)
+    # ideal-balance bound
+    assert inference_time_s(cfg, 100.0, n_parallel_slices=4) == \
+        pytest.approx(t_serial / 4)
+    # busiest-slice critical path with measured layer counts
+    t = inference_time_s(cfg, 100.0, n_parallel_slices=2,
+                         per_layer_events=[60.0, 30.0, 10.0])
+    assert t == pytest.approx(0.6 * t_serial)
+    # clamped to physical slices
+    assert inference_time_s(cfg, 100.0, n_parallel_slices=64) == \
+        pytest.approx(t_serial / 8)
+    with pytest.raises(ValueError):
+        inference_time_s(cfg, 100.0, n_parallel_slices=0)
+
+
+def test_request_telemetry_fields():
+    cfg = SneConfig()
+    t = request_telemetry(cfg, uid=7, n_timesteps=16, n_windows=4,
+                          per_layer_events=[80.0, 20.0],
+                          per_layer_sops=[800.0, 100.0],
+                          input_sites=288, input_dropped=3,
+                          inter_layer_dropped=[0.0, 2.0],
+                          n_parallel_slices=2)
+    assert t.total_events == 100.0
+    assert t.total_sops == 900.0
+    assert t.sne_time_par_s <= t.sne_time_s
+    assert t.sne_energy_j == pytest.approx(t.sne_power_w * t.sne_time_s)
+    assert t.sne_rate_hz == pytest.approx(1.0 / t.sne_time_s)
+    agg = summarize([t, t])
+    assert agg["n_requests"] == 2
+    assert agg["total_events"] == 200.0
+    assert agg["total_dropped"] == 10.0
+
+
+def test_served_energy_proportionality():
+    """More input events => proportionally more modeled serving energy."""
+    spec, params, eng = _mini_engine(n_slots=2)
+    spikes, _ = batch_at(4, 0, 2, TINY)
+    tele = []
+    for frac in (0.3, 0.6, 1.0):
+        mask = (jax.random.uniform(jax.random.PRNGKey(9),
+                                   spikes[0].shape) < frac)
+        req = EventRequest.from_dense(0, spikes[0] * mask)
+        eng.run([req])
+        tele.append(req.telemetry)
+    evs = [t.total_events for t in tele]
+    es = [t.sne_energy_j for t in tele]
+    assert evs == sorted(evs) and es == sorted(es)
+    assert proportionality_r2(tele) > 0.97
