@@ -1,0 +1,92 @@
+"""CI perf/quality gate: compare BENCH_*.json against committed baselines.
+
+    python benchmarks/check_regression.py [--baseline benchmarks/baselines.json]
+        [--tolerance 0.2] BENCH_serve_events.json BENCH_idle_skip.json
+
+Each benchmark emits an ``events_per_joule`` headline (measured events
+served per modeled Joule — the paper's energy-proportionality, as a single
+serving-level figure of merit).  The gate fails when any current value
+falls more than ``tolerance`` (default 20%) below its committed baseline;
+values far *above* baseline print a reminder to ratchet the baseline up.
+``BENCH_idle_skip.json`` additionally must keep its >= 2x kernel-launch
+reduction at 90% idle.
+
+Baselines correspond to the reduced (``--fast``, oracle-kernel)
+configuration that CI's bench-smoke job runs; the gate cross-checks the
+recorded config and refuses to compare mismatched runs rather than
+produce a misleading verdict.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check_one(result: dict, base: dict, tolerance: float) -> list:
+    errors = []
+    name = result.get("bench", "?")
+    if result.get("config") != base.get("config"):
+        errors.append(
+            f"{name}: config mismatch — run {result.get('config')} vs "
+            f"baseline {base.get('config')} (regenerate the baseline or "
+            f"run the benchmark in the baseline configuration)")
+        return errors
+    cur = float(result["events_per_joule"])
+    ref = float(base["events_per_joule"])
+    floor = ref * (1.0 - tolerance)
+    verdict = "OK" if cur >= floor else "REGRESSION"
+    print(f"  {name}: events/J {cur:.3e} vs baseline {ref:.3e} "
+          f"(floor {floor:.3e}) -> {verdict}")
+    if cur < floor:
+        errors.append(f"{name}: events/J regressed >"
+                      f"{tolerance * 100:.0f}% ({cur:.3e} < {floor:.3e})")
+    elif cur > ref * (1.0 + tolerance):
+        print(f"  {name}: note — events/J improved >"
+              f"{tolerance * 100:.0f}%; consider ratcheting the baseline")
+    if "launch_ratio_90" in base:
+        ratio = float(result.get("launch_ratio_90", 0.0))
+        need = float(base["launch_ratio_90"])
+        print(f"  {name}: launch ratio at 90% idle {ratio:.1f}x "
+              f"(required >= {need:.1f}x)")
+        if ratio < need:
+            errors.append(f"{name}: idle-skip launch reduction {ratio:.1f}x "
+                          f"< required {need:.1f}x")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", nargs="+", help="BENCH_*.json files")
+    ap.add_argument("--baseline", default="benchmarks/baselines.json")
+    ap.add_argument("--tolerance", type=float, default=0.2)
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baselines = {k: v for k, v in json.load(f).items()
+                     if not k.startswith("_")}
+
+    errors = []
+    seen = set()
+    for path in args.results:
+        with open(path) as f:
+            result = json.load(f)
+        name = result.get("bench")
+        if name not in baselines:
+            errors.append(f"{path}: no baseline entry for bench {name!r}")
+            continue
+        seen.add(name)
+        errors.extend(check_one(result, baselines[name], args.tolerance))
+    missing = set(baselines) - seen
+    if missing:
+        errors.append(f"baseline benches never ran: {sorted(missing)} — "
+                      f"a silently-skipped benchmark is not a green gate")
+    if errors:
+        print("\n".join(f"FAIL: {e}" for e in errors), file=sys.stderr)
+        return 1
+    print("regression gate: all benches within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,7 +29,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

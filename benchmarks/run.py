@@ -14,8 +14,8 @@ import traceback
 def main() -> None:
     fast = "--fast" in sys.argv
     from benchmarks import (energy_proportionality, fig4_area,
-                            fig5_perf_energy, roofline, serve_events,
-                            table1_accuracy, table2_soa)
+                            fig5_perf_energy, idle_skip, roofline,
+                            serve_events, table1_accuracy, table2_soa)
     jobs = [
         ("fig4_area", fig4_area.main),
         ("fig5_perf_energy", fig5_perf_energy.main),
@@ -23,6 +23,7 @@ def main() -> None:
         ("table1_accuracy", lambda: table1_accuracy.main(fast=fast)),
         ("energy_proportionality", energy_proportionality.main),
         ("serve_events", lambda: serve_events.main(fast=fast)),
+        ("idle_skip", lambda: idle_skip.main(fast=fast)),
         ("roofline", roofline.main),
     ]
     results = []

@@ -14,11 +14,11 @@ grow sublinearly with slot count (the batching win).
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sne_net import init_snn, tiny_net
@@ -71,6 +71,9 @@ def sweep(slot_counts=(2, 4), activities=(0.25, 0.5, 1.0),
                 "sne_ms": agg["mean_sne_time_s"] * 1e3,
                 "par_ms": agg["mean_sne_time_par_s"] * 1e3,
                 "wall_s": dt,
+                "total_events": agg["total_events"],
+                "total_energy_j": agg["mean_sne_energy_j"]
+                * agg["n_requests"],
             })
     return rows
 
@@ -111,6 +114,20 @@ def main(fast: bool = False, use_pallas: bool = False) -> None:
     print("  proportionality holds across "
           f"{len(set(r['activity_frac'] for r in rows))} activity levels x "
           f"{len(set(r['slots'] for r in rows))} slot counts")
+
+    ev_per_j = (sum(r["total_events"] for r in rows)
+                / sum(r["total_energy_j"] for r in rows))
+    out = {
+        "bench": "serve_events",
+        "config": {"n_requests": n_req, "use_pallas": bool(use_pallas)},
+        "rows": rows,
+        "events_per_joule": ev_per_j,
+        "time_vs_events_r2": r2_t,
+        "energy_vs_events_r2": r2_e,
+    }
+    with open("BENCH_serve_events.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"  events/J = {ev_per_j:.3e}; wrote BENCH_serve_events.json")
 
 
 if __name__ == "__main__":

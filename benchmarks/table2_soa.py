@@ -1,7 +1,7 @@
 """Table II reproduction: state-of-the-art neuromorphic-engine comparison."""
 from __future__ import annotations
 
-from repro.core.engine import SOA_TABLE, SneConfig, efficiency_tsops_w
+from repro.core.engine import SOA_TABLE
 
 
 def run():

@@ -1,14 +1,26 @@
 """Serve concurrent DVS event streams through the slot-batched engine.
 
     PYTHONPATH=src python examples/serve_events.py [--requests 8] \
-        [--slots 4] [--window 4] [--oracle]
+        [--slots 4] [--window 4] [--oracle] [--no-idle-skip]
+    PYTHONPATH=src python examples/serve_events.py --source file \
+        [--file path/to/recording.npz|.aedat] [--speedup 2000]
 
-Synthetic DVS recordings (tiny config for CPU) are admitted into the
-fixed-slot event engine; all active slots advance together through the
-jitted per-window step, with conv layers scattering every slot's event
-batch in one batched Pallas launch. Each completed inference reports its
-measured event counts mapped through the analytic SNE hardware model —
-latency, energy, and activity per request.
+Two sources:
+
+  * ``--source synthetic`` (default): tiny synthetic DVS recordings are
+    admitted all at once into the fixed-slot event engine.
+  * ``--source file``: a real recording (AEDAT3.1 or the portable .npz
+    event format; default = the bundled sample) is segmented into
+    per-inference requests and *replayed at sensor pace* — the ReplayClient
+    admits each segment at its recording-relative arrival time and paces
+    engine windows to (scaled) sensor time.
+
+All active slots advance together through the jitted per-window step; with
+the window-level idle skip (default on) all-idle (slot, window) pairs
+bypass the batched Pallas launch entirely and their leak is applied
+analytically.  Each completed inference reports its measured event counts
+mapped through the analytic SNE hardware model — latency, energy, and
+activity per request.
 """
 import argparse
 import time
@@ -17,13 +29,24 @@ import jax
 import numpy as np
 
 from repro.core.sne_net import init_snn, tiny_net
-from repro.data.events_ds import TINY, batch_at
+from repro.data.events_ds import (TINY, ReplayClient, batch_at,
+                                  load_recording, sample_recording_path,
+                                  segment_recording)
 from repro.serve.event_engine import EventRequest, EventServeEngine
 from repro.serve.telemetry import proportionality_r2, summarize
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--source", choices=("synthetic", "file"),
+                    default="synthetic")
+    ap.add_argument("--file", default=None,
+                    help="recording path (.npz/.aedat); default = bundled "
+                    "sample (requires --source file)")
+    ap.add_argument("--window-us", type=int, default=1000,
+                    help="sensor time per timestep bin (file source)")
+    ap.add_argument("--speedup", type=float, default=2000.0,
+                    help="replay pace: sensor time / wall time (file source)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--window", type=int, default=4)
@@ -31,41 +54,74 @@ def main():
     ap.add_argument("--oracle", action="store_true",
                     help="use the pure-jnp kernel oracle instead of the "
                     "Pallas kernel (interpret mode on CPU)")
+    ap.add_argument("--no-idle-skip", action="store_true",
+                    help="step every window densely (the pre-skip engine)")
     args = ap.parse_args()
 
     spec = tiny_net()
     params = init_snn(jax.random.PRNGKey(args.seed), spec)
     eng = EventServeEngine(spec, params, n_slots=args.slots,
                            window=args.window,
-                           use_pallas=False if args.oracle else None)
+                           use_pallas=False if args.oracle else None,
+                           idle_skip=not args.no_idle_skip)
 
-    spikes, labels = batch_at(args.seed, 0, args.requests, TINY)
-    reqs = [EventRequest.from_dense(i, spikes[i])
-            for i in range(args.requests)]
-    print(f"=== serving {args.requests} event streams "
-          f"({args.slots} slots, window {args.window}, "
-          f"{'oracle' if args.oracle else 'pallas'}) ===")
+    labels = None
+    client = None
+    if args.source == "file":
+        path = args.file or sample_recording_path()
+        rec = load_recording(path)
+        reqs = segment_recording(rec, spec.in_shape, spec.n_timesteps,
+                                 args.window_us)
+        client = ReplayClient(reqs, spec.n_timesteps, args.window_us,
+                              speedup=args.speedup)
+        print(f"=== replaying {rec.name}: {rec.n_events} events / "
+              f"{rec.duration_us / 1e3:.0f} ms -> {len(reqs)} segment "
+              f"requests ({args.slots} slots, window {args.window}, "
+              f"speedup {args.speedup:g}x, "
+              f"idle_skip={'on' if eng.idle_skip else 'off'}) ===")
+    else:
+        spikes, labels = batch_at(args.seed, 0, args.requests, TINY)
+        reqs = [EventRequest.from_dense(i, spikes[i])
+                for i in range(args.requests)]
+        print(f"=== serving {args.requests} event streams "
+              f"({args.slots} slots, window {args.window}, "
+              f"{'oracle' if args.oracle else 'pallas'}, "
+              f"idle_skip={'on' if eng.idle_skip else 'off'}) ===")
 
     t0 = time.time()
-    eng.run(reqs)
+    if client is not None:
+        client.run(eng)
+    else:
+        eng.run(reqs)
     dt = time.time() - t0
     assert all(r.done for r in reqs)
 
     print(f"{'req':>4} {'pred':>4} {'label':>5} {'events':>8} {'act%':>6} "
-          f"{'sne_ms':>7} {'par_ms':>7} {'uJ':>7} {'drops':>5}")
-    for r, lab in zip(reqs, np.asarray(labels)):
+          f"{'sne_ms':>7} {'par_ms':>7} {'uJ':>7} {'drops':>5} {'skipW':>5}")
+    labs = (np.asarray(labels) if labels is not None
+            else [None] * len(reqs))
+    for r, lab in zip(reqs, labs):
         t = r.telemetry
-        print(f"{r.uid:>4} {r.prediction:>4} {int(lab):>5} "
+        print(f"{r.uid:>4} {r.prediction:>4} "
+              f"{'-' if lab is None else int(lab):>5} "
               f"{t.total_events:>8.0f} {t.activity * 100:>6.2f} "
               f"{t.sne_time_s * 1e3:>7.2f} {t.sne_time_par_s * 1e3:>7.2f} "
               f"{t.sne_energy_j * 1e6:>7.2f} "
-              f"{t.input_dropped + int(sum(t.inter_layer_dropped)):>5}")
+              f"{t.input_dropped + int(sum(t.inter_layer_dropped)):>5} "
+              f"{t.n_skipped_windows:>5}")
 
     agg = summarize([r.telemetry for r in reqs])
     occ = sum(r.n_timesteps for r in reqs) / (
         eng.stats["windows"] * args.window * args.slots)
+    skipped = eng.stats["skipped_slot_windows"]
+    total_sw = skipped + eng.stats["dense_slot_windows"]
     print(f"done in {dt:.2f}s wall | {eng.stats['windows']} windows | "
-          f"mean occupancy {occ:.2f}")
+          f"mean occupancy {occ:.2f} | idle-skipped {skipped}/{total_sw} "
+          f"slot-windows | {eng.stats['kernel_launches']} kernel launches")
+    if client is not None:
+        print(f"replay: slept {client.stats['slept_s']:.2f}s of "
+              f"{client.stats['wall_s']:.2f}s wall "
+              f"({client.stats['stalled_windows']} stalled windows)")
     print(f"modeled: {agg['modeled_rate_hz']:.0f} inf/s | "
           f"{agg['mean_sne_energy_j'] * 1e6:.2f} uJ/inf | "
           f"energy-vs-events R^2 = "

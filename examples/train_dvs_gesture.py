@@ -15,11 +15,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import events as ev
 from repro.core.engine import (SneConfig, inference_energy_j,
-                               inference_rate_hz, summarize_inference)
+                               inference_rate_hz)
 from repro.core.sne_net import (ce_loss, default_capacities, dense_apply,
                                 dvs_gesture_net, event_predict, init_snn,
                                 nmnist_net, predict, quantize_snn, tiny_net)

@@ -33,6 +33,13 @@ class SneConfig:
     state_bits: int = 8
     weight_buffer_sets: int = 256   # on-the-fly selectable filter sets
     supply_v: float = 0.8
+    # Cycles charged per *processed* timestep boundary (the sequencer's FIRE
+    # sweep over the TDM neurons).  0 (default) keeps the paper calibration,
+    # where the 48-cycle event cost amortises all sequencing; set to
+    # ``tdm_neurons`` (64 — one cycle per TDM neuron thresholded) to study
+    # what window-level idle skipping saves: a skipped timestep pays
+    # neither event cycles nor the boundary sweep.
+    cycles_per_boundary: int = 0
 
     @property
     def n_neurons(self) -> int:
@@ -95,6 +102,17 @@ def area_kge(cfg: SneConfig) -> Dict[str, float]:
 def time_per_event_s(cfg: SneConfig) -> float:
     """An input event is consumed in `cycles_per_event` cycles (120 ns)."""
     return cfg.cycles_per_event / cfg.freq_hz
+
+
+def boundary_time_s(cfg: SneConfig, n_boundaries: float) -> float:
+    """Sequencer cost of ``n_boundaries`` processed timestep boundaries.
+
+    Each *processed* (non-skipped) timestep ends with a FIRE sweep; the lazy
+    TLU skip (paper §III-D4.iii, and the serving engine's window-level idle
+    skip) removes this cost for idle timesteps.  Zero under the default
+    calibration (``cycles_per_boundary == 0``).
+    """
+    return n_boundaries * cfg.cycles_per_boundary / cfg.freq_hz
 
 
 def inference_time_s(cfg: SneConfig, total_events: float,

@@ -136,7 +136,8 @@ def pack_events(stream: EventStream, fmt: EventFormat = DEFAULT_FORMAT,
                     f"of range for {bits} bits (min={a.min()}, "
                     f"max={a.max()}); enlarge EventFormat.{name}_bits or "
                     f"pre-mask with check=False")
-    mask = lambda v, b: jnp.uint32(v.astype(jnp.uint32) & ((1 << b) - 1))
+    def mask(v, b):
+        return jnp.uint32(v.astype(jnp.uint32) & ((1 << b) - 1))
     word = (
         (mask(stream.op, fmt.op_bits) << op_s)
         | (mask(stream.t, fmt.t_bits) << t_s)
@@ -152,7 +153,8 @@ def unpack_events(words: jnp.ndarray, valid: jnp.ndarray,
     """Inverse of :func:`pack_events` (stream format decode in the DMA)."""
     op_s, t_s, c_s, x_s, y_s = fmt.shifts
     w = words.astype(jnp.uint32)
-    take = lambda s, b: ((w >> s) & ((1 << b) - 1)).astype(jnp.int32)
+    def take(s, b):
+        return ((w >> s) & ((1 << b) - 1)).astype(jnp.int32)
     return EventStream(
         t=take(t_s, fmt.t_bits),
         x=take(x_s, fmt.x_bits),

@@ -131,3 +131,46 @@ def fire_and_reset(v: jnp.ndarray, p: LifParams) -> Tuple[jnp.ndarray, jnp.ndarr
     else:
         v = v - s * p.threshold
     return v, s
+
+
+def supports_idle_skip(p: LifParams) -> bool:
+    """Whether ``dt`` input-free timesteps can be collapsed exactly.
+
+    The TLU argument (module doc) needs hard resets: after ``reset_mode ==
+    "zero"`` every membrane sits strictly below threshold at a timestep
+    boundary, and with ``leak >= 0`` (enforced by LifParams) no input can
+    push it back over — so an input-free timestep provably emits no spikes.
+    Soft reset ("subtract") can leave ``v >= threshold`` after a fire, and
+    such a neuron fires again on the next boundary without any input, so
+    idle timesteps must then be stepped densely.
+    """
+    return p.reset_mode == "zero"
+
+
+def idle_decay(v: jnp.ndarray, p: LifParams, dt) -> jnp.ndarray:
+    """Advance a membrane through ``dt`` input-free timesteps in one shot.
+
+    Equivalent to iterating ``lif_step(v, 0, p)`` ``dt`` times: each idle
+    step applies leak, clips, thresholds (no neuron can fire — see
+    :func:`supports_idle_skip`), and resets nothing.  Leak collapses
+    analytically (TLU); the clip collapses too because leak only moves the
+    state toward the clip interval ("toward_zero") or monotonically
+    downward ("subtract", where one final clip equals per-step clipping).
+    With a dyadic-rational leak (all shipped configs: 2^-4, 2^-5) every
+    subtraction is exact in float32, so the collapsed form is bit-for-bit
+    the iterated one.
+
+    ``dt`` may be a scalar or any shape broadcastable against ``v`` (the
+    serving engine passes a per-slot ``(N, 1, 1, 1)`` vector); entries with
+    ``dt == 0`` leave the state untouched.
+    """
+    if not supports_idle_skip(p):
+        raise ValueError("idle_decay requires reset_mode='zero' (soft-reset "
+                         "neurons can fire without input; step them densely)")
+    dt = jnp.asarray(dt)
+    out = apply_leak(v, p.leak, dt, p.leak_mode)
+    if p.state_clip is not None:
+        out = jnp.clip(out, -p.state_clip, p.state_clip)
+    # dt == 0 must be a bitwise no-op (apply_leak's sign(v)*|v| normalises
+    # -0.0); jnp.where keeps untouched lanes bit-identical
+    return jnp.where(dt > 0, out, v)

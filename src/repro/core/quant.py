@@ -15,14 +15,12 @@ Two pieces:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.econv import EConvParams, EConvSpec
-from repro.core.lif import LifParams
 
 INT4_MIN, INT4_MAX = -8, 7
 INT8_MIN, INT8_MAX = -128, 127

@@ -162,7 +162,6 @@ def rglru_step_sd(p: Dict, x_t: jnp.ndarray, cache: Dict, sd: Dict,
                   act, frac: float) -> Tuple[jnp.ndarray, Dict, Dict]:
     """Event-gated RG-LRU block decode step (mirror of rglru_block_step)."""
     from repro.models.recurrent import rglru_step
-    B = x_t.shape[0]
     d = x_t.shape[-1]
     dt = x_t.dtype
     xf = x_t[:, 0, :]                                      # (B, d)
@@ -178,7 +177,6 @@ def rglru_step_sd(p: Dict, x_t: jnp.ndarray, cache: Dict, sd: Dict,
     gate = jax.nn.gelu(y2.astype(dt))
     # causal depthwise conv over the ring of the last W-1 inputs
     w = p["conv_w"].astype(dt)
-    W = w.shape[0]
     hist = cache["conv"]                                   # (B, W-1, L)
     window = jnp.concatenate([hist, x1[:, None, :]], axis=1)
     xc = jnp.einsum("bwl,wl->bl", window, w) + p["conv_b"].astype(dt)

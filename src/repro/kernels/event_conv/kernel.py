@@ -120,6 +120,11 @@ def event_conv_batched_pallas(v: jnp.ndarray, weights: jnp.ndarray,
             f"slot-axis mismatch: v has {N} slots, events "
             f"{ev_xyc.shape[0]}, gates {ev_gate.shape[0]}")
     E = ev_xyc.shape[1]
+    if N == 0 or E == 0:
+        # degenerate batch (idle-skip compaction can hand us an empty slot
+        # or event axis) — a scatter of nothing is the identity; skip the
+        # launch instead of building a zero-sized grid
+        return v
     co_blk = min(co_blk, Co)
     if Co % co_blk:
         raise ValueError(f"Co={Co} not divisible by co_blk={co_blk}")

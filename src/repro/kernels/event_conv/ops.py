@@ -43,7 +43,12 @@ def event_conv_batched(v: jnp.ndarray, weights: jnp.ndarray,
     analogue of the C-XBAR broadcasting event streams across engine
     slices); weights are shared across slots. Same auto-selection rules as
     :func:`event_conv`.
+
+    Empty batches (no slots, or a zero-length event axis after idle-skip
+    compaction) return ``v`` unchanged without launching anything.
     """
+    if v.shape[0] == 0 or ev_xyc.shape[1] == 0:
+        return v
     if use_pallas is False:
         return event_conv_batched_ref(v, weights, ev_xyc, ev_gate)
     return event_conv_batched_pallas(v, weights, ev_xyc, ev_gate,

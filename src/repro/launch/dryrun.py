@@ -21,7 +21,6 @@ import time              # noqa: E402
 from typing import Any, Dict, Optional  # noqa: E402
 
 import jax               # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np       # noqa: E402
 
 from repro.configs import (ARCH_IDS, SHAPES, cell_supported,  # noqa: E402

@@ -11,8 +11,8 @@ from __future__ import annotations
 import re
 from typing import Any, Dict, List
 
-from repro.launch.dryrun import (_COLL_KINDS, _line_collective, _COMP_RE,
-                                 _TRIP_RE, _WHILE_RE, _split_computations)
+from repro.launch.dryrun import (_line_collective, _TRIP_RE, _WHILE_RE,
+                                 _split_computations)
 
 _META_RE = re.compile(r'op_name="([^"]*)"')
 

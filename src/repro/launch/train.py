@@ -20,10 +20,8 @@ Production XLA flags (recorded for the real-cluster launch script):
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
-import jax.numpy as jnp
 
 
 def main() -> None:

@@ -29,14 +29,13 @@ Design notes (TPU roofline driven):
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.distributed.sharding import logical, shard_map
+from repro.distributed.sharding import shard_map
 from repro.models.scan_util import xscan
 
 NEG_INF = -1e30

@@ -19,7 +19,6 @@ is a §Perf hillclimb (see launch/dryrun.py --moe=shardmap).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple, Tuple
 
 import jax
@@ -160,7 +159,6 @@ def moe_apply_shardmap(p: ParamTree, x: jnp.ndarray, *, n_experts: int,
         return moe_apply(p, x, n_experts=E, top_k=K,
                          capacity_factor=capacity_factor, act=act,
                          shared=shared)
-    E_local = E // n_model
     T_local = (B // n_data) * (S // (n_model if seq_shard else 1))
     C = _capacity(T_local, E, K, capacity_factor)
     fsdp_axis = "data" if "data" in mesh.shape else None

@@ -112,7 +112,6 @@ def rglru_block_step(p: ParamTree, x_t: jnp.ndarray, state: Dict,
         jnp.einsum("bsd,dl->bsl", x_t, p["w_gate"].astype(dt)))[:, 0]
     # causal depthwise conv over the ring of the last W-1 inputs
     w = p["conv_w"].astype(dt)
-    W = w.shape[0]
     hist = state["conv"]                                  # (B, W-1, L)
     window = jnp.concatenate([hist, x1[:, None, :]], axis=1)  # (B, W, L)
     xc = jnp.einsum("bwl,wl->bl", window, w) + p["conv_b"].astype(dt)

@@ -22,7 +22,6 @@ and the dry-run's in_shardings, so they cannot drift.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -31,8 +30,7 @@ from jax.ad_checkpoint import checkpoint_name
 
 from repro.distributed.sharding import current_mesh, logical
 from repro.models import config as C
-from repro.models.attention import (cache_insert, decode_attention,
-                                    flash_attention)
+from repro.models.attention import decode_attention, flash_attention
 from repro.models.config import LayerSpec, ModelConfig
 from repro.models.frontend import apply_frontend, frontend_decls
 from repro.models.layers import (DeclTree, ParamDecl, ParamTree, ffn_apply,

@@ -142,7 +142,8 @@ def slstm_decls(d_model: int, n_heads: int) -> DeclTree:
 def _slstm_cell(p, zx, ix, fx, ox, state, n_heads):
     """One step. zx..ox: (B,H,hd) pre-activations from x; state f32."""
     c, n, m, h = state                                   # (B,H,hd) each
-    rec = lambda w: jnp.einsum("bhx,hxy->bhy", h, w.astype(jnp.float32))
+    def rec(w):
+        return jnp.einsum("bhx,hxy->bhy", h, w.astype(jnp.float32))
     z = jnp.tanh(zx + rec(p["rz"]))
     li = ix + rec(p["ri"])
     lf = jax.nn.log_sigmoid(fx + rec(p["rf"]))
@@ -160,8 +161,9 @@ def _slstm_pre(p: ParamTree, x: jnp.ndarray, n_heads: int):
     dt = x.dtype
     B, S, d = x.shape
     hd = d // n_heads
-    pre = lambda w: jnp.einsum("bsd,dk->bsk", x, w.astype(dt)) \
-        .reshape(B, S, n_heads, hd).astype(jnp.float32)
+    def pre(w):
+        return jnp.einsum("bsd,dk->bsk", x, w.astype(dt)) \
+            .reshape(B, S, n_heads, hd).astype(jnp.float32)
     return pre(p["wz"]), pre(p["wi"]), pre(p["wf"]), pre(p["wo"])
 
 

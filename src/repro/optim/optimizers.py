@@ -7,7 +7,6 @@ where f32 moments would not fit 16 GB/chip — see configs/llama4_maverick).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -37,7 +36,8 @@ def clip_by_global_norm(grads: ParamTree, max_norm: float) -> Tuple[ParamTree, j
 
 
 def adamw_init(params: ParamTree, moment_dtype=jnp.float32) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, moment_dtype)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       mu=jax.tree.map(zeros, params),
                       nu=jax.tree.map(zeros, params))

@@ -34,6 +34,21 @@ Execution semantics: per timestep and per layer the step computes
 scatter — so engine outputs match the dense path (`sne_net.dense_apply`)
 up to float summation order, and the conv scatter itself is bit-for-bit
 the single-stream kernel per slab.
+
+**Window-level idle skip (the TLU trick at serving scale, §III-D4.iii).**
+With ``idle_skip=True`` (default, requires hard resets) the collector also
+reports a per-slot activity mask for the window.  A (slot, window) pair
+with zero input events provably does zero work anywhere in the network —
+post-reset membranes sit below threshold and ``leak >= 0`` only shrinks
+them, so layer 0 emits nothing, hence layer 1 sees nothing, and so on.
+Such slots bypass the batched step entirely: their leak is *deferred* as a
+per-slot idle-step counter and applied analytically (`core.lif.idle_decay`)
+in one shot right before the slot next participates, exactly the paper's
+time-of-last-update bookkeeping.  Active slots are *compacted* — gathered
+into a dense batch (slot axis bucketed to powers of two, event axis
+trimmed to the window's occupancy) — before the single Pallas launch, and
+results are scattered back.  Active-slot results are bit-for-bit those of
+the dense full-batch path; an all-idle window launches no kernels at all.
 """
 from __future__ import annotations
 
@@ -49,7 +64,8 @@ import numpy as np
 from repro.core import events as ev
 from repro.core.econv import EConvParams, EConvSpec, _halo
 from repro.core.engine import SneConfig
-from repro.core.lif import apply_leak, fire_and_reset
+from repro.core.lif import (apply_leak, fire_and_reset, idle_decay,
+                            supports_idle_skip)
 from repro.core.sne_net import SNNSpec
 from repro.kernels.event_conv.ops import event_conv_batched
 from repro.serve.telemetry import RequestTelemetry, request_telemetry
@@ -179,7 +195,7 @@ def _layer_timestep(p: EConvParams, lspec: EConvSpec, vp: jnp.ndarray,
 
 
 def _window_step(params: Sequence[EConvParams], states, class_counts,
-                 ev_xyc, ev_gate, alive, *, spec: SNNSpec,
+                 ev_xyc, ev_gate, alive, pre_dt, *, spec: SNNSpec,
                  caps: Tuple[int, ...], co_blk: int,
                  use_pallas: Optional[bool]):
     """Advance every slot through one window of timesteps (jitted).
@@ -191,12 +207,17 @@ def _window_step(params: Sequence[EConvParams], states, class_counts,
                     by timestep-within-window, per slot.
       ev_gate:      (W, N, E0) validity gates.
       alive:        (W, N) 1.0 where the slot has a real timestep there.
+      pre_dt:       (N,) deferred idle timesteps per slot, applied as one
+                    analytic decay before stepping (fused here so a slot
+                    re-entering after skipped windows costs no extra
+                    dispatch; all-zero for slots with nothing pending).
 
     Returns new states, class_counts, per-layer per-slot consumed-event
     counts (L, N) and inter-layer overflow drops (L, N) for this window.
     """
     L = len(spec.layers)
     N = class_counts.shape[0]
+    states = _apply_idle_decay(states, pre_dt, spec=spec)
 
     def one_t(carry, xs_t):
         states, class_counts, counts, drops = carry
@@ -219,6 +240,29 @@ def _window_step(params: Sequence[EConvParams], states, class_counts,
         one_t, (tuple(states), class_counts, counts0, drops0),
         (ev_xyc, ev_gate, alive))
     return states, class_counts, counts, drops
+
+
+def _apply_idle_decay(states, dt, *, spec: SNNSpec):
+    """Apply each slot's deferred idle decay to every layer's interior.
+
+    ``dt`` (N,) counts the input-free timesteps accumulated while the slot
+    was being skipped; `core.lif.idle_decay` collapses them analytically
+    (leak + clip) in one elementwise pass.  Slots with ``dt == 0`` come
+    back bit-identical.  Traced inside :func:`_window_step`, so the flush
+    costs no separate dispatch.
+    """
+    dt4 = dt.astype(jnp.float32).reshape(-1, 1, 1, 1)
+    out = []
+    for vp, lspec in zip(states, spec.layers):
+        if not supports_idle_skip(lspec.lif):
+            # soft-reset networks run with idle_skip force-disabled, so
+            # their deferred dt is always zero — pass the slab through
+            out.append(vp)
+            continue
+        h = _halo(lspec)
+        dec = idle_decay(_interior(vp, h), lspec.lif, dt4)
+        out.append(_write_interior(vp, dec, h))
+    return tuple(out)
 
 
 def default_step_capacities(spec: SNNSpec, activity: float = 0.25,
@@ -246,7 +290,8 @@ class EventServeEngine:
                  step_capacities: Optional[Sequence[int]] = None,
                  sne_cfg: Optional[SneConfig] = None,
                  n_parallel_slices: Optional[int] = None,
-                 co_blk: int = 128, use_pallas: Optional[bool] = None):
+                 co_blk: int = 128, use_pallas: Optional[bool] = None,
+                 idle_skip: bool = True):
         if n_slots < 1 or window < 1:
             raise ValueError("need n_slots >= 1 and window >= 1")
         # fail fast — not inside _finish after a request was fully served
@@ -263,6 +308,10 @@ class EventServeEngine:
             raise ValueError("need one per-timestep capacity per layer")
         self.cfg = sne_cfg or SneConfig()
         self.n_parallel_slices = n_parallel_slices
+        # the lazy skip is only exact for hard resets (see core.lif);
+        # soft-reset networks silently fall back to dense stepping
+        self.idle_skip = idle_skip and all(
+            supports_idle_skip(l.lif) for l in spec.layers)
         L = len(spec.layers)
 
         self.states = tuple(self._zero_state(l) for l in spec.layers)
@@ -280,8 +329,16 @@ class EventServeEngine:
         self.oor_drops = np.zeros((n_slots,), np.int64)        # out-of-range
         self.windows = np.zeros((n_slots,), np.int64)
         self.admit_time = np.zeros((n_slots,), np.float64)
+        # idle-skip bookkeeping: deferred leak steps + per-slot accounting
+        self.pending_dt = np.zeros((n_slots,), np.int64)
+        self.dense_ts = np.zeros((n_slots,), np.int64)
+        self.skipped_windows = np.zeros((n_slots,), np.int64)
+        self._n_conv = sum(1 for l in spec.layers if l.kind == "conv")
         self.stats = {"windows": 0, "admitted": 0, "completed": 0,
-                      "collector_dropped": 0, "out_of_range_dropped": 0}
+                      "collector_dropped": 0, "out_of_range_dropped": 0,
+                      "step_calls": 0, "kernel_launches": 0,
+                      "dense_slot_windows": 0, "skipped_slot_windows": 0,
+                      "leak_flushes": 0}
 
         self._step = jax.jit(partial(
             _window_step, spec=spec, caps=self.caps, co_blk=co_blk,
@@ -364,6 +421,9 @@ class EventServeEngine:
         self.oor_drops[slot] = n_oor
         self.stats["out_of_range_dropped"] += n_oor
         self.windows[slot] = 0
+        self.pending_dt[slot] = 0
+        self.dense_ts[slot] = 0
+        self.skipped_windows[slot] = 0
         self.admit_time[slot] = time.time()
         # slot state is already zero: engines start zeroed and _finish
         # re-zeroes on release, so admission needs no device writes
@@ -375,15 +435,21 @@ class EventServeEngine:
     def _collect_window(self):
         """Bin each active slot's next ``W`` timesteps of events.
 
-        Returns (ev_xyc (W,N,E0,3) int32, gate (W,N,E0) f32, alive (W,N)
-        f32). A (slot, timestep) bucket holds at most ``caps[0]`` events;
-        the excess is dropped and counted (EventStream overflow semantics
-        — the serving-side FIFO back-pressure).
+        Returns numpy ``(ev_xyc (W,N,E0,3) int32, gate (W,N,E0) f32,
+        alive (W,N) f32, n_win_ev (N,) int64, max_bucket int)`` —
+        ``n_win_ev`` is each slot's raw event count in this window (the
+        idle-skip activity mask: 0 means the slot provably does no work),
+        ``max_bucket`` the largest single (slot, timestep) bucket fill
+        (the event-axis compaction bound). A bucket holds at most
+        ``caps[0]`` events; the excess is dropped and counted (EventStream
+        overflow semantics — the serving-side FIFO back-pressure).
         """
         W, N, E0 = self.W, self.N, self.caps[0]
         xyc = np.zeros((W, N, E0, 3), np.int32)
         gate = np.zeros((W, N, E0), np.float32)
         alive = np.zeros((W, N), np.float32)
+        n_win_ev = np.zeros((N,), np.int64)
+        max_bucket = 0
         for slot in np.nonzero(self.active)[0]:
             req = self.slot_req[slot]
             arr = self._ev[slot]
@@ -396,6 +462,7 @@ class EventServeEngine:
             end = p + int(np.searchsorted(arr[p:, 0], t0 + n_alive, "left"))
             win = arr[p:end]
             self.ptr[slot] = end
+            n_win_ev[slot] = end - p
             bounds = np.searchsorted(win[:, 0],
                                      np.arange(t0, t0 + n_alive + 1))
             for dt in range(n_alive):
@@ -406,27 +473,44 @@ class EventServeEngine:
                     self.stats["collector_dropped"] += dropped
                     rows = rows[:E0]
                 k = len(rows)
+                max_bucket = max(max_bucket, k)
                 if k:
                     xyc[dt, slot, :k, 0] = rows[:, 1]
                     xyc[dt, slot, :k, 1] = rows[:, 2]
                     xyc[dt, slot, :k, 2] = rows[:, 3]
                     gate[dt, slot, :k] = 1.0
-        return jnp.asarray(xyc), jnp.asarray(gate), jnp.asarray(alive)
+        return xyc, gate, alive, n_win_ev, max_bucket
 
     # --- stepping -----------------------------------------------------------
 
     def step(self) -> int:
-        """Advance all active slots one window; returns #active before."""
+        """Advance all active slots one window; returns #active before.
+
+        With ``idle_skip`` on, slots whose window carries zero input events
+        never reach the batched step: their leak is deferred (TLU) and the
+        remaining slots are compacted before the kernel launch. A window
+        in which *every* resident slot is idle launches nothing at all.
+        """
         n_active = self.n_active
         if n_active == 0:
             return 0
-        ev_xyc, gate, alive = self._collect_window()
-        self.states, self.class_counts, counts, drops = self._step(
-            self.params, self.states, self.class_counts, ev_xyc, gate, alive)
-        self.acc_counts += np.asarray(counts, np.float64)
-        self.acc_drops += np.asarray(drops, np.float64)
+        xyc, gate, alive, n_win_ev, max_bucket = self._collect_window()
+        act_idx = np.nonzero(self.active)[0]
+        if self.idle_skip:
+            dense_idx = act_idx[n_win_ev[act_idx] > 0]
+        else:
+            dense_idx = act_idx
+        if len(dense_idx):
+            self._step_dense(dense_idx, xyc, gate, alive, max_bucket)
+        for slot in act_idx:
+            if slot not in dense_idx:
+                # provably-idle window: defer its leak steps analytically
+                self.pending_dt[slot] += int(alive[:, slot].sum())
+                self.skipped_windows[slot] += 1
+        self.stats["dense_slot_windows"] += len(dense_idx)
+        self.stats["skipped_slot_windows"] += len(act_idx) - len(dense_idx)
         self.stats["windows"] += 1
-        for slot in np.nonzero(self.active)[0]:
+        for slot in act_idx:
             self.tau[slot] += min(self.W,
                                   self.slot_req[slot].n_timesteps
                                   - self.tau[slot])
@@ -434,6 +518,83 @@ class EventServeEngine:
             if self.tau[slot] >= self.slot_req[slot].n_timesteps:
                 self._finish(int(slot))
         return n_active
+
+    @staticmethod
+    def _bucket(n: int, cap: int) -> int:
+        """Round up to a power of two (capped) — bounds jit retraces."""
+        return min(1 << max(n - 1, 0).bit_length(), cap)
+
+    def _step_dense(self, idx: np.ndarray, xyc: np.ndarray, gate: np.ndarray,
+                    alive: np.ndarray, max_bucket: int) -> None:
+        """Compact the active slots, run the batched window step, scatter back.
+
+        Without ``idle_skip`` this degenerates to the original full-batch
+        step (all N slots, full event axis) — the dense reference path the
+        skip path is tested bit-for-bit against.
+        """
+        A = len(idx)
+        if self.idle_skip:
+            # slot-axis compaction: power-of-two bucket, dummies mirror
+            # slot 0 but are gated off and frozen (alive == 0)
+            Ab = self._bucket(A, self.N)
+            gidx = np.concatenate([idx, np.zeros((Ab - A,), idx.dtype)])
+            # event-axis compaction: trim to this window's occupancy
+            Eb = self._bucket(max(max_bucket, 8), self.caps[0])
+        else:
+            Ab, gidx, Eb = self.N, np.arange(self.N), self.caps[0]
+        # deferred decay for slots (re)entering the dense path, fused into
+        # the window step (dummy tail positions mirror real slots' dt but
+        # their decayed state is discarded at scatter-back)
+        pre = np.zeros((len(gidx),), np.int64)
+        if self.idle_skip and self.pending_dt[idx].any():
+            pre[:A] = self.pending_dt[idx]
+            self.pending_dt[idx] = 0
+            self.stats["leak_flushes"] += 1
+        xyc_w = xyc[:, gidx, :Eb]
+        gate_w = gate[:, gidx, :Eb]
+        alive_w = alive[:, gidx]
+        if self.idle_skip and Ab > A:
+            # only the *compacted* batch has dummy tail positions; in the
+            # dense branch gidx covers every slot (inactive ones already
+            # carry zero gate/alive from the collector) and masking the
+            # tail would wipe a real slot whenever the active set is not
+            # a prefix (e.g. slot 1 finished while 0 and 2 are mid-flight)
+            gate_w = gate_w.copy()
+            gate_w[:, A:] = 0.0
+            alive_w = alive_w.copy()
+            alive_w[:, A:] = 0.0
+        # the slot gather/scatter is only worth paying when the batch is
+        # actually compacted; a full in-order batch (idle_skip off, or
+        # every slot active) passes the state tuple straight through
+        full_batch = len(gidx) == self.N and (gidx == np.arange(self.N)).all()
+        if full_batch:
+            states_c, cc_c = self.states, self.class_counts
+        else:
+            gj = jnp.asarray(gidx)
+            states_c = tuple(v[gj] for v in self.states)
+            cc_c = self.class_counts[gj]
+        states_c, cc_c, counts, drops = self._step(
+            self.params, states_c, cc_c, jnp.asarray(xyc_w),
+            jnp.asarray(gate_w), jnp.asarray(alive_w), jnp.asarray(pre))
+        counts_np = np.asarray(counts, np.float64)
+        drops_np = np.asarray(drops, np.float64)
+        if full_batch:
+            # batch position == slot index
+            self.states = states_c
+            self.class_counts = cc_c
+            self.acc_counts[:, idx] += counts_np[:, idx]
+            self.acc_drops[:, idx] += drops_np[:, idx]
+        else:
+            # batch position i holds slot idx[i]
+            real = jnp.asarray(idx)
+            self.states = tuple(v.at[real].set(sc[:A])
+                                for v, sc in zip(self.states, states_c))
+            self.class_counts = self.class_counts.at[real].set(cc_c[:A])
+            self.acc_counts[:, idx] += counts_np[:, :A]
+            self.acc_drops[:, idx] += drops_np[:, :A]
+        self.dense_ts[idx] += alive[:, idx].sum(axis=0).astype(np.int64)
+        self.stats["step_calls"] += 1
+        self.stats["kernel_launches"] += self.W * self._n_conv
 
     def _finish(self, slot: int) -> None:
         req = self.slot_req[slot]
@@ -454,7 +615,9 @@ class EventServeEngine:
             + int(self.collector_drops[slot]) + int(self.oor_drops[slot]),
             inter_layer_dropped=list(self.acc_drops[:, slot]),
             wall_time_s=time.time() - self.admit_time[slot],
-            n_parallel_slices=self.n_parallel_slices)
+            n_parallel_slices=self.n_parallel_slices,
+            n_dense_timesteps=int(self.dense_ts[slot]),
+            n_skipped_windows=int(self.skipped_windows[slot]))
         req.done = True
         self.slot_req[slot] = None
         self.active[slot] = False

@@ -18,9 +18,10 @@ Two latency figures are reported per request:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
-from repro.core.engine import (SneConfig, inference_time_s, power_w)
+from repro.core.engine import (SneConfig, boundary_time_s, inference_time_s,
+                               power_w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +43,9 @@ class RequestTelemetry:
     sne_time_par_s: float
     sne_energy_j: float
     sne_power_w: float
+    # --- idle-skip accounting (window-level lazy TLU, PR 2) ---
+    n_dense_timesteps: int = 0   # timesteps actually stepped (<= n_timesteps)
+    n_skipped_windows: int = 0   # whole windows bypassed by the idle skip
 
     @property
     def total_events(self) -> float:
@@ -64,20 +68,31 @@ def request_telemetry(cfg: SneConfig, *, uid: int, n_timesteps: int,
                       input_dropped: int = 0,
                       inter_layer_dropped: Optional[Sequence[float]] = None,
                       wall_time_s: float = 0.0,
-                      n_parallel_slices: Optional[int] = None) -> RequestTelemetry:
+                      n_parallel_slices: Optional[int] = None,
+                      n_dense_timesteps: Optional[int] = None,
+                      n_skipped_windows: int = 0) -> RequestTelemetry:
     """Build a :class:`RequestTelemetry` from measured counts.
 
     ``input_sites`` is the number of input sites per timestep summed over
     every layer (``sum_l H_l*W_l*C_l``); activity is total measured events
     over sites x timesteps — the network-average firing activity, directly
     comparable to the paper's 1.2%-4.9% DVS-Gesture band.
+
+    ``n_dense_timesteps`` (default: all of them) is how many timesteps were
+    actually stepped; skipped ones pay no boundary sweep, so with a nonzero
+    ``cfg.cycles_per_boundary`` the model credits the idle skip with real
+    time/energy savings.  Boundary cost sits on the critical path of both
+    mapping modes (the sequencer fires once per timestep regardless of how
+    layers are spread over slices).
     """
     total = float(sum(per_layer_events))
     act = total / max(input_sites * n_timesteps, 1)
-    t_serial = inference_time_s(cfg, total)
+    dense_ts = n_timesteps if n_dense_timesteps is None else n_dense_timesteps
+    t_bnd = boundary_time_s(cfg, dense_ts)
+    t_serial = inference_time_s(cfg, total) + t_bnd
     k = n_parallel_slices if n_parallel_slices is not None else cfg.n_slices
     t_par = inference_time_s(cfg, total, n_parallel_slices=k,
-                             per_layer_events=per_layer_events)
+                             per_layer_events=per_layer_events) + t_bnd
     p = power_w(cfg, act)
     return RequestTelemetry(
         uid=uid,
@@ -94,6 +109,8 @@ def request_telemetry(cfg: SneConfig, *, uid: int, n_timesteps: int,
         sne_time_par_s=t_par,
         sne_energy_j=p * t_serial,
         sne_power_w=p,
+        n_dense_timesteps=int(dense_ts),
+        n_skipped_windows=int(n_skipped_windows),
     )
 
 
@@ -118,7 +135,10 @@ def summarize(records: Sequence[RequestTelemetry]) -> Dict[str, float]:
         "mean_sne_time_par_s": sum(r.sne_time_par_s for r in records) / n,
         "mean_sne_energy_j": tot_e / n,
         "energy_per_event_j": tot_e / tot_ev if tot_ev else 0.0,
+        "events_per_joule": tot_ev / tot_e if tot_e else 0.0,
         "modeled_rate_hz": n / tot_t if tot_t else float("inf"),
+        "total_dense_timesteps": sum(r.n_dense_timesteps for r in records),
+        "total_skipped_windows": sum(r.n_skipped_windows for r in records),
     }
 
 

@@ -6,7 +6,6 @@ checkpoint/restore, preemption handling and straggler accounting.
 """
 from __future__ import annotations
 
-import os
 import time
 from typing import Any, Callable, Dict, Iterator, Optional
 

@@ -1,17 +1,14 @@
 """Sharding rules, compression, serving engine, and SNE-net training system
 behaviour (single-device semantics of the distributed pieces)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.compression import (compression_ratio, ef_compress,
                                            ef_decompress, ef_init,
                                            dequantize_int8, quantize_int8)
-from repro.distributed.sharding import MeshRules, default_rules
+from repro.distributed.sharding import default_rules
 
 
 def _fake_mesh(shape=(4, 2), axes=("data", "model")):

@@ -1,6 +1,4 @@
 """The SNE hardware model must reproduce every number the paper reports."""
-import math
-
 import pytest
 
 from repro.core import engine as eng

@@ -8,7 +8,6 @@ that makes the accelerator compute the network the GPU trained.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:           # container has no hypothesis; see the shim

@@ -42,8 +42,9 @@ FORMATS = [
 def _stream_for(fmt: ev.EventFormat, seed: int, n: int = 64):
     rng = np.random.default_rng(seed)
     k = int(rng.integers(1, n))
-    mk = lambda bits: jnp.asarray(
-        rng.integers(0, 1 << bits, size=n).astype(np.int32))
+    def mk(bits):
+        return jnp.asarray(
+            rng.integers(0, 1 << bits, size=n).astype(np.int32))
     valid = jnp.asarray(np.arange(n) < k)
     return ev.EventStream(t=mk(fmt.t_bits), x=mk(fmt.x_bits),
                           y=mk(fmt.y_bits), c=mk(fmt.c_bits),
@@ -291,6 +292,175 @@ def test_request_telemetry_fields():
     assert agg["n_requests"] == 2
     assert agg["total_events"] == 200.0
     assert agg["total_dropped"] == 10.0
+
+
+# ---------------------------------------------------------------------------
+# window-level idle skip: bit-exactness vs the dense path, launch accounting
+# ---------------------------------------------------------------------------
+
+def _pattern_request(uid, spec, active_ts, seed=0, k=6):
+    """Request whose events occur only at the given timesteps."""
+    T, (H, W, C) = spec.n_timesteps, spec.in_shape
+    rng = np.random.default_rng(seed + uid)
+    s = np.zeros((T, H, W, C), np.float32)
+    for t in active_ts:
+        idx = rng.choice(H * W * C, size=k, replace=False)
+        s[t].reshape(-1)[idx] = 1.0
+    return EventRequest.from_dense(uid, jnp.asarray(s))
+
+
+def _run_idle_pair(patterns, window=4, seed=0):
+    """Serve the same cohort with idle_skip on and off; return both."""
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    out = {}
+    for skip in (True, False):
+        eng = EventServeEngine(spec, params, n_slots=len(patterns),
+                               window=window, use_pallas=False,
+                               idle_skip=skip)
+        reqs = [_pattern_request(i, spec, p, seed=seed)
+                for i, p in enumerate(patterns)]
+        eng.run(reqs)
+        assert all(r.done for r in reqs)
+        out[skip] = (reqs, eng)
+    return out
+
+
+def _assert_bitexact(out):
+    for a, b in zip(out[True][0], out[False][0]):
+        np.testing.assert_array_equal(a.class_counts, b.class_counts)
+        assert a.prediction == b.prediction
+        assert a.telemetry.total_events == b.telemetry.total_events
+        assert a.telemetry.per_layer_events == b.telemetry.per_layer_events
+
+
+def test_idle_skip_all_idle_launches_nothing():
+    """A fully idle cohort must produce zero kernel launches (and match)."""
+    out = _run_idle_pair([[], [], []])
+    _assert_bitexact(out)
+    eng = out[True][1]
+    assert eng.stats["kernel_launches"] == 0
+    assert eng.stats["step_calls"] == 0
+    assert eng.stats["skipped_slot_windows"] == 3 * 4   # 3 slots x 4 windows
+    assert out[False][1].stats["kernel_launches"] > 0
+    for r, _ in [out[True]]:
+        assert r[0].telemetry.n_dense_timesteps == 0
+        assert r[0].telemetry.n_skipped_windows == 4
+
+
+def test_idle_skip_alternating_windows_bitexact():
+    """Slots alternate active/idle windows (deferred decay is flushed)."""
+    w0 = [0, 1, 2, 3, 8, 9, 10, 11]       # windows 0 and 2 active
+    w1 = [4, 5, 6, 7, 12, 13, 14, 15]     # windows 1 and 3 active
+    out = _run_idle_pair([w0, w1, w0])
+    _assert_bitexact(out)
+    r = out[True][0][0].telemetry
+    assert r.n_dense_timesteps == 8 and r.n_skipped_windows == 2
+    assert out[True][1].stats["leak_flushes"] > 0
+
+
+def test_idle_skip_single_active_slot_bitexact():
+    """One busy slot must not drag idle neighbours through the kernel."""
+    out = _run_idle_pair([[], list(range(16)), []])
+    _assert_bitexact(out)
+    eng = out[True][1]
+    assert eng.stats["skipped_slot_windows"] == 2 * 4
+    assert eng.stats["dense_slot_windows"] == 4
+    # the kernel still launches every window (slot 1 is always active)…
+    assert eng.stats["step_calls"] == 4
+    # …but idle slots' telemetry shows they never stepped
+    assert out[True][0][0].telemetry.n_dense_timesteps == 0
+    assert out[True][0][1].telemetry.n_dense_timesteps == 16
+
+
+def test_idle_skip_bursty_matches_dense_apply():
+    """Skip path vs the *frame-based* dense reference, not just the dense
+    engine: decay across skipped windows must be the analytic TLU form."""
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    eng = EventServeEngine(spec, params, n_slots=2, window=4,
+                           use_pallas=False, idle_skip=True)
+    reqs = [_pattern_request(i, spec, p, seed=5)
+            for i, p in enumerate([[0, 1, 14, 15], [6]])]
+    spikes = [np.asarray(ev.events_to_dense(
+        r.stream, (spec.n_timesteps,) + spec.in_shape)) for r in reqs]
+    eng.run(reqs)
+    assert eng.stats["skipped_slot_windows"] > 0
+    for r, s in zip(reqs, spikes):
+        dense_out, _ = dense_apply(params, spec, jnp.asarray(s))
+        np.testing.assert_allclose(
+            r.class_counts, np.asarray(spike_counts(dense_out)), atol=1e-4)
+
+
+def test_idle_skip_disabled_for_soft_reset():
+    """Soft-reset neurons can fire without input — skip must disengage."""
+    import dataclasses as dc
+    spec = tiny_net()
+    soft = dc.replace(spec, layers=tuple(
+        dc.replace(l, lif=dc.replace(l.lif, reset_mode="subtract"))
+        for l in spec.layers))
+    params = init_snn(jax.random.PRNGKey(0), soft)
+    eng = EventServeEngine(soft, params, n_slots=1, use_pallas=False,
+                           idle_skip=True)
+    assert not eng.idle_skip          # silently fell back to dense stepping
+    spikes = jnp.zeros((8,) + soft.in_shape).at[0, 2, 2, 0].set(1.0)
+    req = EventRequest.from_dense(0, spikes)
+    eng.run([req])
+    assert req.done
+    assert eng.stats["skipped_slot_windows"] == 0
+
+
+@pytest.mark.parametrize("idle_skip", [True, False])
+def test_non_prefix_active_set_after_release(idle_skip):
+    """A freed middle slot must not corrupt its still-active neighbours.
+
+    Requests of lengths 16/4/16 on 3 slots: slot 1 finishes after the
+    first window, leaving active set {0, 2} — not a prefix of the slot
+    range. Both engine modes must keep serving slots 0 and 2 correctly
+    (regression: the dense branch once masked batch positions >= len(idx),
+    wiping slot 2's events)."""
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    spikes, _ = batch_at(7, 0, 3, TINY)
+    mk = [spikes[0], spikes[1][:4], spikes[2]]
+
+    solo = []
+    for i, s in enumerate(mk):
+        e = EventServeEngine(spec, params, n_slots=1, window=4,
+                             use_pallas=False, idle_skip=idle_skip)
+        r = EventRequest.from_dense(i, s)
+        e.run([r])
+        solo.append(r)
+
+    eng = EventServeEngine(spec, params, n_slots=3, window=4,
+                           use_pallas=False, idle_skip=idle_skip)
+    reqs = [EventRequest.from_dense(i, s) for i, s in enumerate(mk)]
+    for r in reqs:
+        assert eng.try_admit(r)
+    while eng.step():
+        pass
+    for got, want in zip(reqs, solo):
+        np.testing.assert_array_equal(got.class_counts, want.class_counts)
+        assert got.telemetry.total_events == want.telemetry.total_events
+
+
+def test_boundary_cost_credits_idle_skip():
+    """With cycles_per_boundary set, skipped timesteps cost less energy."""
+    cfg = SneConfig(cycles_per_boundary=64)
+    kw = dict(uid=0, n_timesteps=16, n_windows=4,
+              per_layer_events=[50.0], per_layer_sops=[500.0],
+              input_sites=288)
+    full = request_telemetry(cfg, **kw)                    # all 16 stepped
+    skipped = request_telemetry(cfg, n_dense_timesteps=4,
+                                n_skipped_windows=3, **kw)
+    assert full.n_dense_timesteps == 16                    # default = all
+    assert skipped.sne_time_s < full.sne_time_s
+    assert skipped.sne_energy_j < full.sne_energy_j
+    assert skipped.sne_time_par_s < full.sne_time_par_s
+    # default config stays calibrated: boundary term is zero
+    base = request_telemetry(SneConfig(), **kw)
+    lazy = request_telemetry(SneConfig(), n_dense_timesteps=0, **kw)
+    assert base.sne_time_s == lazy.sne_time_s
 
 
 def test_served_energy_proportionality():

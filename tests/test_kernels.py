@@ -3,7 +3,6 @@
 Kernels run in interpret mode on CPU (the mandated validation path); on a
 TPU backend the same calls compile via Mosaic.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

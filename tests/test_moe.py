@@ -2,9 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.models.layers import ParamDecl, init_tree
+from repro.models.layers import init_tree
 from repro.models.moe import _capacity, moe_apply, moe_decls
 
 

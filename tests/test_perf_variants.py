@@ -99,12 +99,11 @@ def test_boundary_remat_matches_full():
 def test_int8_weight_storage_roundtrip():
     from repro.models.quant_lm import (dequant_params, quantize_decls,
                                        quantize_params)
-    from repro.models.layers import ParamDecl
     cfg = get_smoke("gemma3-1b")
     params = T.init_model(jax.random.PRNGKey(0), cfg)
     qp = quantize_params(params)
     # int8 codes within range; structure matches quantize_decls
-    decls = quantize_decls(T.model_decls(cfg))
+    quantize_decls(T.model_decls(cfg))
     q_leaves = [l for l in jax.tree.leaves(qp) if l.dtype == jnp.int8]
     assert q_leaves and all(int(jnp.max(jnp.abs(l))) <= 127
                             for l in q_leaves)

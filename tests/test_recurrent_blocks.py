@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.lm_events import (SigmaDelta, decode_energy_estimate,
+from repro.core.lm_events import (decode_energy_estimate,
                                   gated_rglru_step, sd_encode, sd_init)
 from repro.models.layers import init_tree
 from repro.models.recurrent import (conv1d_causal, rglru_block,
@@ -125,7 +125,6 @@ def test_gated_rglru_event_rate_drops_with_threshold():
     rng = np.random.default_rng(8)
     base = rng.normal(size=(1, d)).astype(np.float32)
     h = jnp.zeros((1, d), jnp.float32)
-    sd = sd_init(jnp.asarray(base))
     fracs = {}
     for th in (0.0, 0.2, 1.0):
         sd_t = sd_init(jnp.asarray(base))

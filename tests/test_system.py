@@ -9,7 +9,6 @@ the system-level claims on CPU-sized instances:
     event counts feeding the energy model;
   * the LM substrate trains (loss drops on the structured synthetic set).
 """
-import dataclasses
 import functools
 
 import jax
@@ -19,9 +18,9 @@ import pytest
 
 from repro.core import engine as eng
 from repro.core import events as ev
-from repro.core.sne_net import (SNNSpec, ce_loss, default_capacities,
-                                dense_apply, event_apply, event_predict,
-                                init_snn, predict, quantize_snn, tiny_net)
+from repro.core.sne_net import (ce_loss, default_capacities, dense_apply,
+                                event_predict, init_snn, predict,
+                                quantize_snn, tiny_net)
 from repro.data.events_ds import TINY, batch_at
 from repro.optim import adamw_init, adamw_update
 
@@ -67,10 +66,6 @@ def test_ecnn_training_learns():
     assert losses[-1] < losses[0] * 0.8, (losses[0], losses[-1])
 
 
-@pytest.mark.xfail(strict=False,
-                   reason="accuracy is marginal (~0.31-0.44 across jax "
-                   "versions) on the 30-step synthetic run; loss descent "
-                   "is asserted above — see ROADMAP Open items")
 def test_ecnn_training_accuracy_above_chance():
     spec, params, _ = _train_tiny()
     acc = _accuracy(spec, params)
@@ -82,9 +77,6 @@ def test_ecnn_qat_training_learns():
     assert losses[-1] < losses[0] * 0.85
 
 
-@pytest.mark.xfail(strict=False,
-                   reason="accuracy is marginal on the 30-step synthetic "
-                   "run — see ROADMAP Open items")
 def test_ecnn_qat_training_accuracy_above_chance():
     spec, params, _ = _train_tiny(qat=True)
     acc = _accuracy(spec, params, qat=True)
