@@ -1,0 +1,188 @@
+"""Whole-network launch accounting for the unified layer-program executor.
+
+The refactor's claim: a full-network window step is a *chain of Pallas
+launches* — one slot-batched scatter kernel per layer per timestep (conv,
+pool AND fc), with inter-layer event routing staying on device — instead
+of the per-layer dense fallback composition (event scatter emulated by
+gather/scatter/dynamic-slice primitive chains).  This benchmark measures
+that claim the way `benchmarks/idle_skip.py` measures the TLU skip:
+
+  * per layer x timestep, trace `layer_program.layer_timestep` (plus its
+    `frame_to_events` routing) and count device-op dispatches (recursive
+    jaxpr equations) and Pallas kernel launches, for the unified Pallas
+    path vs the pure-jnp fallback (``use_pallas=False``);
+  * assert the unified path dispatches strictly fewer device ops per
+    window on `tiny_net` — each layer's scatter collapses into exactly
+    one launch;
+  * serve a small cohort through `EventServeEngine` (which jits exactly
+    this executor) and record the serving-level events/J headline.
+
+Emits ``BENCH_layer_program.json`` for CI's regression gate
+(`benchmarks/check_regression.py`).
+
+    PYTHONPATH=src python -m benchmarks.layer_program [--fast]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # jaxpr types moved to jax.extend.core in newer jax releases
+    from jax.extend import core as jax_core
+    jax_core.ClosedJaxpr
+except (ImportError, AttributeError):
+    from jax import core as jax_core
+
+from repro.core import layer_program as lp
+from repro.core.sne_net import init_snn, tiny_net
+from repro.serve.event_engine import EventRequest, EventServeEngine
+from repro.serve.telemetry import summarize
+
+WINDOW = 4
+SLOTS = 2
+
+
+def _count_ops(jaxpr) -> tuple:
+    """Recursively count (equations, pallas_call launches) in a jaxpr."""
+    n_eqns = n_pallas = 0
+    for eqn in jaxpr.eqns:
+        n_eqns += 1
+        if eqn.primitive.name == "pallas_call":
+            n_pallas += 1
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                e, p = _count_ops(sub)
+                n_eqns += e
+                n_pallas += p
+    return n_eqns, n_pallas
+
+
+def _subjaxprs(v):
+    vals = v if isinstance(v, (list, tuple)) else [v]
+    for u in vals:
+        if isinstance(u, jax_core.ClosedJaxpr):
+            yield u.jaxpr
+        elif isinstance(u, jax_core.Jaxpr):
+            yield u
+
+
+def layer_dispatches(spec, params, use_pallas):
+    """Trace one (layer, timestep) step per layer; count its device ops.
+
+    Layer 0 consumes collector events; deeper layers include the
+    `frame_to_events` routing of the previous FIRE frame, so the count is
+    the full per-layer cost of one executor timestep.
+    """
+    prog = lp.compile_program(spec)
+    alive = jnp.ones((SLOTS,), jnp.float32)
+    rows = []
+    for op, p in zip(prog.ops, params):
+        vp = lp.padded_state(op, jnp.float32, n_slots=SLOTS)
+        H, W, C = op.spec.in_shape
+
+        if op.index == 0:
+            def fn(vp, xyc, gate, op=op, p=p):
+                return lp.layer_timestep(op, p, vp, xyc, gate, alive,
+                                         use_pallas=use_pallas)
+            cap = op.step_capacity
+            xyc = jnp.zeros((SLOTS, cap, 3), jnp.int32)
+            gate = jnp.zeros((SLOTS, cap), jnp.float32)
+            jx = jax.make_jaxpr(fn)(vp, xyc, gate)
+        else:
+            def fn(vp, s_prev, op=op, p=p):
+                xyc, gate, _ = lp.frame_to_events(s_prev, op.step_capacity)
+                return lp.layer_timestep(op, p, vp, xyc, gate, alive,
+                                         use_pallas=use_pallas)
+            s_prev = jnp.zeros((SLOTS, H, W, C), jnp.float32)
+            jx = jax.make_jaxpr(fn)(vp, s_prev)
+        n_ops, n_pallas = _count_ops(jx.jaxpr)
+        rows.append({"layer": op.index, "kind": op.kind,
+                     "device_ops": n_ops, "pallas_launches": n_pallas})
+    return rows
+
+
+def serve_cohort(spec, params, n_timesteps, seed=0):
+    """Serve a small random cohort; return engine stats + events/J."""
+    rng = np.random.default_rng(seed)
+    H, W, C = spec.in_shape
+    reqs = []
+    for uid in range(SLOTS):
+        spikes = (rng.random((n_timesteps, H, W, C)) < 0.1)
+        reqs.append(EventRequest.from_dense(
+            uid, jnp.asarray(spikes.astype(np.float32))))
+    eng = EventServeEngine(spec, params, n_slots=SLOTS, window=WINDOW,
+                           use_pallas=False)
+    t0 = time.time()
+    eng.run(reqs)
+    wall = time.time() - t0
+    agg = summarize([r.telemetry for r in reqs])
+    return {
+        "wall_s": wall,
+        "kernel_launches": eng.stats["kernel_launches"],
+        "launches_per_window": eng.stats["kernel_launches"]
+        / max(eng.stats["step_calls"], 1),
+        "events": agg["total_events"],
+        "events_per_joule": agg["events_per_joule"],
+    }
+
+
+def main(fast: bool = False) -> None:
+    print("layer_program [unified executor: one launch per layer x step]")
+    n_ts = 8 if fast else 16
+    spec = tiny_net(n_timesteps=n_ts)
+    params = init_snn(jax.random.PRNGKey(0), spec)
+
+    unified = layer_dispatches(spec, params, use_pallas=None)
+    fallback = layer_dispatches(spec, params, use_pallas=False)
+    print(f"  {'layer':>5} {'kind':>5} {'pallas ops':>10} {'launches':>8} "
+          f"{'fallback ops':>12}")
+    for u, f in zip(unified, fallback):
+        print(f"  {u['layer']:>5} {u['kind']:>5} {u['device_ops']:>10} "
+              f"{u['pallas_launches']:>8} {f['device_ops']:>12}")
+
+    ops_u = sum(r["device_ops"] for r in unified)
+    ops_f = sum(r["device_ops"] for r in fallback)
+    launches = sum(r["pallas_launches"] for r in unified)
+    L = len(spec.layers)
+    # the executor contract: exactly ONE scatter launch per layer per step
+    assert launches == L, (launches, L)
+    assert all(r["pallas_launches"] == 0 for r in fallback)
+    # per-window totals: W timesteps x per-layer cost
+    win_u, win_f = WINDOW * ops_u, WINDOW * ops_f
+    assert win_u < win_f, (win_u, win_f)
+    print(f"  per-window device ops: {win_u} unified (x{WINDOW} steps, "
+          f"{WINDOW * launches} kernel launches) vs {win_f} fallback "
+          f"-> {win_f / win_u:.2f}x fewer dispatches")
+
+    served = serve_cohort(spec, params, n_ts)
+    # the engine accounts one launch per layer per timestep
+    assert served["launches_per_window"] == WINDOW * L
+    print(f"  served {served['events']:.0f} events, "
+          f"{served['launches_per_window']:.0f} launches/window, "
+          f"{served['events_per_joule']:.3e} events/J")
+
+    out = {
+        "bench": "layer_program",
+        "config": {"net": "tiny_net", "n_timesteps": n_ts, "window": WINDOW,
+                   "slots": SLOTS, "use_pallas": False},
+        "per_layer": [
+            {**u, "fallback_device_ops": f["device_ops"]}
+            for u, f in zip(unified, fallback)],
+        "ops_per_window_unified": win_u,
+        "ops_per_window_fallback": win_f,
+        "dispatch_ratio": win_f / win_u,
+        "launches_per_window": served["launches_per_window"],
+        "events_per_joule": served["events_per_joule"],
+    }
+    with open("BENCH_layer_program.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print("  wrote BENCH_layer_program.json")
+
+
+if __name__ == "__main__":
+    main(fast="--fast" in sys.argv)

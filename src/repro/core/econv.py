@@ -17,6 +17,11 @@ Two execution paths over the *same* parameters, proven equivalent by tests:
 The membrane state lives in a halo-padded buffer so event scatters never
 need bounds checks — the halo is the TPU analogue of the ASIC's address
 filter headroom, and the crop at FIRE time restores the logical geometry.
+
+The event path executes through `core.layer_program` (this module lowers a
+single layer to a one-op program): the scatter/leak/fire primitives live
+there, shared with the slot-batched serving executor, so the two can never
+drift apart.
 """
 from __future__ import annotations
 
@@ -27,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import events as ev
-from repro.core.lif import LifParams, apply_leak, fire_and_reset, lif_step
+from repro.core.lif import LifParams, lif_step
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,7 +157,7 @@ def dense_forward(params: EConvParams, spec: EConvSpec, spikes: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Event path — the SNE execution model (Listing 1).
+# Event path — the SNE execution model (Listing 1), via the layer program.
 # ---------------------------------------------------------------------------
 
 class EConvStats(NamedTuple):
@@ -164,57 +169,8 @@ class EConvStats(NamedTuple):
 
 
 def _halo(spec: EConvSpec) -> int:
+    """THE halo rule: conv scatters need K-1 address-filter headroom."""
     return spec.kernel - 1 if spec.kind == "conv" else 0
-
-
-def _padded_state(spec: EConvSpec, dtype) -> jnp.ndarray:
-    Ho, Wo, Co = spec.out_shape
-    h = _halo(spec)
-    return jnp.zeros((Ho + 2 * h, Wo + 2 * h, Co), dtype)
-
-
-def _scatter_event(params: EConvParams, spec: EConvSpec, vp: jnp.ndarray,
-                   e_x, e_y, e_c, gate) -> jnp.ndarray:
-    """Accumulate one event's synaptic contribution (UPDATE_OP datapath)."""
-    if spec.kind == "conv":
-        K = spec.kernel
-        # out[i, j, :] += W[i', j', c, :] with i' = e_x + P - i  => flipped W.
-        w_f = jnp.flip(jnp.flip(params.w, 0), 1)          # (K, K, Ci, Co)
-        patch = jnp.take(w_f, e_c, axis=2) * gate          # (K, K, Co)
-        ox = e_x + spec.padding   # origin in halo coords (always in bounds)
-        oy = e_y + spec.padding
-        cur = jax.lax.dynamic_slice(vp, (ox, oy, 0), (K, K, vp.shape[2]))
-        return jax.lax.dynamic_update_slice(vp, cur + patch, (ox, oy, 0))
-    if spec.kind == "pool":
-        s = spec.stride
-        val = jnp.take(params.w, e_c) * gate
-        return vp.at[e_x // s, e_y // s, e_c].add(val)
-    # fc: flatten (x, y, c) -> row of the weight matrix
-    H, W, C = spec.in_shape
-    flat = (e_x * W + e_y) * C + e_c
-    row = jnp.take(params.w, flat, axis=0) * gate          # (Dout,)
-    return vp.at[0, 0, :].add(row)
-
-
-def _interior(spec: EConvSpec, vp: jnp.ndarray) -> jnp.ndarray:
-    h = _halo(spec)
-    if h == 0:
-        return vp
-    return vp[h:-h, h:-h, :]
-
-
-def _write_interior(spec: EConvSpec, vp: jnp.ndarray,
-                    interior: jnp.ndarray) -> jnp.ndarray:
-    h = _halo(spec)
-    if h == 0:
-        return interior
-    return vp.at[h:-h, h:-h, :].set(interior)
-
-
-def _clip(v: jnp.ndarray, p: LifParams) -> jnp.ndarray:
-    if p.state_clip is None:
-        return v
-    return jnp.clip(v, -p.state_clip, p.state_clip)
 
 
 def event_forward(params: EConvParams, spec: EConvSpec,
@@ -227,101 +183,13 @@ def event_forward(params: EConvParams, spec: EConvSpec,
     *active* timestep boundaries — the paper's energy-proportionality
     property, with idle timesteps skipped by the lazy TLU leak.
 
-    The lazy timestep skip is exact only for hard resets (a reset neuron
-    cannot re-cross the threshold without new input); SNE's datapath resets
-    the membrane on fire, so this matches the hardware.
+    This is the one-layer entry point of the unified executor: the spec is
+    lowered to a single :class:`repro.core.layer_program.LayerOp` and the
+    scan runs in `core.layer_program.layer_event_forward` — the same
+    ``leak -> scatter -> clip -> fire -> reset`` datapath the slot-batched
+    serving step executes.
     """
-    Ho, Wo, Co = spec.out_shape
-    p = spec.lif
-    if p.reset_mode != "zero":
-        raise ValueError("event path requires reset_mode='zero' (hardware "
-                         "semantics; lazy TLU skip is exact only then)")
-    n_flat = Ho * Wo * Co
-    # Flat coordinate tables for FIRE emission.
-    ii = jnp.arange(n_flat, dtype=jnp.int32)
-    fx = ii // (Wo * Co)
-    fy = (ii // Co) % Wo
-    fc = ii % Co
-
-    out0 = ev.EventStream(
-        t=jnp.full((out_capacity,), n_timesteps, jnp.int32),
-        x=jnp.zeros((out_capacity,), jnp.int32),
-        y=jnp.zeros((out_capacity,), jnp.int32),
-        c=jnp.zeros((out_capacity,), jnp.int32),
-        op=jnp.full((out_capacity,), ev.OP_UPDATE, jnp.int32),
-        valid=jnp.zeros((out_capacity,), bool),
-    )
-
-    def fire_emit(vp, t_fire, out, cursor, emitted):
-        """Finish timestep ``t_fire``: clip, threshold, emit, reset."""
-        interior = _clip(_interior(spec, vp), p)
-        v_new, s = fire_and_reset(interior, p)
-        vp = _write_interior(spec, vp, v_new)
-        mask = s.reshape(-1) > 0
-        k = jnp.cumsum(mask.astype(jnp.int32)) - 1 + cursor
-        ok = mask & (k < out_capacity)
-        kk = jnp.where(ok, k, out_capacity)  # out-of-range => dropped scatter
-        out = ev.EventStream(
-            t=out.t.at[kk].set(t_fire, mode="drop"),
-            x=out.x.at[kk].set(fx, mode="drop"),
-            y=out.y.at[kk].set(fy, mode="drop"),
-            c=out.c.at[kk].set(fc, mode="drop"),
-            op=out.op,
-            valid=out.valid.at[kk].set(True, mode="drop"),
-        )
-        n = jnp.sum(mask.astype(jnp.int32))
-        return vp, out, cursor + n, emitted + n
-
-    def step(carry, e):
-        vp, t_cur, out, cursor, emitted, n_upd, n_bnd = carry
-        e_t, e_x, e_y, e_c, e_op, e_valid = e
-        # Padding slots sort to the tail; clamping their timestep to the
-        # last real step (T-1) makes them trigger the final boundary flush
-        # while keeping the leak count exactly equal to the dense path's.
-        t_evt = jnp.minimum(jnp.where(e_valid, e_t, jnp.int32(n_timesteps)),
-                            jnp.int32(n_timesteps - 1))
-        crossing = t_evt > t_cur
-
-        def do_boundary(args):
-            vp, out, cursor, emitted = args
-            vp, out, cursor, emitted = fire_emit(vp, t_cur, out, cursor, emitted)
-            dt = t_evt - t_cur
-            interior = _clip(apply_leak(_interior(spec, vp), p.leak, dt,
-                                        p.leak_mode), p)
-            vp = _write_interior(spec, vp, interior)
-            return vp, out, cursor, emitted
-
-        vp, out, cursor, emitted = jax.lax.cond(
-            crossing, do_boundary, lambda a: a, (vp, out, cursor, emitted))
-        t_cur = jnp.maximum(t_cur, t_evt)
-        n_bnd = n_bnd + crossing.astype(jnp.int32)
-
-        # RST_OP: clear every membrane (paper: all clusters activated).
-        is_rst = e_valid & (e_op == ev.OP_RST)
-        vp = jnp.where(is_rst, jnp.zeros_like(vp), vp)
-
-        # UPDATE_OP: scatter the weight patch (gate zeroes everything else).
-        is_upd = e_valid & (e_op == ev.OP_UPDATE)
-        gate = is_upd.astype(vp.dtype)
-        vp = _scatter_event(params, spec, vp, e_x, e_y, e_c, gate)
-        n_upd = n_upd + is_upd.astype(jnp.int32)
-        return (vp, t_cur, out, cursor, emitted, n_upd, n_bnd), None
-
-    vp0 = _padded_state(spec, params.w.dtype)
-    carry0 = (vp0, jnp.int32(0), out0, jnp.int32(0), jnp.int32(0),
-              jnp.int32(0), jnp.int32(0))
-    xs = (stream.t, stream.x, stream.y, stream.c, stream.op, stream.valid)
-    (vp, t_cur, out, cursor, emitted, n_upd, n_bnd), _ = jax.lax.scan(
-        step, carry0, xs)
-    # Final flush: fire the last accumulated timestep (idempotent if the
-    # padding slots already advanced t_cur past the last real event).
-    fire_t = jnp.minimum(t_cur, jnp.int32(n_timesteps - 1))
-    vp, out, cursor, emitted = fire_emit(vp, fire_t, out, cursor, emitted)
-    stats = EConvStats(
-        n_update_events=n_upd,
-        n_sops=n_upd * spec.updates_per_event(),
-        n_out_events=emitted,
-        n_dropped=jnp.maximum(emitted - out_capacity, 0),
-        n_boundaries=n_bnd,
-    )
-    return out, _interior(spec, vp), stats
+    # local import: layer_program imports this module's spec/param types
+    from repro.core.layer_program import layer_event_forward, layer_op
+    return layer_event_forward(layer_op(spec), params, stream, out_capacity,
+                               n_timesteps)

@@ -1,0 +1,547 @@
+"""The unified layer-program executor: one event-domain network step.
+
+The paper's SNE pipelines a whole eCNN through homogeneous engine slices —
+every layer kind (conv, pool, FC) runs the *same* event-consume/fire
+datapath (§III-C/D); only the scatter rule a consumed UPDATE event applies
+to the membrane state differs.  This module is that design point in JAX:
+
+  * :func:`compile_program` lowers ``SNNSpec`` into a :class:`LayerProgram`
+    — a typed sequence of :class:`LayerOp` (scatter kind, halo,
+    per-timestep event capacity, LIF plan);
+  * one executor runs ``leak -> scatter -> clip -> fire -> reset`` for
+    every layer kind, in two equivalent drivers over the same primitives:
+
+      - :func:`layer_event_forward` / :func:`run_stream` — the
+        single-stream scan (explicit time-sorted events, lazy TLU leak,
+        RST support).  `core.econv.event_forward` and
+        `core.sne_net.event_apply` are thin wrappers over these;
+      - :func:`window_step` — the slot-batched serving step
+        (`serve.event_engine.EventServeEngine` jits exactly this), where
+        every layer's scatter is a slot-batched Pallas launch
+        (`kernels/event_conv`, `kernels/event_pool`, `kernels/event_fc`)
+        and inter-layer event routing (:func:`frame_to_events`) stays on
+        device — the only dense materialisation between layers is the
+        spike frame at FIRE.
+
+  * the per-layer capacity heuristics (:func:`layer_step_capacity` for
+    serving-time per-timestep buckets, :func:`layer_stream_capacity` for
+    whole-inference buffers) live here and nowhere else, so
+    `sne_net.default_capacities` and `event_engine.default_step_capacities`
+    cannot drift apart.
+
+Having exactly one executor is what makes whole-network fusion or an
+int4/int8 datapath a single lowering in the future: every entry point
+already routes through these functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core.econv import EConvParams, EConvSpec, EConvStats, _halo
+from repro.core.lif import (LifParams, apply_leak, fire_and_reset,
+                            idle_decay, supports_idle_skip)
+from repro.kernels.event_conv.ops import event_conv_batched
+from repro.kernels.event_fc.ops import event_fc_batched
+from repro.kernels.event_pool.ops import event_pool_batched
+
+if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids an import cycle)
+    from repro.core.sne_net import SNNSpec
+
+
+# ---------------------------------------------------------------------------
+# Capacity heuristics — THE single source for core and serving.
+# ---------------------------------------------------------------------------
+
+def layer_step_capacity(lspec: EConvSpec, activity: float = 0.25,
+                        slack: float = 4.0, align: int = 8) -> int:
+    """Per-timestep *input*-event bucket for one layer (collector + FIFOs).
+
+    Sizes one timestep's bucket on the layer's input geometry; ``activity``
+    is the expected per-step fraction of active input sites and ``slack``
+    over-provisions like the ASIC FIFO sizing.
+    """
+    return ev.capacity_for((1,) + lspec.in_shape, activity, slack,
+                           align=align)
+
+
+def layer_stream_capacity(lspec: EConvSpec, n_timesteps: int,
+                          activity: float = 0.05, slack: float = 4.0) -> int:
+    """Whole-inference *output*-event buffer for one layer (FIFO/DMA).
+
+    Sizes the full event stream a layer may emit over ``n_timesteps`` on
+    its output geometry — the `event_apply` buffer analogue.
+    """
+    return ev.capacity_for((n_timesteps,) + lspec.out_shape, activity,
+                           slack)
+
+
+# ---------------------------------------------------------------------------
+# The program: SNNSpec + params metadata -> typed ops.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerOp:
+    """One layer lowered onto the homogeneous event datapath.
+
+    Everything the executor needs, resolved at compile time: the scatter
+    kind (which Pallas kernel family consumes this layer's events), the
+    halo width (conv scatters need address headroom; pool/FC do not), the
+    per-timestep input-event capacity (the serving-side FIFO), and the LIF
+    plan (shared leak/fire/reset dynamics).
+    """
+
+    index: int
+    spec: EConvSpec
+    halo: int
+    step_capacity: int
+
+    @property
+    def kind(self) -> str:
+        return self.spec.kind
+
+    @property
+    def lif(self) -> LifParams:
+        return self.spec.lif
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerProgram:
+    """A compiled eCNN: the typed op sequence every entry point executes."""
+
+    spec: "SNNSpec"
+    ops: Tuple[LayerOp, ...]
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    @property
+    def step_capacities(self) -> Tuple[int, ...]:
+        return tuple(op.step_capacity for op in self.ops)
+
+
+def layer_op(spec: EConvSpec, index: int = 0,
+             step_capacity: Optional[int] = None) -> LayerOp:
+    """Lower a single layer spec (the one-layer program used by econv)."""
+    return LayerOp(index=index, spec=spec, halo=_halo(spec),
+                   step_capacity=(step_capacity if step_capacity is not None
+                                  else layer_step_capacity(spec)))
+
+
+@functools.lru_cache(maxsize=64)
+def compile_program(spec: "SNNSpec",
+                    step_capacities: Optional[Tuple[int, ...]] = None,
+                    step_activity: float = 0.25, step_slack: float = 4.0,
+                    step_align: int = 8) -> LayerProgram:
+    """Compile ``SNNSpec`` into the typed op sequence the executors run.
+
+    ``step_capacities`` overrides the per-layer per-timestep event buckets
+    (one per layer); by default :func:`layer_step_capacity` sizes them.
+    The program is static and hashable — safe to close over in ``jax.jit``.
+    """
+    if step_capacities is not None and len(step_capacities) != len(spec.layers):
+        raise ValueError("need one per-timestep capacity per layer")
+    ops = []
+    for i, l in enumerate(spec.layers):
+        cap = (step_capacities[i] if step_capacities is not None
+               else layer_step_capacity(l, step_activity, step_slack,
+                                        step_align))
+        ops.append(layer_op(l, index=i, step_capacity=cap))
+    return LayerProgram(spec=spec, ops=tuple(ops))
+
+
+def default_stream_capacities(spec: "SNNSpec", activity: float = 0.05,
+                              slack: float = 4.0) -> List[int]:
+    """Whole-inference output buffers, one per layer (`event_apply`)."""
+    return [layer_stream_capacity(l, spec.n_timesteps, activity, slack)
+            for l in spec.layers]
+
+
+def default_step_capacities(spec: "SNNSpec", activity: float = 0.25,
+                            slack: float = 4.0, align: int = 8) -> List[int]:
+    """Per-timestep input buckets, one per layer (the serving collector)."""
+    return [layer_step_capacity(l, activity, slack, align)
+            for l in spec.layers]
+
+
+# ---------------------------------------------------------------------------
+# Shared state-geometry primitives (3D single-stream and 4D slot-batched).
+# ---------------------------------------------------------------------------
+
+def padded_state(op: LayerOp, dtype, n_slots: Optional[int] = None
+                 ) -> jnp.ndarray:
+    """Zero halo-padded membrane state; batched when ``n_slots`` is given."""
+    Ho, Wo, Co = op.spec.out_shape
+    h = op.halo
+    shape = (Ho + 2 * h, Wo + 2 * h, Co)
+    if n_slots is not None:
+        shape = (n_slots,) + shape
+    return jnp.zeros(shape, dtype)
+
+
+def interior(vp: jnp.ndarray, h: int) -> jnp.ndarray:
+    """Crop the halo off ``(..., Hp, Wp, C)`` — logical layer geometry."""
+    if h == 0:
+        return vp
+    return vp[..., h:vp.shape[-3] - h, h:vp.shape[-2] - h, :]
+
+
+def write_interior(vp: jnp.ndarray, x: jnp.ndarray, h: int) -> jnp.ndarray:
+    """Write the logical interior back into the halo-padded buffer."""
+    if h == 0:
+        return x
+    return vp.at[..., h:vp.shape[-3] - h, h:vp.shape[-2] - h, :].set(x)
+
+
+def clip_state(v: jnp.ndarray, p: LifParams) -> jnp.ndarray:
+    """8-bit-state saturation (no-op when the layer has no clip)."""
+    if p.state_clip is None:
+        return v
+    return jnp.clip(v, -p.state_clip, p.state_clip)
+
+
+# ---------------------------------------------------------------------------
+# The scatter primitive — every layer kind, single-event and slot-batched.
+# ---------------------------------------------------------------------------
+
+def scatter_event(op: LayerOp, params: EConvParams, vp: jnp.ndarray,
+                  e_x, e_y, e_c, gate) -> jnp.ndarray:
+    """Accumulate ONE event's synaptic contribution (UPDATE_OP datapath).
+
+    The per-event form the single-stream scan consumes; the slot-batched
+    kernels implement exactly this rule over whole event batches.
+    """
+    spec = op.spec
+    if spec.kind == "conv":
+        K = spec.kernel
+        # out[i, j, :] += W[i', j', c, :] with i' = e_x + P - i  => flipped W.
+        w_f = jnp.flip(jnp.flip(params.w, 0), 1)          # (K, K, Ci, Co)
+        patch = jnp.take(w_f, e_c, axis=2) * gate          # (K, K, Co)
+        ox = e_x + spec.padding   # origin in halo coords (always in bounds)
+        oy = e_y + spec.padding
+        cur = jax.lax.dynamic_slice(vp, (ox, oy, 0), (K, K, vp.shape[2]))
+        return jax.lax.dynamic_update_slice(vp, cur + patch, (ox, oy, 0))
+    if spec.kind == "pool":
+        s = spec.stride
+        val = jnp.take(params.w, e_c) * gate
+        return vp.at[e_x // s, e_y // s, e_c].add(val)
+    # fc: flatten (x, y, c) -> row of the weight matrix
+    H, W, C = spec.in_shape
+    flat = (e_x * W + e_y) * C + e_c
+    row = jnp.take(params.w, flat, axis=0) * gate          # (Dout,)
+    return vp.at[0, 0, :].add(row)
+
+
+def _channel_block(n_channels: int, want: int) -> int:
+    """Largest channel-block size <= ``want`` that divides ``n_channels``.
+
+    The kernels tile their lane dimension in equal blocks, so the block
+    must divide the channel count; any width (192, 11, ...) stays
+    servable, it just gets a smaller-than-requested block.
+    """
+    b = min(want, n_channels)
+    while n_channels % b:
+        b -= 1
+    return b
+
+
+def scatter_events_batched(op: LayerOp, params: EConvParams, vp: jnp.ndarray,
+                           xyc: jnp.ndarray, gate: jnp.ndarray,
+                           co_blk: int = 128,
+                           use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """Accumulate all slots' event batches into all slots' membranes.
+
+    One slot-batched Pallas launch per layer, whatever the kind — the
+    parametrized scatter primitive of the composable dataflow:
+
+      conv: per-event ``K x K x Co`` weight-patch accumulate (halo coords);
+      pool: strided per-event one-site add (``kernels/event_pool``);
+      fc:   gated weight-row gather accumulate (``kernels/event_fc``).
+    """
+    spec = op.spec
+    if spec.kind == "conv":
+        # shift into halo coordinates (same arithmetic as scatter_event)
+        off = jnp.asarray([spec.padding, spec.padding, 0], jnp.int32)
+        return event_conv_batched(vp, params.w, xyc + off, gate,
+                                  co_blk=_channel_block(spec.out_channels,
+                                                        co_blk),
+                                  use_pallas=use_pallas)
+    if spec.kind == "pool":
+        return event_pool_batched(vp, params.w, xyc, gate,
+                                  stride=spec.stride, use_pallas=use_pallas)
+    return event_fc_batched(vp, params.w, xyc, gate, in_shape=spec.in_shape,
+                            d_blk=_channel_block(spec.out_channels, co_blk),
+                            use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# The executor step: leak -> scatter -> clip -> fire -> reset, any kind.
+# ---------------------------------------------------------------------------
+
+def layer_timestep(op: LayerOp, params: EConvParams, vp: jnp.ndarray,
+                   xyc: jnp.ndarray, gate: jnp.ndarray,
+                   alive_t: jnp.ndarray, co_blk: int = 128,
+                   use_pallas: Optional[bool] = None):
+    """One layer x one timestep for every slot: the uniform datapath.
+
+    ``alive_t`` (N,) freezes slots whose request has no timestep here (the
+    tail of a window past a short request) — their state and spikes are
+    held/zeroed so a frozen slot is bit-identical to not stepping it.
+    """
+    lp = op.lif
+    h = op.halo
+    vp_l = write_interior(vp, apply_leak(interior(vp, h), lp.leak, 1,
+                                         lp.leak_mode), h)
+    vp_s = scatter_events_batched(op, params, vp_l, xyc, gate, co_blk,
+                                  use_pallas)
+    v = clip_state(interior(vp_s, h), lp)
+    v, s = fire_and_reset(v, lp)
+    vp_new = write_interior(vp_s, v, h)
+    m = alive_t.reshape(-1, 1, 1, 1)
+    return jnp.where(m > 0, vp_new, vp), s * m
+
+
+def frame_to_events(s: jnp.ndarray, cap: int):
+    """Slot-batched dense spike frames -> padded event lists (routing).
+
+    s: (N, H, W, C) binary spike frames. Returns ``(xyc (N,cap,3),
+    gate (N,cap), n_drop (N,))``. Event order is row-major (the same order
+    ``dense_to_events`` emits within a timestep); overflow beyond ``cap``
+    is dropped and counted — the inter-layer FIFO back-pressure.
+    """
+    N, H, W, C = s.shape
+    S = H * W * C
+    cap = min(cap, S)
+    flat = s.reshape(N, S)
+    nz = flat != 0
+    # first `cap` nonzero sites in row-major order: nonzero sites keep
+    # their flat index as sort key, zeros get the sentinel S; top_k of the
+    # negated keys is O(S log cap) vs a full argsort's O(S log S).
+    idx = jax.lax.broadcasted_iota(jnp.int32, (N, S), 1)
+    key = jnp.where(nz, idx, S)
+    order = -jax.lax.top_k(-key, cap)[0]                          # (N, cap)
+    gate = (order < S).astype(s.dtype)
+    order = jnp.minimum(order, S - 1)                             # clamp pads
+    x = order // (W * C)
+    y = (order // C) % W
+    c = order % C
+    xyc = jnp.stack([x, y, c], axis=-1)
+    n = jnp.sum(nz.astype(jnp.int32), axis=1)
+    n_drop = jnp.maximum(n - cap, 0)
+    return xyc, gate, n_drop
+
+
+def apply_idle_decay(states, dt, *, program: LayerProgram):
+    """Apply each slot's deferred idle decay to every layer's interior.
+
+    ``dt`` (N,) counts the input-free timesteps accumulated while the slot
+    was being skipped; `core.lif.idle_decay` collapses them analytically
+    (leak + clip) in one elementwise pass.  Slots with ``dt == 0`` come
+    back bit-identical.  Traced inside :func:`window_step`, so the flush
+    costs no separate dispatch.
+    """
+    dt4 = dt.astype(jnp.float32).reshape(-1, 1, 1, 1)
+    out = []
+    for vp, op in zip(states, program.ops):
+        if not supports_idle_skip(op.lif):
+            # soft-reset networks run with idle_skip force-disabled, so
+            # their deferred dt is always zero — pass the slab through
+            out.append(vp)
+            continue
+        dec = idle_decay(interior(vp, op.halo), op.lif, dt4)
+        out.append(write_interior(vp, dec, op.halo))
+    return tuple(out)
+
+
+def window_step(params: Sequence[EConvParams], states, class_counts,
+                ev_xyc, ev_gate, alive, pre_dt, *, program: LayerProgram,
+                co_blk: int = 128, use_pallas: Optional[bool] = None):
+    """Advance every slot through one window of timesteps (jit this).
+
+    The whole-network step the serving engine executes: per timestep the
+    program chain runs layer by layer, each layer one slot-batched scatter
+    launch, with :func:`frame_to_events` routing the FIRE frame into the
+    next layer's event bucket on device.
+
+    Args:
+      states:       tuple of per-layer membrane slabs, each (N, Hp, Wp, C).
+      class_counts: (N, n_classes) running rate-decode accumulator.
+      ev_xyc:       (W, N, E0, 3) collector output — layer-0 events binned
+                    by timestep-within-window, per slot.
+      ev_gate:      (W, N, E0) validity gates.
+      alive:        (W, N) 1.0 where the slot has a real timestep there.
+      pre_dt:       (N,) deferred idle timesteps per slot, applied as one
+                    analytic decay before stepping (fused here so a slot
+                    re-entering after skipped windows costs no extra
+                    dispatch; all-zero for slots with nothing pending).
+
+    Returns new states, class_counts, per-layer per-slot consumed-event
+    counts (L, N) and inter-layer overflow drops (L, N) for this window.
+    """
+    L = len(program.ops)
+    N = class_counts.shape[0]
+    states = apply_idle_decay(states, pre_dt, program=program)
+
+    def one_t(carry, xs_t):
+        states, class_counts, counts, drops = carry
+        xyc, gate, alive_t = xs_t
+        states = list(states)
+        s = None
+        for op, p in zip(program.ops, params):
+            if op.index > 0:
+                xyc, gate, n_drop = frame_to_events(s, op.step_capacity)
+                drops = drops.at[op.index].add(n_drop)
+            counts = counts.at[op.index].add(jnp.sum(gate, axis=1))
+            states[op.index], s = layer_timestep(op, p, states[op.index],
+                                                 xyc, gate, alive_t, co_blk,
+                                                 use_pallas)
+        class_counts = class_counts + jnp.sum(s, axis=(1, 2))
+        return (tuple(states), class_counts, counts, drops), None
+
+    counts0 = jnp.zeros((L, N), jnp.float32)
+    drops0 = jnp.zeros((L, N), jnp.int32)
+    (states, class_counts, counts, drops), _ = jax.lax.scan(
+        one_t, (tuple(states), class_counts, counts0, drops0),
+        (ev_xyc, ev_gate, alive))
+    return states, class_counts, counts, drops
+
+
+# ---------------------------------------------------------------------------
+# The single-stream scan driver (explicit events, lazy TLU leak, RST).
+# ---------------------------------------------------------------------------
+
+def layer_event_forward(op: LayerOp, params: EConvParams,
+                        stream: ev.EventStream, out_capacity: int,
+                        n_timesteps: int):
+    """Consume an event stream through one LayerOp; emit the output stream.
+
+    Equivalent to `core.econv.dense_forward` on the densified input
+    (tested), but performs work proportional to the number of events + the
+    number of *active* timestep boundaries — the paper's
+    energy-proportionality property, with idle timesteps skipped by the
+    lazy TLU leak.
+
+    The lazy timestep skip is exact only for hard resets (a reset neuron
+    cannot re-cross the threshold without new input); SNE's datapath resets
+    the membrane on fire, so this matches the hardware.
+    """
+    spec = op.spec
+    Ho, Wo, Co = spec.out_shape
+    p = op.lif
+    if p.reset_mode != "zero":
+        raise ValueError("event path requires reset_mode='zero' (hardware "
+                         "semantics; lazy TLU skip is exact only then)")
+    n_flat = Ho * Wo * Co
+    # Flat coordinate tables for FIRE emission.
+    ii = jnp.arange(n_flat, dtype=jnp.int32)
+    fx = ii // (Wo * Co)
+    fy = (ii // Co) % Wo
+    fc = ii % Co
+
+    out0 = ev.EventStream(
+        t=jnp.full((out_capacity,), n_timesteps, jnp.int32),
+        x=jnp.zeros((out_capacity,), jnp.int32),
+        y=jnp.zeros((out_capacity,), jnp.int32),
+        c=jnp.zeros((out_capacity,), jnp.int32),
+        op=jnp.full((out_capacity,), ev.OP_UPDATE, jnp.int32),
+        valid=jnp.zeros((out_capacity,), bool),
+    )
+
+    def fire_emit(vp, t_fire, out, cursor, emitted):
+        """Finish timestep ``t_fire``: clip, threshold, emit, reset."""
+        v_int = clip_state(interior(vp, op.halo), p)
+        v_new, s = fire_and_reset(v_int, p)
+        vp = write_interior(vp, v_new, op.halo)
+        mask = s.reshape(-1) > 0
+        k = jnp.cumsum(mask.astype(jnp.int32)) - 1 + cursor
+        ok = mask & (k < out_capacity)
+        kk = jnp.where(ok, k, out_capacity)  # out-of-range => dropped scatter
+        out = ev.EventStream(
+            t=out.t.at[kk].set(t_fire, mode="drop"),
+            x=out.x.at[kk].set(fx, mode="drop"),
+            y=out.y.at[kk].set(fy, mode="drop"),
+            c=out.c.at[kk].set(fc, mode="drop"),
+            op=out.op,
+            valid=out.valid.at[kk].set(True, mode="drop"),
+        )
+        n = jnp.sum(mask.astype(jnp.int32))
+        return vp, out, cursor + n, emitted + n
+
+    def step(carry, e):
+        vp, t_cur, out, cursor, emitted, n_upd, n_bnd = carry
+        e_t, e_x, e_y, e_c, e_op, e_valid = e
+        # Padding slots sort to the tail; clamping their timestep to the
+        # last real step (T-1) makes them trigger the final boundary flush
+        # while keeping the leak count exactly equal to the dense path's.
+        t_evt = jnp.minimum(jnp.where(e_valid, e_t, jnp.int32(n_timesteps)),
+                            jnp.int32(n_timesteps - 1))
+        crossing = t_evt > t_cur
+
+        def do_boundary(args):
+            vp, out, cursor, emitted = args
+            vp, out, cursor, emitted = fire_emit(vp, t_cur, out, cursor,
+                                                 emitted)
+            dt = t_evt - t_cur
+            v_int = clip_state(apply_leak(interior(vp, op.halo), p.leak, dt,
+                                          p.leak_mode), p)
+            vp = write_interior(vp, v_int, op.halo)
+            return vp, out, cursor, emitted
+
+        vp, out, cursor, emitted = jax.lax.cond(
+            crossing, do_boundary, lambda a: a, (vp, out, cursor, emitted))
+        t_cur = jnp.maximum(t_cur, t_evt)
+        n_bnd = n_bnd + crossing.astype(jnp.int32)
+
+        # RST_OP: clear every membrane (paper: all clusters activated).
+        is_rst = e_valid & (e_op == ev.OP_RST)
+        vp = jnp.where(is_rst, jnp.zeros_like(vp), vp)
+
+        # UPDATE_OP: scatter the weight patch (gate zeroes everything else).
+        is_upd = e_valid & (e_op == ev.OP_UPDATE)
+        gate = is_upd.astype(vp.dtype)
+        vp = scatter_event(op, params, vp, e_x, e_y, e_c, gate)
+        n_upd = n_upd + is_upd.astype(jnp.int32)
+        return (vp, t_cur, out, cursor, emitted, n_upd, n_bnd), None
+
+    vp0 = padded_state(op, params.w.dtype)
+    carry0 = (vp0, jnp.int32(0), out0, jnp.int32(0), jnp.int32(0),
+              jnp.int32(0), jnp.int32(0))
+    xs = (stream.t, stream.x, stream.y, stream.c, stream.op, stream.valid)
+    (vp, t_cur, out, cursor, emitted, n_upd, n_bnd), _ = jax.lax.scan(
+        step, carry0, xs)
+    # Final flush: fire the last accumulated timestep (idempotent if the
+    # padding slots already advanced t_cur past the last real event).
+    fire_t = jnp.minimum(t_cur, jnp.int32(n_timesteps - 1))
+    vp, out, cursor, emitted = fire_emit(vp, fire_t, out, cursor, emitted)
+    stats = EConvStats(
+        n_update_events=n_upd,
+        n_sops=n_upd * spec.updates_per_event(),
+        n_out_events=emitted,
+        n_dropped=jnp.maximum(emitted - out_capacity, 0),
+        n_boundaries=n_bnd,
+    )
+    return out, interior(vp, op.halo), stats
+
+
+def run_stream(program: LayerProgram, params: Sequence[EConvParams],
+               stream: ev.EventStream, capacities: Sequence[int],
+               n_timesteps: int):
+    """Chain :func:`layer_event_forward` through the whole program.
+
+    ``capacities[i]`` sizes layer *i*'s output event buffer (the FIFO/DMA
+    capacity analogue).  Returns the final output stream plus the per-layer
+    stats tuple; `sne_net.event_apply` wraps these into NetworkEventStats.
+    """
+    if len(capacities) != len(program.ops):
+        raise ValueError("need one output capacity per layer")
+    stats_all = []
+    s = stream
+    for op, p, cap in zip(program.ops, params, capacities):
+        s, _, st = layer_event_forward(op, p, s, cap, n_timesteps)
+        stats_all.append(st)
+    return s, tuple(stats_all)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import events as ev
 from repro.core.econv import (EConvParams, EConvSpec, EConvStats,
-                              dense_forward, event_forward, init_econv)
+                              dense_forward, init_econv)
 from repro.core.lif import LifParams
 from repro.core.quant import QuantizedLayer, fake_quant_weights
 
@@ -147,17 +147,18 @@ def event_apply(params: Sequence[EConvParams], spec: SNNSpec,
 
     ``capacities[i]`` sizes layer *i*'s output event buffer (the FIFO/DMA
     capacity analogue).  Returns the final output stream + per-layer stats.
+
+    The spec is compiled once (`core.layer_program.compile_program`, cached)
+    and the compiled program's stream driver chains every layer through the
+    unified ``leak -> scatter -> clip -> fire -> reset`` executor.
     """
-    if len(capacities) != len(spec.layers):
-        raise ValueError("need one output capacity per layer")
-    stats_all = []
-    s = stream
-    for p, l, cap in zip(params, spec.layers, capacities):
-        s, _, st = event_forward(p, l, s, cap, spec.n_timesteps)
-        stats_all.append(st)
+    from repro.core.layer_program import compile_program, run_stream
+    program = compile_program(spec)
+    s, stats_all = run_stream(program, params, stream, capacities,
+                              spec.n_timesteps)
     total_ev = sum(st.n_update_events for st in stats_all)
     total_sops = sum(st.n_sops for st in stats_all)
-    return s, NetworkEventStats(tuple(stats_all), total_ev, total_sops)
+    return s, NetworkEventStats(stats_all, total_ev, total_sops)
 
 
 def event_predict(params, spec: SNNSpec, stream: ev.EventStream,
@@ -182,8 +183,11 @@ def quantize_snn(params: Sequence[EConvParams],
 
 def default_capacities(spec: SNNSpec, activity: float = 0.05,
                        slack: float = 4.0) -> List[int]:
-    caps = []
-    for l in spec.layers:
-        shape = (spec.n_timesteps,) + l.out_shape
-        caps.append(ev.capacity_for(shape, activity, slack))
-    return caps
+    """Whole-inference output buffers for `event_apply`.
+
+    Delegates to the single-sourced heuristic in `core.layer_program`
+    (`layer_stream_capacity`) so core and serving capacity sizing share
+    one rule and cannot drift.
+    """
+    from repro.core.layer_program import default_stream_capacities
+    return default_stream_capacities(spec, activity, slack)

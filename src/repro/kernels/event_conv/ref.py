@@ -7,9 +7,10 @@ tensor at origin ``(x, y)``:
 
     v[x + i, y + j, :] += W_flipped[i, j, c, :]      for i, j in [0, K)
 
-This is exactly what `repro.core.econv._scatter_event` does one event at a
-time; the kernel consumes a whole event batch per invocation (the paper's
-"dense computational phase" compressed from sparse activity).
+This is exactly what `repro.core.layer_program.scatter_event` does one
+event at a time for ``kind == "conv"``; the kernel consumes a whole event
+batch per invocation (the paper's "dense computational phase" compressed
+from sparse activity).
 """
 from __future__ import annotations
 

@@ -1,0 +1,3 @@
+from repro.kernels.event_fc.ops import event_fc, event_fc_batched
+
+__all__ = ["event_fc", "event_fc_batched"]

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: event-driven fully-connected row-gather accumulate.
+
+TPU adaptation of the SNE FC datapath (the eCNN head layers run on the
+same event-consume pipeline as conv; an FC "receptive field" is the whole
+output vector).  Structural mapping, mirroring the conv/pool kernels:
+
+  * the **output membrane vector is the cluster state memory** — one
+    slot's ``(Dout,)`` state plus the weight block stay resident in VMEM
+    for the whole event batch.  For the largest shipped layer (Din = 2048,
+    Dout = 512) the weight block is 2048*512*4 = 4 MB — well inside VMEM;
+  * the **grid is (slot, Dout-block)** — each grid step owns one slot's
+    ``DBLK``-wide output stripe and consumes the full event batch against
+    it (every "cluster" sees every event, C-XBAR broadcast);
+  * the per-event update is a **gated row gather**: the event's flattened
+    input coordinate selects one weight row (sublane-dynamic index), and
+    the whole lane-dimension row accumulates in one VPU add — the TPU
+    analogue of SNE updating a full receptive-field column per event.
+
+Accumulation order per stripe is the event order, exactly the reference
+oracle's, so results are bit-for-bit equal to `ref.event_fc_ref`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _event_fc_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
+                             n_events: int, W: int, C: int):
+    """One grid step: one slot's event batch against one output stripe.
+
+    ev_ref:   (1, E, 3) int32 — this slot's events (x, y, c), input coords.
+    gate_ref: (1, E, 1) float32 — 1.0 valid / 0.0 padding.
+    w_ref:    (Din, DBLK) float32 — weight stripe, shared by slots.
+    v_ref:    (1, 1, 1, DBLK) float32 — this slot's membrane stripe.
+    o_ref:    (1, 1, 1, DBLK) float32 — output stripe.
+    """
+    o_ref[...] = v_ref[...]
+
+    def body(i, _):
+        x = ev_ref[0, i, 0]
+        y = ev_ref[0, i, 1]
+        c = ev_ref[0, i, 2]
+        g = gate_ref[0, i, 0]
+        flat = (x * W + y) * C + c
+        row = w_ref[flat, :] * g                          # (DBLK,)
+        o_ref[0, 0, 0, :] = o_ref[0, 0, 0, :] + row
+        return ()
+
+    jax.lax.fori_loop(0, n_events, body, ())
+
+
+@functools.partial(jax.jit, static_argnames=("in_shape", "d_blk",
+                                             "interpret"))
+def event_fc_pallas(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
+                    ev_gate: jnp.ndarray, in_shape: Tuple[int, int, int],
+                    d_blk: int = 128, interpret: bool = False):
+    """Accumulate an FC event batch into the output membrane state.
+
+    Matches :func:`repro.kernels.event_fc.ref.event_fc_ref` bit-for-bit
+    (one gated row add per event, in event order).  Single-stream entry
+    point — the N=1 special case of the batched kernel, same body.
+
+    Args:
+      v:        (1, 1, Dout) membrane state.
+      w:        (Din, Dout) weight matrix.
+      ev_xyc:   (E, 3) int32 events in input coordinates.
+      ev_gate:  (E,) float32 validity gate.
+      in_shape: (H, W, C) static input geometry (flattening rule).
+      d_blk:    output-block size (lane dimension of the stripe).
+    """
+    return event_fc_batched_pallas(v[None], w, ev_xyc[None], ev_gate[None],
+                                   in_shape=in_shape, d_blk=d_blk,
+                                   interpret=interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("in_shape", "d_blk",
+                                             "interpret"))
+def event_fc_batched_pallas(v: jnp.ndarray, w: jnp.ndarray,
+                            ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                            in_shape: Tuple[int, int, int],
+                            d_blk: int = 128, interpret: bool = False):
+    """Accumulate N slots' FC event batches into N stripes in one launch.
+
+    Args:
+      v:        (N, 1, 1, Dout) membrane states, one per slot.
+      w:        (Din, Dout) weight matrix, shared across slots.
+      ev_xyc:   (N, E, 3) int32 events per slot, input coordinates.
+      ev_gate:  (N, E) float validity gates.
+      in_shape: (H, W, C) static input geometry.
+      d_blk:    output-block size.
+    """
+    N = v.shape[0]
+    Dout = v.shape[-1]
+    Din = w.shape[0]
+    H, W, C = in_shape
+    if H * W * C != Din:
+        raise ValueError(f"in_shape {in_shape} flattens to {H * W * C} "
+                         f"!= weight rows {Din}")
+    if ev_xyc.shape[0] != N or ev_gate.shape[0] != N:
+        raise ValueError(
+            f"slot-axis mismatch: v has {N} slots, events "
+            f"{ev_xyc.shape[0]}, gates {ev_gate.shape[0]}")
+    E = ev_xyc.shape[1]
+    if N == 0 or E == 0:
+        # degenerate batch (idle-skip compaction) — identity, skip the launch
+        return v
+    d_blk = min(d_blk, Dout)
+    if Dout % d_blk:
+        raise ValueError(f"Dout={Dout} not divisible by d_blk={d_blk}")
+    gate3 = ev_gate.astype(v.dtype).reshape(N, E, 1)
+
+    grid = (N, Dout // d_blk)
+    return pl.pallas_call(
+        functools.partial(_event_fc_batched_kernel, n_events=E, W=W, C=C),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, E, 3), lambda n, d: (n, 0, 0)),   # slot events
+            pl.BlockSpec((1, E, 1), lambda n, d: (n, 0, 0)),   # slot gates
+            pl.BlockSpec((Din, d_blk), lambda n, d: (0, d)),   # weight stripe
+            pl.BlockSpec((1, 1, 1, d_blk), lambda n, d: (n, 0, 0, d)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d_blk), lambda n, d: (n, 0, 0, d)),
+        out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+        interpret=interpret,
+    )(ev_xyc, gate3, w, v)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the event-FC row-gather-accumulate kernel.
+
+Semantics (MNF-style event-driven fully-connected update, applied on the
+SNE event-consume datapath): each input event ``(x, y, c)`` selects one row
+of the weight matrix by its flattened input coordinate and accumulates the
+whole gated row into the output membrane vector:
+
+    v[0, 0, :] += W[(x * W_in + y) * C + c, :]
+
+This is what `repro.core.layer_program.scatter_event` does one event at a
+time for ``kind == "fc"``; the kernel consumes a whole event batch per
+invocation — the FC layer's "dense computational phase".
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def event_fc_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
+                 ev_gate: jnp.ndarray,
+                 in_shape: Tuple[int, int, int]) -> jnp.ndarray:
+    """Oracle: sequential gated row-gather accumulate.
+
+    Args:
+      v:        (1, 1, Dout) membrane state (FC output geometry).
+      w:        (Din, Dout) weight matrix, Din == H * W * C.
+      ev_xyc:   (E, 3) int32 event coordinates (x, y, c) in input coords.
+      ev_gate:  (E,) float gate; 0.0 disables an event (padding slot).
+      in_shape: (H, W, C) input geometry used to flatten coordinates.
+
+    Returns the updated membrane state.  One row-add per event, in event
+    order — the bit-for-bit contract for the kernel.
+    """
+    _, W, C = in_shape
+
+    def body(vv, e):
+        xyc, g = e
+        flat = (xyc[0] * W + xyc[1]) * C + xyc[2]
+        row = jnp.take(w, flat, axis=0) * g               # (Dout,)
+        return vv.at[0, 0, :].add(row), None
+
+    v, _ = jax.lax.scan(body, v, (ev_xyc, ev_gate))
+    return v
+
+
+def event_fc_batched_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
+                         ev_gate: jnp.ndarray,
+                         in_shape: Tuple[int, int, int]) -> jnp.ndarray:
+    """Oracle for the batched kernel: the single-stream oracle per slot.
+
+    Args:
+      v:        (N, 1, 1, Dout) membrane states, one per slot.
+      w:        (Din, Dout) shared weight matrix.
+      ev_xyc:   (N, E, 3) per-slot event coordinates.
+      ev_gate:  (N, E) per-slot gates.
+      in_shape: (H, W, C) input geometry.
+    """
+    return jax.vmap(event_fc_ref, in_axes=(0, None, 0, 0, None))(
+        v, w, ev_xyc, ev_gate, in_shape)

@@ -1,0 +1,3 @@
+from repro.kernels.event_pool.ops import event_pool, event_pool_batched
+
+__all__ = ["event_pool", "event_pool_batched"]

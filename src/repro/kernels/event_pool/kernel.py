@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: event-driven sum-pool scatter-accumulate.
+
+TPU adaptation of the SNE pool datapath.  On the ASIC a pool layer runs
+the same event-consume pipeline as conv, but each event updates exactly
+one neuron (the paper's ``updates_per_event == 1``); on TPU the structural
+mapping mirrors `kernels/event_conv/kernel.py`:
+
+  * the **membrane slab is the cluster state memory** — one slot's whole
+    ``(Ho, Wo, C)`` pool state stays resident in VMEM for the full event
+    batch (pool layers are small: C <= 32 in every shipped net, so the
+    slab is a few hundred kB at most);
+  * the **slot axis is a grid dimension** — grid step ``n`` owns slot
+    *n*'s slab and consumes slot *n*'s event batch (C-XBAR steering);
+  * the per-event update is a one-row read-modify-write: the channel axis
+    (lane dimension) is updated as a full vector with a one-hot channel
+    select, which keeps the store lane-aligned instead of issuing a
+    single-element scatter — the TPU-honest form of "one neuron update".
+
+Accumulation order per slab is the event order, exactly the reference
+oracle's, so results are bit-for-bit equal to `ref.event_pool_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _event_pool_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
+                               stride: int, n_events: int):
+    """One grid step: one slot's event batch against its pool slab.
+
+    ev_ref:   (1, E, 3) int32 — this slot's events (x, y, c), input coords.
+    gate_ref: (1, E, 1) float32 — 1.0 valid / 0.0 padding.
+    w_ref:    (1, 1, C) float32 — per-channel weights, shared by slots.
+    v_ref:    (1, Ho, Wo, C) float32 — this slot's membrane slab.
+    o_ref:    (1, Ho, Wo, C) float32 — output slab.
+    """
+    o_ref[...] = v_ref[...]
+    Ho, Wo, C = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 1, C), 2)
+
+    def body(i, _):
+        x = ev_ref[0, i, 0]
+        y = ev_ref[0, i, 1]
+        c = ev_ref[0, i, 2]
+        g = gate_ref[0, i, 0]
+        xo = x // stride
+        yo = y // stride
+        # VALID-window rule: pooled coords past the grid are dropped (the
+        # gated contribution is zeroed; the clamped RMW is then a no-op)
+        ok = ((xo < Ho) & (yo < Wo)).astype(o_ref.dtype)
+        sel = (lanes == c).astype(o_ref.dtype)            # one-hot channel
+        contrib = sel * w_ref[...] * (g * ok)             # (1, 1, C)
+        xo = jnp.minimum(xo, Ho - 1)
+        yo = jnp.minimum(yo, Wo - 1)
+        cur = o_ref[0, pl.dslice(xo, 1), pl.dslice(yo, 1), :]
+        o_ref[0, pl.dslice(xo, 1), pl.dslice(yo, 1), :] = cur + contrib
+        return ()
+
+    jax.lax.fori_loop(0, n_events, body, ())
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+def event_pool_pallas(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
+                      ev_gate: jnp.ndarray, stride: int,
+                      interpret: bool = False):
+    """Scatter-accumulate a pooled event batch into the membrane state.
+
+    Matches :func:`repro.kernels.event_pool.ref.event_pool_ref` bit-for-bit
+    (one float add per event, in event order).  Single-stream entry point —
+    the N=1 special case of the batched kernel, same body.
+
+    Args:
+      v:       (Ho, Wo, C) membrane state (no halo for pool layers).
+      w:       (C,) per-channel synapse weights.
+      ev_xyc:  (E, 3) int32 events in input coordinates.
+      ev_gate: (E,) float32 validity gate.
+      stride:  pooling stride.
+    """
+    return event_pool_batched_pallas(v[None], w, ev_xyc[None], ev_gate[None],
+                                     stride=stride, interpret=interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+def event_pool_batched_pallas(v: jnp.ndarray, w: jnp.ndarray,
+                              ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                              stride: int, interpret: bool = False):
+    """Scatter N slots' pooled event batches into N slabs in one launch.
+
+    Args:
+      v:       (N, Ho, Wo, C) membrane states, one per slot.
+      w:       (C,) per-channel weights, shared across slots.
+      ev_xyc:  (N, E, 3) int32 events per slot, input coordinates.
+      ev_gate: (N, E) float validity gates.
+      stride:  pooling stride.
+    """
+    N, Ho, Wo, C = v.shape
+    if ev_xyc.shape[0] != N or ev_gate.shape[0] != N:
+        raise ValueError(
+            f"slot-axis mismatch: v has {N} slots, events "
+            f"{ev_xyc.shape[0]}, gates {ev_gate.shape[0]}")
+    E = ev_xyc.shape[1]
+    if N == 0 or E == 0:
+        # degenerate batch (idle-skip compaction) — identity, skip the launch
+        return v
+    gate3 = ev_gate.astype(v.dtype).reshape(N, E, 1)
+    w3 = w.astype(v.dtype).reshape(1, 1, C)
+
+    grid = (N,)
+    return pl.pallas_call(
+        functools.partial(_event_pool_batched_kernel, stride=stride,
+                          n_events=E),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, E, 3), lambda n: (n, 0, 0)),    # slot events
+            pl.BlockSpec((1, E, 1), lambda n: (n, 0, 0)),    # slot gates
+            pl.BlockSpec((1, 1, C), lambda n: (0, 0, 0)),    # shared weights
+            pl.BlockSpec((1, Ho, Wo, C), lambda n: (n, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Ho, Wo, C), lambda n: (n, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+        interpret=interpret,
+    )(ev_xyc, gate3, w3, v)

@@ -1,0 +1,55 @@
+"""jit'd public wrapper for the event-pool kernel.
+
+Selects the Pallas TPU kernel on TPU backends and interpret mode elsewhere
+(interpret mode executes the kernel body in Python on CPU — the validation
+path mandated for this container), mirroring `kernels/event_conv/ops.py`.
+
+``use_pallas=False`` is the *validation oracle*, not a production path: it
+replays the kernel's per-event accumulation order sequentially so served
+results are bitwise identical across both modes (pinned by
+`tests/test_layer_program.py`); prefer the default on anything large.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.event_pool.kernel import (event_pool_batched_pallas,
+                                             event_pool_pallas)
+from repro.kernels.event_pool.ref import (event_pool_batched_ref,
+                                          event_pool_ref)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def event_pool(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
+               ev_gate: jnp.ndarray, stride: int,
+               use_pallas: bool | None = None) -> jnp.ndarray:
+    """Accumulate a batch of pooled UPDATE events into the membrane state.
+
+    ``use_pallas=None`` auto-selects: Pallas (compiled) on TPU, Pallas
+    interpret mode on CPU. ``use_pallas=False`` runs the pure-jnp oracle.
+    """
+    if use_pallas is False:
+        return event_pool_ref(v, w, ev_xyc, ev_gate, stride)
+    return event_pool_pallas(v, w, ev_xyc, ev_gate, stride=stride,
+                             interpret=not _on_tpu())
+
+
+def event_pool_batched(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
+                       ev_gate: jnp.ndarray, stride: int,
+                       use_pallas: bool | None = None) -> jnp.ndarray:
+    """Accumulate N slots' pooled event batches into N slabs at once.
+
+    Same auto-selection rules as :func:`event_pool`.  Empty batches (no
+    slots, or a zero-length event axis after idle-skip compaction) return
+    ``v`` unchanged without launching anything.
+    """
+    if v.shape[0] == 0 or ev_xyc.shape[1] == 0:
+        return v
+    if use_pallas is False:
+        return event_pool_batched_ref(v, w, ev_xyc, ev_gate, stride)
+    return event_pool_batched_pallas(v, w, ev_xyc, ev_gate, stride=stride,
+                                     interpret=not _on_tpu())

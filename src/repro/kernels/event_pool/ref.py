@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the event-pool scatter-accumulate kernel.
+
+Semantics (the SNE pool layer on the same event-consume datapath as conv,
+paper §III-C): a spiking sum-pool routes each input event ``(x, y, c)`` to
+exactly one output site, scaled by the per-channel synapse weight:
+
+    v[x // s, y // s, c] += w[c]
+
+This is what `repro.core.layer_program.scatter_event` does one event at a
+time for ``kind == "pool"``; the kernel consumes a whole event batch per
+invocation.  Events whose pooled coordinate falls outside the output grid
+(possible only when H % stride != 0 — the dense path's VALID window drops
+the same tail rows) are dropped, matching the dense reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def event_pool_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
+                   ev_gate: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """Oracle: sequential scatter-accumulate of pooled events.
+
+    Args:
+      v:       (Ho, Wo, C) membrane state (pool layers have no halo).
+      w:       (C,) per-channel synapse weights.
+      ev_xyc:  (E, 3) int32 event coordinates (x, y, c) in *input* coords.
+      ev_gate: (E,) float gate; 0.0 disables an event (padding slot).
+      stride:  pooling stride (== kernel for spiking sum-pool).
+
+    Returns the updated membrane state.  Accumulation order is the event
+    order, one add per event — the bit-for-bit contract for the kernel.
+    """
+    Ho, Wo, _ = v.shape
+
+    def body(vv, e):
+        xyc, g = e
+        xo, yo = xyc[0] // stride, xyc[1] // stride
+        val = jnp.take(w, xyc[2]) * g
+        # mode="drop" makes the out-of-grid tail explicit (VALID-window rule)
+        return vv.at[xo, yo, xyc[2]].add(val, mode="drop"), None
+
+    v, _ = jax.lax.scan(body, v, (ev_xyc, ev_gate))
+    return v
+
+
+def event_pool_batched_ref(v: jnp.ndarray, w: jnp.ndarray,
+                           ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                           stride: int) -> jnp.ndarray:
+    """Oracle for the batched kernel: the single-stream oracle per slot.
+
+    Args:
+      v:       (N, Ho, Wo, C) membrane states, one per slot.
+      w:       (C,) shared per-channel weights.
+      ev_xyc:  (N, E, 3) per-slot event coordinates.
+      ev_gate: (N, E) per-slot gates.
+
+    vmap over the slot axis keeps the per-slab accumulation order identical
+    to running :func:`event_pool_ref` slot by slot.
+    """
+    return jax.vmap(event_pool_ref, in_axes=(0, None, 0, 0, None))(
+        v, w, ev_xyc, ev_gate, stride)

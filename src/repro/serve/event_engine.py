@@ -3,8 +3,8 @@
 The LM serving engine (`repro.serve.engine`) batches token decode over
 fixed slots; this module is its event-domain twin — the missing subsystem
 between "one DVS recording at a time" (`core/sne_net.event_apply` over
-`core/econv.event_forward`) and a production event-serving system. It mirrors the SNE macro-architecture
-(paper §III-D):
+`core/econv.event_forward`) and a production event-serving system. It
+mirrors the SNE macro-architecture (paper §III-D):
 
   * **slots == engine slices** — a fixed-capacity set of concurrent
     inferences, each owning one batched row of every layer's membrane
@@ -17,23 +17,30 @@ between "one DVS recording at a time" (`core/sne_net.event_apply` over
     capacity drops the excess and *counts* it (FIFO overflow), and
     admission blocks when no slot is free (queue back-pressure);
   * **batched step == C-XBAR broadcast** — all active slots advance
-    together through one jitted per-window step; conv layers scatter all
-    slots' event batches into all slots' membrane slabs in a single
-    ``pallas_call`` with a batch grid dimension
-    (`kernels.event_conv.event_conv_batched`), the TPU analogue of the
-    C-XBAR multicasting an event stream across parallel engine slices.
+    together through one jitted per-window step; *every* layer kind
+    scatters all slots' event batches into all slots' membrane slabs in a
+    single ``pallas_call`` with a batch grid dimension
+    (`kernels.event_conv` / `kernels.event_pool` / `kernels.event_fc`),
+    the TPU analogue of the C-XBAR multicasting an event stream across
+    parallel engine slices.
 
 Work in the synaptic path is proportional to measured events (the paper's
 energy-proportionality), and every completed request carries a telemetry
 record mapping its measured event counts through the analytic hardware
 model (`serve/telemetry.py`).
 
-Execution semantics: per timestep and per layer the step computes
-``leak -> scatter(events) -> clip -> fire -> reset``, which is exactly
-`core.lif.lif_step` with the dense synaptic current replaced by the event
-scatter — so engine outputs match the dense path (`sne_net.dense_apply`)
-up to float summation order, and the conv scatter itself is bit-for-bit
-the single-stream kernel per slab.
+Execution semantics: the engine owns no datapath of its own.  At
+construction the network is compiled to a layer program
+(`core.layer_program.compile_program`) and the jitted per-window step IS
+`core.layer_program.window_step` — the same unified
+``leak -> scatter(events) -> clip -> fire -> reset`` executor the core
+event path (`econv.event_forward`, `sne_net.event_apply`) runs, here over
+slot-batched state.  Every layer kind is one slot-batched Pallas launch
+per timestep (`kernels/event_conv`, `kernels/event_pool`,
+`kernels/event_fc`), with inter-layer event routing
+(`layer_program.frame_to_events`) staying on device — so engine outputs
+match the dense path (`sne_net.dense_apply`) up to float summation order,
+and each scatter is bit-for-bit its single-stream kernel per slab.
 
 **Window-level idle skip (the TLU trick at serving scale, §III-D4.iii).**
 With ``idle_skip=True`` (default, requires hard resets) the collector also
@@ -55,19 +62,21 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import events as ev
-from repro.core.econv import EConvParams, EConvSpec, _halo
+from repro.core.econv import EConvParams
 from repro.core.engine import SneConfig
-from repro.core.lif import (apply_leak, fire_and_reset, idle_decay,
-                            supports_idle_skip)
+from repro.core.layer_program import (LayerOp, compile_program,
+                                      window_step)
+from repro.core.layer_program import \
+    default_step_capacities as _program_step_capacities
+from repro.core.lif import supports_idle_skip
 from repro.core.sne_net import SNNSpec
-from repro.kernels.event_conv.ops import event_conv_batched
 from repro.serve.telemetry import RequestTelemetry, request_telemetry
 
 
@@ -101,185 +110,18 @@ class EventRequest:
                             dropped_at_ingest=dropped)
 
 
-# the halo rule is single-sourced in econv._halo; these two helpers are the
-# slot-batched (4D) variants of econv's 3D interior accessors
-def _interior(vp: jnp.ndarray, h: int) -> jnp.ndarray:
-    if h == 0:
-        return vp
-    return vp[:, h:vp.shape[1] - h, h:vp.shape[2] - h, :]
-
-
-def _write_interior(vp: jnp.ndarray, x: jnp.ndarray, h: int) -> jnp.ndarray:
-    if h == 0:
-        return x
-    return vp.at[:, h:vp.shape[1] - h, h:vp.shape[2] - h, :].set(x)
-
-
-def _frame_to_events(s: jnp.ndarray, cap: int):
-    """Slot-batched dense spike frames -> padded event lists.
-
-    s: (N, H, W, C) binary spike frames. Returns ``(xyc (N,cap,3),
-    gate (N,cap), n_drop (N,))``. Event order is row-major (the same order
-    ``dense_to_events`` emits within a timestep); overflow beyond ``cap``
-    is dropped and counted — the inter-layer FIFO back-pressure.
-    """
-    N, H, W, C = s.shape
-    S = H * W * C
-    cap = min(cap, S)
-    flat = s.reshape(N, S)
-    nz = flat != 0
-    # first `cap` nonzero sites in row-major order: nonzero sites keep
-    # their flat index as sort key, zeros get the sentinel S; top_k of the
-    # negated keys is O(S log cap) vs a full argsort's O(S log S).
-    idx = jax.lax.broadcasted_iota(jnp.int32, (N, S), 1)
-    key = jnp.where(nz, idx, S)
-    order = -jax.lax.top_k(-key, cap)[0]                          # (N, cap)
-    gate = (order < S).astype(s.dtype)
-    order = jnp.minimum(order, S - 1)                             # clamp pads
-    x = order // (W * C)
-    y = (order // C) % W
-    c = order % C
-    xyc = jnp.stack([x, y, c], axis=-1)
-    n = jnp.sum(nz.astype(jnp.int32), axis=1)
-    n_drop = jnp.maximum(n - cap, 0)
-    return xyc, gate, n_drop
-
-
-def _scatter_batched(p: EConvParams, lspec: EConvSpec, vp: jnp.ndarray,
-                     xyc: jnp.ndarray, gate: jnp.ndarray, co_blk: int,
-                     use_pallas: Optional[bool]) -> jnp.ndarray:
-    """Accumulate all slots' event batches into all slots' membranes."""
-    if lspec.kind == "conv":
-        # shift into halo coordinates (same arithmetic as econv._scatter_event)
-        off = jnp.asarray([lspec.padding, lspec.padding, 0], jnp.int32)
-        return event_conv_batched(vp, p.w, xyc + off, gate,
-                                  co_blk=min(co_blk, lspec.out_channels),
-                                  use_pallas=use_pallas)
-    if lspec.kind == "pool":
-        s_ = lspec.stride
-
-        def one(vps, xy, g):
-            val = jnp.take(p.w, xy[:, 2]) * g
-            return vps.at[xy[:, 0] // s_, xy[:, 1] // s_, xy[:, 2]].add(val)
-
-        return jax.vmap(one)(vp, xyc, gate)
-    # fc: flatten (x, y, c) -> weight-matrix rows, sum the gated rows
-    H, W, C = lspec.in_shape
-    flat = (xyc[..., 0] * W + xyc[..., 1]) * C + xyc[..., 2]       # (N, E)
-    rows = jnp.take(p.w, flat, axis=0) * gate[..., None]           # (N, E, D)
-    return vp + jnp.sum(rows, axis=1)[:, None, None, :]
-
-
-def _layer_timestep(p: EConvParams, lspec: EConvSpec, vp: jnp.ndarray,
-                    xyc: jnp.ndarray, gate: jnp.ndarray,
-                    alive_t: jnp.ndarray, co_blk: int,
-                    use_pallas: Optional[bool]):
-    """One layer x one timestep for every slot: leak -> scatter -> fire.
-
-    ``alive_t`` (N,) freezes slots whose request has no timestep here (the
-    tail of a window past a short request) — their state and spikes are
-    held/zeroed so a frozen slot is bit-identical to not stepping it.
-    """
-    lp = lspec.lif
-    h = _halo(lspec)
-    interior = _interior(vp, h)
-    vp_l = _write_interior(vp, apply_leak(interior, lp.leak, 1, lp.leak_mode), h)
-    vp_s = _scatter_batched(p, lspec, vp_l, xyc, gate, co_blk, use_pallas)
-    v = _interior(vp_s, h)
-    if lp.state_clip is not None:
-        v = jnp.clip(v, -lp.state_clip, lp.state_clip)
-    v, s = fire_and_reset(v, lp)
-    vp_new = _write_interior(vp_s, v, h)
-    m = alive_t.reshape(-1, 1, 1, 1)
-    return jnp.where(m > 0, vp_new, vp), s * m
-
-
-def _window_step(params: Sequence[EConvParams], states, class_counts,
-                 ev_xyc, ev_gate, alive, pre_dt, *, spec: SNNSpec,
-                 caps: Tuple[int, ...], co_blk: int,
-                 use_pallas: Optional[bool]):
-    """Advance every slot through one window of timesteps (jitted).
-
-    Args:
-      states:       tuple of per-layer membrane slabs, each (N, Hp, Wp, C).
-      class_counts: (N, n_classes) running rate-decode accumulator.
-      ev_xyc:       (W, N, E0, 3) collector output — layer-0 events binned
-                    by timestep-within-window, per slot.
-      ev_gate:      (W, N, E0) validity gates.
-      alive:        (W, N) 1.0 where the slot has a real timestep there.
-      pre_dt:       (N,) deferred idle timesteps per slot, applied as one
-                    analytic decay before stepping (fused here so a slot
-                    re-entering after skipped windows costs no extra
-                    dispatch; all-zero for slots with nothing pending).
-
-    Returns new states, class_counts, per-layer per-slot consumed-event
-    counts (L, N) and inter-layer overflow drops (L, N) for this window.
-    """
-    L = len(spec.layers)
-    N = class_counts.shape[0]
-    states = _apply_idle_decay(states, pre_dt, spec=spec)
-
-    def one_t(carry, xs_t):
-        states, class_counts, counts, drops = carry
-        xyc, gate, alive_t = xs_t
-        states = list(states)
-        s = None
-        for l, (p, lspec) in enumerate(zip(params, spec.layers)):
-            if l > 0:
-                xyc, gate, n_drop = _frame_to_events(s, caps[l])
-                drops = drops.at[l].add(n_drop)
-            counts = counts.at[l].add(jnp.sum(gate, axis=1))
-            states[l], s = _layer_timestep(p, lspec, states[l], xyc, gate,
-                                           alive_t, co_blk, use_pallas)
-        class_counts = class_counts + jnp.sum(s, axis=(1, 2))
-        return (tuple(states), class_counts, counts, drops), None
-
-    counts0 = jnp.zeros((L, N), jnp.float32)
-    drops0 = jnp.zeros((L, N), jnp.int32)
-    (states, class_counts, counts, drops), _ = jax.lax.scan(
-        one_t, (tuple(states), class_counts, counts0, drops0),
-        (ev_xyc, ev_gate, alive))
-    return states, class_counts, counts, drops
-
-
-def _apply_idle_decay(states, dt, *, spec: SNNSpec):
-    """Apply each slot's deferred idle decay to every layer's interior.
-
-    ``dt`` (N,) counts the input-free timesteps accumulated while the slot
-    was being skipped; `core.lif.idle_decay` collapses them analytically
-    (leak + clip) in one elementwise pass.  Slots with ``dt == 0`` come
-    back bit-identical.  Traced inside :func:`_window_step`, so the flush
-    costs no separate dispatch.
-    """
-    dt4 = dt.astype(jnp.float32).reshape(-1, 1, 1, 1)
-    out = []
-    for vp, lspec in zip(states, spec.layers):
-        if not supports_idle_skip(lspec.lif):
-            # soft-reset networks run with idle_skip force-disabled, so
-            # their deferred dt is always zero — pass the slab through
-            out.append(vp)
-            continue
-        h = _halo(lspec)
-        dec = idle_decay(_interior(vp, h), lspec.lif, dt4)
-        out.append(_write_interior(vp, dec, h))
-    return tuple(out)
-
-
 def default_step_capacities(spec: SNNSpec, activity: float = 0.25,
                             slack: float = 4.0,
                             align: int = 8) -> List[int]:
     """Per-layer *per-timestep* input-event capacities (collector + FIFOs).
 
     Unlike `sne_net.default_capacities` (whole-inference buffers), these
-    size one timestep's bucket; ``activity`` is the expected per-step
-    fraction of active input sites and ``slack`` over-provisions like the
-    ASIC FIFO sizing.
+    size one timestep's bucket.  Delegates to the single-sourced heuristic
+    in `core.layer_program` (`layer_step_capacity`) — the same rule
+    `compile_program` bakes into each LayerOp — so core and serving
+    capacity sizing cannot drift.
     """
-    caps = []
-    for l in spec.layers:
-        caps.append(ev.capacity_for((1,) + l.in_shape, activity, slack,
-                                    align=align))
-    return caps
+    return _program_step_capacities(spec, activity, slack, align)
 
 
 class EventServeEngine:
@@ -301,11 +143,11 @@ class EventServeEngine:
         self.params = list(params)
         self.N = n_slots
         self.W = window
-        self.caps = tuple(step_capacities
-                          if step_capacities is not None
-                          else default_step_capacities(spec))
-        if len(self.caps) != len(spec.layers):
-            raise ValueError("need one per-timestep capacity per layer")
+        # compile the network once; the program is the engine's datapath
+        self.program = compile_program(
+            spec, step_capacities=(tuple(step_capacities)
+                                   if step_capacities is not None else None))
+        self.caps = self.program.step_capacities
         self.cfg = sne_cfg or SneConfig()
         self.n_parallel_slices = n_parallel_slices
         # the lazy skip is only exact for hard resets (see core.lif);
@@ -314,7 +156,7 @@ class EventServeEngine:
             supports_idle_skip(l.lif) for l in spec.layers)
         L = len(spec.layers)
 
-        self.states = tuple(self._zero_state(l) for l in spec.layers)
+        self.states = tuple(self._zero_state(op) for op in self.program.ops)
         self.class_counts = jnp.zeros((n_slots, spec.n_classes), jnp.float32)
 
         # host-side slot bookkeeping (the collector's view)
@@ -333,22 +175,23 @@ class EventServeEngine:
         self.pending_dt = np.zeros((n_slots,), np.int64)
         self.dense_ts = np.zeros((n_slots,), np.int64)
         self.skipped_windows = np.zeros((n_slots,), np.int64)
-        self._n_conv = sum(1 for l in spec.layers if l.kind == "conv")
         self.stats = {"windows": 0, "admitted": 0, "completed": 0,
                       "collector_dropped": 0, "out_of_range_dropped": 0,
                       "step_calls": 0, "kernel_launches": 0,
                       "dense_slot_windows": 0, "skipped_slot_windows": 0,
                       "leak_flushes": 0}
 
+        # the jitted per-window step IS the unified program executor —
+        # every layer kind is one slot-batched scatter launch per timestep
         self._step = jax.jit(partial(
-            _window_step, spec=spec, caps=self.caps, co_blk=co_blk,
+            window_step, program=self.program, co_blk=co_blk,
             use_pallas=use_pallas))
 
     # --- helpers -----------------------------------------------------------
 
-    def _zero_state(self, lspec: EConvSpec) -> jnp.ndarray:
-        Ho, Wo, Co = lspec.out_shape
-        h = _halo(lspec)
+    def _zero_state(self, op: LayerOp) -> jnp.ndarray:
+        Ho, Wo, Co = op.spec.out_shape
+        h = op.halo
         return jnp.zeros((self.N, Ho + 2 * h, Wo + 2 * h, Co), jnp.float32)
 
     def _reset_slot_state(self, slot: int) -> None:
@@ -594,7 +437,9 @@ class EventServeEngine:
             self.acc_drops[:, idx] += drops_np[:, :A]
         self.dense_ts[idx] += alive[:, idx].sum(axis=0).astype(np.int64)
         self.stats["step_calls"] += 1
-        self.stats["kernel_launches"] += self.W * self._n_conv
+        # every layer (conv, pool, fc) is one slot-batched scatter launch
+        # per timestep in the program executor
+        self.stats["kernel_launches"] += self.W * len(self.program.ops)
 
     def _finish(self, slot: int) -> None:
         req = self.slot_req[slot]

@@ -1,0 +1,327 @@
+"""Unified layer-program executor + pool/FC kernel parity suites.
+
+Covers the PR-3 checklist: bit-for-bit parity of the new
+`kernels/event_pool` / `kernels/event_fc` Pallas kernels against their
+pure-jnp refs (and, through the executor, against `dense_forward`), the
+program-executor-vs-`event_apply` equivalence on `tiny_net` and a reduced
+`dvs_gesture_net`, and the single-sourced capacity heuristics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import events as ev
+from repro.core import layer_program as lp
+from repro.core.econv import EConvSpec, dense_forward, init_econv
+from repro.core.lif import LifParams
+from repro.core.sne_net import (default_capacities, dense_apply, dvs_gesture_net,
+                                event_apply, init_snn, spike_counts, tiny_net)
+from repro.kernels.event_fc.ops import event_fc, event_fc_batched
+from repro.kernels.event_fc.ref import event_fc_batched_ref
+from repro.kernels.event_pool.ops import event_pool, event_pool_batched
+from repro.kernels.event_pool.ref import (event_pool_batched_ref,
+                                          event_pool_ref)
+from repro.serve.event_engine import (EventRequest, EventServeEngine,
+                                      default_step_capacities)
+
+
+# ---------------------------------------------------------------------------
+# pool kernel: batched == per-slot == oracle, bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,H,W,C,s,E", [
+    (1, 8, 8, 3, 2, 16),
+    (3, 8, 8, 3, 2, 24),
+    (2, 16, 16, 16, 4, 64),
+    (4, 12, 12, 2, 2, 8),
+    (2, 6, 6, 1, 3, 5),
+])
+def test_event_pool_matches_ref(N, H, W, C, s, E):
+    rng = np.random.default_rng(N + C + E)
+    v = jnp.asarray(rng.normal(size=(N, H // s, W // s, C))
+                    .astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(C,)).astype(np.float32))
+    xyc = jnp.asarray(np.stack([rng.integers(0, H, (N, E)),
+                                rng.integers(0, W, (N, E)),
+                                rng.integers(0, C, (N, E))],
+                               -1).astype(np.int32))
+    gate = jnp.asarray((rng.random((N, E)) < 0.8).astype(np.float32))
+    got = np.asarray(event_pool_batched(v, w, xyc, gate, stride=s))
+    want = np.asarray(event_pool_batched_ref(v, w, xyc, gate, s))
+    np.testing.assert_array_equal(got, want)
+    per_slot = np.stack([
+        np.asarray(event_pool(v[i], w, xyc[i], gate[i], stride=s))
+        for i in range(N)])
+    np.testing.assert_array_equal(got, per_slot)
+
+
+def test_event_pool_gate_zero_is_noop():
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(4, 4, 3)).astype(np.float32))
+    w = jnp.ones((3,), jnp.float32)
+    evs = jnp.zeros((5, 3), jnp.int32)
+    gate = jnp.zeros((5,), jnp.float32)
+    got = event_pool(v, w, evs, gate, stride=2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(v))
+
+
+def test_event_pool_nondivisible_tail_dropped():
+    """H % stride != 0: the tail rows map past the grid and must be dropped
+    (the dense path's VALID window ignores exactly those rows)."""
+    v = jnp.zeros((3, 3, 1), jnp.float32)       # 7 // 2 = 3 output rows
+    w = jnp.ones((1,), jnp.float32)
+    evs = jnp.asarray([[6, 6, 0], [0, 0, 0]], jnp.int32)  # first is OOB
+    gate = jnp.ones((2,), jnp.float32)
+    got = np.asarray(event_pool(v, w, evs, gate, stride=2))
+    want = np.asarray(event_pool_ref(v, w, evs, gate, 2))
+    np.testing.assert_array_equal(got, want)
+    assert got[0, 0, 0] == 1.0 and got.sum() == 1.0
+
+
+# ---------------------------------------------------------------------------
+# fc kernel: batched == per-slot == oracle, bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,H,W,C,D,E", [
+    (1, 4, 4, 2, 6, 16),
+    (3, 4, 4, 2, 6, 24),
+    (2, 3, 3, 6, 11, 32),       # odd Dout (class head)
+    (2, 2, 2, 32, 512, 12),     # the Fig. 6 FC-512 geometry, reduced input
+])
+def test_event_fc_matches_ref(N, H, W, C, D, E):
+    rng = np.random.default_rng(N + D + E)
+    v = jnp.asarray(rng.normal(size=(N, 1, 1, D)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(H * W * C, D)).astype(np.float32))
+    xyc = jnp.asarray(np.stack([rng.integers(0, H, (N, E)),
+                                rng.integers(0, W, (N, E)),
+                                rng.integers(0, C, (N, E))],
+                               -1).astype(np.int32))
+    gate = jnp.asarray((rng.random((N, E)) < 0.8).astype(np.float32))
+    got = np.asarray(event_fc_batched(v, w, xyc, gate, in_shape=(H, W, C)))
+    want = np.asarray(event_fc_batched_ref(v, w, xyc, gate, (H, W, C)))
+    np.testing.assert_array_equal(got, want)
+    per_slot = np.stack([
+        np.asarray(event_fc(v[i], w, xyc[i], gate[i], in_shape=(H, W, C)))
+        for i in range(N)])
+    np.testing.assert_array_equal(got, per_slot)
+
+
+def test_event_fc_gate_zero_is_noop():
+    rng = np.random.default_rng(1)
+    v = jnp.asarray(rng.normal(size=(1, 1, 6)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(8, 6)).astype(np.float32))
+    evs = jnp.zeros((4, 3), jnp.int32)
+    gate = jnp.zeros((4,), jnp.float32)
+    got = event_fc(v, w, evs, gate, in_shape=(2, 2, 2))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(v))
+
+
+def test_fc_width_not_divisible_by_block_still_serves():
+    """Dout=192 with the default co_blk=128 must pick a dividing block
+    (regression: the dispatcher once passed co_blk through unadjusted and
+    the kernel raised on the first window step)."""
+    spec = EConvSpec("fc", (4, 4, 2), 192, lif=LifParams(threshold=1.0))
+    params = init_econv(jax.random.PRNGKey(0), spec)
+    op = lp.layer_op(spec)
+    vp = lp.padded_state(op, jnp.float32, n_slots=2)
+    rng = np.random.default_rng(6)
+    xyc = jnp.asarray(np.stack([rng.integers(0, 4, (2, 8)),
+                                rng.integers(0, 4, (2, 8)),
+                                rng.integers(0, 2, (2, 8))],
+                               -1).astype(np.int32))
+    gate = jnp.ones((2, 8), jnp.float32)
+    got = lp.scatter_events_batched(op, params, vp, xyc, gate, co_blk=128,
+                                    use_pallas=None)
+    want = lp.scatter_events_batched(op, params, vp, xyc, gate, co_blk=128,
+                                     use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert lp._channel_block(192, 128) == 96
+    assert lp._channel_block(11, 128) == 11
+    assert lp._channel_block(128, 128) == 128
+
+
+def test_event_fc_rejects_shape_mismatch():
+    v = jnp.zeros((2, 1, 1, 6), jnp.float32)
+    w = jnp.zeros((9, 6), jnp.float32)
+    xyc = jnp.zeros((2, 4, 3), jnp.int32)
+    gate = jnp.zeros((2, 4), jnp.float32)
+    with pytest.raises(ValueError, match="flattens"):
+        event_fc_batched(v, w, xyc, gate, in_shape=(2, 2, 2))
+
+
+# ---------------------------------------------------------------------------
+# executor layer_timestep over the kernels vs dense_forward (per layer kind)
+# ---------------------------------------------------------------------------
+
+def _executor_forward(spec: EConvSpec, spikes: jnp.ndarray, seed: int,
+                      use_pallas):
+    """Roll one layer over (T, H, W, C) spikes through layer_timestep."""
+    params = init_econv(jax.random.PRNGKey(seed), spec)
+    op = lp.layer_op(spec)
+    vp = lp.padded_state(op, jnp.float32, n_slots=1)
+    alive = jnp.ones((1,), jnp.float32)
+    outs = []
+    for t in range(spikes.shape[0]):
+        xyc, gate, _ = lp.frame_to_events(spikes[t][None],
+                                          int(spikes[t].size))
+        vp, s = lp.layer_timestep(op, params, vp, xyc, gate, alive,
+                                  use_pallas=use_pallas)
+        outs.append(s[0])
+    dense_out, _ = dense_forward(params, spec, spikes)
+    return jnp.stack(outs), dense_out
+
+
+@pytest.mark.parametrize("use_pallas", [None, False])
+@pytest.mark.parametrize("kind,kw", [
+    ("pool", dict(kernel=2, stride=2, lif=LifParams(threshold=0.999))),
+    ("fc", dict(lif=LifParams(threshold=1.2, leak=0.1))),
+    ("conv", dict(kernel=3, padding=1, lif=LifParams(threshold=0.8,
+                                                     leak=0.05))),
+])
+def test_layer_timestep_matches_dense_forward(kind, kw, use_pallas):
+    out_ch = {"pool": 2, "fc": 6, "conv": 4}[kind]
+    spec = EConvSpec(kind, (8, 8, 2), out_ch, **kw)
+    rng = np.random.default_rng(3)
+    spikes = jnp.asarray((rng.random((5, 8, 8, 2)) < 0.2)
+                         .astype(np.float32))
+    got, want = _executor_forward(spec, spikes, seed=7,
+                                  use_pallas=use_pallas)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# whole-network: program executor (serving window step) vs event_apply
+# ---------------------------------------------------------------------------
+
+def _reduced_gesture_net():
+    """The Fig. 6 topology at 16x16 input — runnable in CI, same op mix."""
+    return dvs_gesture_net(n_timesteps=8, height=16, width=16)
+
+
+def _event_decode(spec, out_stream):
+    """Rate decoding over the output event stream (event_predict's rule)."""
+    cls = jnp.where(out_stream.valid, out_stream.c, spec.n_classes)
+    return np.asarray(
+        jnp.zeros((spec.n_classes + 1,)).at[cls].add(1.0)[:-1])
+
+
+@pytest.mark.parametrize("mk_spec", [tiny_net, _reduced_gesture_net],
+                         ids=["tiny_net", "dvs_gesture_net"])
+def test_program_executor_matches_event_apply(mk_spec):
+    """The slot-batched window executor and the single-stream scan are two
+    drivers of ONE program — class counts must agree on the same input."""
+    spec = mk_spec()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    T, shape = spec.n_timesteps, spec.in_shape
+    rng = np.random.default_rng(11)
+    spikes = jnp.asarray((rng.random((T,) + shape) < 0.08)
+                         .astype(np.float32))
+
+    # stream driver (core): event_apply through run_stream
+    stream = ev.dense_to_events(spikes, int(jnp.sum(spikes)) + 8)
+    out, stats = event_apply(params, spec, stream,
+                             default_capacities(spec, activity=0.2,
+                                                slack=6.0))
+    want = _event_decode(spec, out)
+
+    # batched window driver (serving): EventServeEngine over window_step
+    eng = EventServeEngine(spec, params, n_slots=1, window=4,
+                           use_pallas=False)
+    req = EventRequest.from_dense(0, spikes)
+    eng.run([req])
+
+    np.testing.assert_allclose(req.class_counts, want, atol=1e-4)
+    # both drivers consumed the same layer-0 events
+    assert req.telemetry.per_layer_events[0] == float(
+        stats.per_layer[0].n_update_events)
+
+    # and both agree with the dense frame-based reference
+    dense_out, _ = dense_apply(params, spec, spikes)
+    np.testing.assert_allclose(req.class_counts,
+                               np.asarray(spike_counts(dense_out)),
+                               atol=1e-4)
+
+
+def test_engine_pallas_and_ref_paths_bitexact():
+    """With every layer a kernel whose ref is bit-for-bit, the whole served
+    inference must be bitwise identical across use_pallas={None, False}."""
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    rng = np.random.default_rng(2)
+    spikes = jnp.asarray(
+        (rng.random((spec.n_timesteps,) + spec.in_shape) < 0.1)
+        .astype(np.float32))
+    counts = {}
+    for mode in (None, False):
+        eng = EventServeEngine(spec, params, n_slots=1, window=4,
+                               use_pallas=mode)
+        req = EventRequest.from_dense(0, spikes)
+        eng.run([req])
+        counts[mode] = req.class_counts
+    np.testing.assert_array_equal(counts[None], counts[False])
+
+
+# ---------------------------------------------------------------------------
+# compile_program structure + single-sourced capacity heuristics
+# ---------------------------------------------------------------------------
+
+def test_compile_program_structure():
+    spec = tiny_net()
+    prog = lp.compile_program(spec)
+    assert len(prog) == len(spec.layers)
+    assert [op.kind for op in prog.ops] == ["conv", "pool", "fc"]
+    assert [op.halo for op in prog.ops] == [2, 0, 0]   # K-1 for conv only
+    assert [op.index for op in prog.ops] == [0, 1, 2]
+    # compile is cached: same spec -> same program object
+    assert lp.compile_program(spec) is prog
+
+
+def test_compile_program_rejects_bad_capacities():
+    spec = tiny_net()
+    with pytest.raises(ValueError, match="per-timestep capacity"):
+        lp.compile_program(spec, step_capacities=(4,))
+
+
+def test_capacity_heuristics_single_sourced():
+    """Core and serving capacity sizing must resolve to the program's."""
+    spec = tiny_net()
+    assert default_capacities(spec) == [
+        lp.layer_stream_capacity(l, spec.n_timesteps) for l in spec.layers]
+    assert default_step_capacities(spec) == [
+        lp.layer_step_capacity(l) for l in spec.layers]
+    # the engine's compiled program bakes in exactly the serving heuristic
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    eng = EventServeEngine(spec, params, n_slots=1, use_pallas=False)
+    assert list(eng.caps) == default_step_capacities(spec)
+    assert eng.caps == eng.program.step_capacities
+
+
+def test_program_rejects_soft_reset_stream_driver():
+    """The stream driver keeps econv's hard-reset requirement."""
+    spec = EConvSpec("conv", (6, 6, 1), 2, kernel=3, padding=1,
+                     lif=LifParams(reset_mode="subtract"))
+    params = init_econv(jax.random.PRNGKey(0), spec)
+    stream = ev.dense_to_events(jnp.zeros((2, 6, 6, 1)), 8)
+    with pytest.raises(ValueError, match="reset_mode"):
+        lp.layer_event_forward(lp.layer_op(spec), params, stream, 8, 2)
+
+
+def test_quantized_program_round_trip():
+    """A quantized spec (state_clip set) still compiles + serves through
+    the unified executor and matches its own dense path."""
+    from repro.core.sne_net import quantize_snn
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    qp, qspec = quantize_snn(params, spec)
+    rng = np.random.default_rng(4)
+    spikes = jnp.asarray(
+        (rng.random((qspec.n_timesteps,) + qspec.in_shape) < 0.1)
+        .astype(np.float32))
+    eng = EventServeEngine(qspec, qp, n_slots=1, window=4, use_pallas=False)
+    req = EventRequest.from_dense(0, spikes)
+    eng.run([req])
+    dense_out, _ = dense_apply(qp, qspec, spikes)
+    np.testing.assert_allclose(req.class_counts,
+                               np.asarray(spike_counts(dense_out)),
+                               atol=1e-4)
