@@ -44,14 +44,19 @@ def check_one(result: dict, base: dict, tolerance: float) -> list:
     elif cur > ref * (1.0 + tolerance):
         print(f"  {name}: note — events/J improved >"
               f"{tolerance * 100:.0f}%; consider ratcheting the baseline")
-    if "launch_ratio_90" in base:
-        ratio = float(result.get("launch_ratio_90", 0.0))
-        need = float(base["launch_ratio_90"])
-        print(f"  {name}: launch ratio at 90% idle {ratio:.1f}x "
-              f"(required >= {need:.1f}x)")
-        if ratio < need:
-            errors.append(f"{name}: idle-skip launch reduction {ratio:.1f}x "
-                          f"< required {need:.1f}x")
+    # generic floor pins: a baseline key "<metric>_min" requires the run's
+    # "<metric>" to be at least that value (launch_ratio_90_min pins the
+    # idle-skip launch reduction, int8_bytes_ratio_min the integer
+    # datapath's bytes-moved advantage)
+    for key, need in base.items():
+        if not key.endswith("_min"):
+            continue
+        metric = key[:-4]
+        cur = float(result.get(metric, 0.0))
+        print(f"  {name}: {metric} {cur:.3f} (required >= {float(need):.3f})")
+        if cur < float(need):
+            errors.append(f"{name}: {metric} {cur:.3f} < required "
+                          f"{float(need):.3f}")
     return errors
 
 

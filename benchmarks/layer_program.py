@@ -15,10 +15,16 @@ that claim the way `benchmarks/idle_skip.py` measures the TLU skip:
     window on `tiny_net` — each layer's scatter collapses into exactly
     one launch;
   * serve a small cohort through `EventServeEngine` (which jits exactly
-    this executor) and record the serving-level events/J headline.
+    this executor) and record the serving-level events/J headline;
+  * compare the two **dtype policies** on the quantized net: per-layer
+    bytes one scatter launch moves (f32 carrier vs int8-native — the
+    int8 path must be strictly smaller on EVERY layer), the effective
+    per-SOP energy each policy implies (the ASIC's 0.221 pJ/SOP scaled
+    by relative bytes/SOP — the carrier pays the emulation's extra
+    traffic), and bitwise parity of a served cohort across policies.
 
 Emits ``BENCH_layer_program.json`` for CI's regression gate
-(`benchmarks/check_regression.py`).
+(`benchmarks/check_regression.py`), which pins ``int8_bytes_ratio``.
 
     PYTHONPATH=src python -m benchmarks.layer_program [--fast]
 """
@@ -38,7 +44,9 @@ try:  # jaxpr types moved to jax.extend.core in newer jax releases
 except (ImportError, AttributeError):
     from jax import core as jax_core
 
+from benchmarks.policy_report import policy_accounting
 from repro.core import layer_program as lp
+from repro.core.quant import quantize_net
 from repro.core.sne_net import init_snn, tiny_net
 from repro.serve.event_engine import EventRequest, EventServeEngine
 from repro.serve.telemetry import summarize
@@ -106,7 +114,8 @@ def layer_dispatches(spec, params, use_pallas):
     return rows
 
 
-def serve_cohort(spec, params, n_timesteps, seed=0):
+def serve_cohort(spec, params, n_timesteps, seed=0,
+                 dtype_policy=lp.F32_CARRIER):
     """Serve a small random cohort; return engine stats + events/J."""
     rng = np.random.default_rng(seed)
     H, W, C = spec.in_shape
@@ -116,7 +125,7 @@ def serve_cohort(spec, params, n_timesteps, seed=0):
         reqs.append(EventRequest.from_dense(
             uid, jnp.asarray(spikes.astype(np.float32))))
     eng = EventServeEngine(spec, params, n_slots=SLOTS, window=WINDOW,
-                           use_pallas=False)
+                           use_pallas=False, dtype_policy=dtype_policy)
     t0 = time.time()
     eng.run(reqs)
     wall = time.time() - t0
@@ -128,7 +137,17 @@ def serve_cohort(spec, params, n_timesteps, seed=0):
         / max(eng.stats["step_calls"], 1),
         "events": agg["total_events"],
         "events_per_joule": agg["events_per_joule"],
+        "class_counts": np.stack([r.class_counts for r in reqs]),
     }
+
+
+def dtype_policy_accounting(spec, params):
+    """Quantize the net and run the shared per-policy accounting
+    (`benchmarks/policy_report.py` — one formula for every BENCH report;
+    asserts the int8 launch is strictly smaller on every layer)."""
+    qn = quantize_net(params, spec)
+    rows, policies, bytes_ratio = policy_accounting(qn.spec, SLOTS)
+    return qn, rows, policies, bytes_ratio
 
 
 def main(fast: bool = False) -> None:
@@ -166,6 +185,32 @@ def main(fast: bool = False) -> None:
           f"{served['launches_per_window']:.0f} launches/window, "
           f"{served['events_per_joule']:.3e} events/J")
 
+    # --- dtype policies: bytes per launch + effective pJ/SOP + parity ----
+    qn, byte_rows, policies, bytes_ratio = dtype_policy_accounting(spec,
+                                                                   params)
+    print(f"  {'layer':>5} {'kind':>5} {'f32 bytes':>10} {'int8 bytes':>10} "
+          f"{'ratio':>6}")
+    for r in byte_rows:
+        print(f"  {r['layer']:>5} {r['kind']:>5} {r['bytes_f32']:>10} "
+              f"{r['bytes_int8']:>10} {r['ratio']:>6.2f}")
+    for pol, d in policies.items():
+        print(f"  {pol}: {d['bytes_per_sop']:.2f} B/SOP, "
+              f"{d['pj_per_sop_effective']:.3f} pJ/SOP effective")
+    assert bytes_ratio > 1.0
+    # the int8-native path hits the ASIC's modeled figure by construction;
+    # the carrier pays the bytes ratio on top
+    assert (policies[lp.INT8_NATIVE]["pj_per_sop_effective"]
+            < policies[lp.F32_CARRIER]["pj_per_sop_effective"])
+    # dual-policy serve: the quantized cohort must decode identically
+    served_q = {pol: serve_cohort(qn.spec, qn.params_for(pol), n_ts,
+                                  dtype_policy=pol)
+                for pol in (lp.F32_CARRIER, lp.INT8_NATIVE)}
+    np.testing.assert_array_equal(
+        served_q[lp.F32_CARRIER]["class_counts"],
+        served_q[lp.INT8_NATIVE]["class_counts"])
+    print(f"  int8-native == f32-carrier on served cohort (bitwise); "
+          f"launch bytes ratio x{bytes_ratio:.2f}")
+
     out = {
         "bench": "layer_program",
         "config": {"net": "tiny_net", "n_timesteps": n_ts, "window": WINDOW,
@@ -178,6 +223,12 @@ def main(fast: bool = False) -> None:
         "dispatch_ratio": win_f / win_u,
         "launches_per_window": served["launches_per_window"],
         "events_per_joule": served["events_per_joule"],
+        "per_layer_launch_bytes": byte_rows,
+        "dtype_policies": policies,
+        "int8_bytes_ratio": bytes_ratio,
+        "int8_parity": True,
+        "int8_events_per_joule":
+            served_q[lp.INT8_NATIVE]["events_per_joule"],
     }
     with open("BENCH_layer_program.json", "w") as f:
         json.dump(out, f, indent=2)

@@ -1,0 +1,59 @@
+"""Shared dtype-policy accounting for the benchmark suite.
+
+One implementation of the per-policy launch-bytes / bytes-per-SOP /
+effective-pJ-per-SOP model, used by both `benchmarks/layer_program.py`
+and `benchmarks/serve_events.py` so the two BENCH_*.json reports can
+never drift apart on the headline formula.
+
+Effective per-SOP energy scales the ASIC's modeled pJ/SOP (the 4-bit
+datapath, `core.engine.energy_per_sop_j`) by each policy's bytes-per-SOP
+relative to the native path — the float carrier pays its 8x-wider
+operands as extra modeled traffic energy; the int8-native path IS the
+modeled datapath, so it lands on the paper's 0.221 pJ/SOP.
+"""
+from __future__ import annotations
+
+from repro.core import layer_program as lp
+from repro.core.engine import SneConfig, energy_per_sop_j
+
+
+def policy_accounting(qspec, n_slots: int):
+    """Per-layer launch bytes + per-policy totals for an integer spec.
+
+    Compiles ``qspec`` once per dtype policy and, for every layer, sizes
+    one slot-batched scatter launch at the layer's own step capacity.
+    Asserts the acceptance contract — the int8-native launch moves
+    STRICTLY fewer bytes than the f32-carrier launch on EVERY layer.
+
+    Returns ``(rows, policies, bytes_ratio)``: per-layer dicts, the
+    per-policy ``{bytes_per_window_launches, bytes_per_sop,
+    pj_per_sop_effective}`` map, and the total f32/int8 bytes ratio.
+    """
+    progs = {pol: lp.compile_program(qspec, dtype_policy=pol)
+             for pol in (lp.F32_CARRIER, lp.INT8_NATIVE)}
+    rows = []
+    totals = {pol: 0 for pol in progs}
+    sops = 0
+    for opf, opi in zip(progs[lp.F32_CARRIER].ops,
+                        progs[lp.INT8_NATIVE].ops):
+        E = opf.step_capacity
+        bf = lp.scatter_launch_bytes(opf, n_slots, E)
+        bi = lp.scatter_launch_bytes(opi, n_slots, E)
+        assert bi < bf, (opf.kind, bi, bf)   # strictly fewer, every layer
+        rows.append({"layer": opf.index, "kind": opf.kind, "events": E,
+                     "bytes_f32": bf, "bytes_int8": bi, "ratio": bf / bi})
+        totals[lp.F32_CARRIER] += bf
+        totals[lp.INT8_NATIVE] += bi
+        sops += n_slots * E * opf.spec.updates_per_event()
+    base_pj = energy_per_sop_j(SneConfig()) * 1e12    # ASIC 4-bit datapath
+    bps_native = totals[lp.INT8_NATIVE] / sops
+    policies = {
+        pol: {
+            "bytes_per_window_launches": totals[pol],
+            "bytes_per_sop": totals[pol] / sops,
+            "pj_per_sop_effective": base_pj * (totals[pol] / sops)
+            / bps_native,
+        }
+        for pol in progs
+    }
+    return rows, policies, totals[lp.F32_CARRIER] / totals[lp.INT8_NATIVE]

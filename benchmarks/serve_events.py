@@ -10,6 +10,11 @@ inference must scale linearly with measured events (R^2 ~ 1, the paper's
 §IV-A3 claim lifted to the serving layer), and per-window wall time should
 grow sublinearly with slot count (the batching win).
 
+Part 3 — dtype policies: the same cohort is served on the quantized net
+under "f32-carrier" and "int8-native"; predictions/class counts must be
+bitwise identical, and the report carries each policy's launch bytes per
+SOP plus effective pJ/SOP (the carrier pays its wider operands).
+
     PYTHONPATH=src python -m benchmarks.serve_events [--fast] [--pallas]
 """
 from __future__ import annotations
@@ -21,6 +26,9 @@ import time
 import jax
 import numpy as np
 
+from benchmarks.policy_report import policy_accounting
+from repro.core import layer_program as lp
+from repro.core.quant import quantize_net
 from repro.core.sne_net import init_snn, tiny_net
 from repro.data.events_ds import TINY, batch_at
 from repro.kernels.event_conv.ref import selfcheck_batched_bitexact
@@ -117,6 +125,8 @@ def main(fast: bool = False, use_pallas: bool = False) -> None:
 
     ev_per_j = (sum(r["total_events"] for r in rows)
                 / sum(r["total_energy_j"] for r in rows))
+
+    policy_report = dtype_policy_serving(n_req, use_pallas)
     out = {
         "bench": "serve_events",
         "config": {"n_requests": n_req, "use_pallas": bool(use_pallas)},
@@ -124,10 +134,43 @@ def main(fast: bool = False, use_pallas: bool = False) -> None:
         "events_per_joule": ev_per_j,
         "time_vs_events_r2": r2_t,
         "energy_vs_events_r2": r2_e,
+        "dtype_policies": policy_report,
     }
     with open("BENCH_serve_events.json", "w") as f:
         json.dump(out, f, indent=2)
     print(f"  events/J = {ev_per_j:.3e}; wrote BENCH_serve_events.json")
+
+
+def dtype_policy_serving(n_req: int, use_pallas, seed: int = 0) -> dict:
+    """Serve one quantized cohort under both dtype policies.
+
+    Bitwise-identical class counts are asserted (the int4/int8 lowering's
+    serving-level contract); the shared accounting helper
+    (`benchmarks/policy_report.py`, the same formula
+    `benchmarks/layer_program.py` reports) adds per-policy bytes/SOP and
+    effective pJ/SOP; per-policy served events/J rides alongside.
+    """
+    spec = tiny_net()
+    qn = quantize_net(init_snn(jax.random.PRNGKey(seed), spec), spec)
+    spikes, _ = batch_at(seed, 0, n_req, TINY)
+    _, report, ratio = policy_accounting(qn.spec, n_slots=2)
+    counts = {}
+    for pol in (lp.F32_CARRIER, lp.INT8_NATIVE):
+        eng = EventServeEngine(qn.spec, qn.params_for(pol), n_slots=2,
+                               window=4, use_pallas=use_pallas,
+                               dtype_policy=pol)
+        reqs = [EventRequest.from_dense(i, spikes[i]) for i in range(n_req)]
+        eng.run(reqs)
+        agg = summarize([r.telemetry for r in reqs])
+        counts[pol] = np.stack([r.class_counts for r in reqs])
+        report[pol]["events_per_joule"] = agg["events_per_joule"]
+    np.testing.assert_array_equal(counts[lp.F32_CARRIER],
+                                  counts[lp.INT8_NATIVE])
+    print(f"  dtype policies: int8-native == f32-carrier bitwise on "
+          f"{n_req} served requests; launch bytes x{ratio:.2f} smaller, "
+          f"{report[lp.INT8_NATIVE]['pj_per_sop_effective']:.3f} vs "
+          f"{report[lp.F32_CARRIER]['pj_per_sop_effective']:.3f} pJ/SOP")
+    return report
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import events as ev
 from repro.core.lif import LifParams, lif_step
+from repro.core.policies import F32_CARRIER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,7 +176,7 @@ def _halo(spec: EConvSpec) -> int:
 
 def event_forward(params: EConvParams, spec: EConvSpec,
                   stream: ev.EventStream, out_capacity: int,
-                  n_timesteps: int):
+                  n_timesteps: int, dtype_policy: str = F32_CARRIER):
     """Consume an event stream, produce the output event stream.
 
     Equivalent to :func:`dense_forward` on the densified input (tested), but
@@ -187,9 +188,11 @@ def event_forward(params: EConvParams, spec: EConvSpec,
     lowered to a single :class:`repro.core.layer_program.LayerOp` and the
     scan runs in `core.layer_program.layer_event_forward` — the same
     ``leak -> scatter -> clip -> fire -> reset`` datapath the slot-batched
-    serving step executes.
+    serving step executes.  ``dtype_policy`` selects that datapath's dtype
+    domain ("f32-carrier", or "int8-native" for integer-domain specs and
+    int8 weight codes — see `core.layer_program`).
     """
     # local import: layer_program imports this module's spec/param types
     from repro.core.layer_program import layer_event_forward, layer_op
-    return layer_event_forward(layer_op(spec), params, stream, out_capacity,
-                               n_timesteps)
+    return layer_event_forward(layer_op(spec, dtype_policy=dtype_policy),
+                               params, stream, out_capacity, n_timesteps)

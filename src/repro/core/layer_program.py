@@ -29,9 +29,19 @@ to the membrane state differs.  This module is that design point in JAX:
     `sne_net.default_capacities` and `event_engine.default_step_capacities`
     cannot drift apart.
 
-Having exactly one executor is what makes whole-network fusion or an
-int4/int8 datapath a single lowering in the future: every entry point
-already routes through these functions.
+Having exactly one executor is what made the int4/int8 lowering a single
+switch: every compiled program carries a **dtype policy** and every entry
+point executes whichever datapath it names —
+
+  * ``"f32-carrier"`` (default) — integer-domain values held in float32
+    carriers, exact for |x| < 2^24.  Works for float nets too; for
+    quantised nets it is the bit-exactness *oracle*.
+  * ``"int8-native"`` (paper §III-D4) — int4-range weight codes stored as
+    int8, int8 saturating membrane storage between timesteps, int32
+    scatter accumulation inside a timestep.  Requires an integer-domain
+    spec (`core.quant.quantize_net`); results are bitwise identical to
+    the carrier oracle after a plain dtype cast, because both paths run
+    the same exact integer arithmetic.
 """
 from __future__ import annotations
 
@@ -46,6 +56,10 @@ from repro.core import events as ev
 from repro.core.econv import EConvParams, EConvSpec, EConvStats, _halo
 from repro.core.lif import (LifParams, apply_leak, fire_and_reset,
                             idle_decay, supports_idle_skip)
+# the policy names live in the leaf module `core.policies` (see its
+# docstring); re-exported here for every executor caller
+from repro.core.policies import DTYPE_POLICIES, F32_CARRIER, INT8_NATIVE
+from repro.core.quant import INT8_MAX, INT8_MIN
 from repro.kernels.event_conv.ops import event_conv_batched
 from repro.kernels.event_fc.ops import event_fc_batched
 from repro.kernels.event_pool.ops import event_pool_batched
@@ -92,14 +106,16 @@ class LayerOp:
     Everything the executor needs, resolved at compile time: the scatter
     kind (which Pallas kernel family consumes this layer's events), the
     halo width (conv scatters need address headroom; pool/FC do not), the
-    per-timestep input-event capacity (the serving-side FIFO), and the LIF
-    plan (shared leak/fire/reset dynamics).
+    per-timestep input-event capacity (the serving-side FIFO), the LIF
+    plan (shared leak/fire/reset dynamics), and the dtype policy (which
+    datapath — float carrier or native integer — executes it).
     """
 
     index: int
     spec: EConvSpec
     halo: int
     step_capacity: int
+    dtype_policy: str = F32_CARRIER
 
     @property
     def kind(self) -> str:
@@ -116,6 +132,7 @@ class LayerProgram:
 
     spec: "SNNSpec"
     ops: Tuple[LayerOp, ...]
+    dtype_policy: str = F32_CARRIER
 
     def __len__(self) -> int:
         return len(self.ops)
@@ -125,34 +142,114 @@ class LayerProgram:
         return tuple(op.step_capacity for op in self.ops)
 
 
+def state_dtype(op: LayerOp):
+    """Membrane *storage* dtype between timesteps (the resident slabs)."""
+    return jnp.int8 if op.dtype_policy == INT8_NATIVE else jnp.float32
+
+
+def acc_dtype(op: LayerOp):
+    """Accumulator dtype a timestep computes in (leak/scatter/fire)."""
+    return jnp.int32 if op.dtype_policy == INT8_NATIVE else jnp.float32
+
+
+def scatter_dtypes(op: LayerOp):
+    """Dtypes of one scatter launch: ``(v_in, v_out, weights, gate)``.
+
+    The native path feeds the kernel its int8 storage slab directly when
+    the post-leak state provably stays in int8 range ("toward_zero" leak
+    only shrinks |v|); a "subtract" leak can transiently leave the range,
+    so the slab is widened to the accumulator before the launch.  Gates
+    ride at the slab dtype (the kernels cast them to ``v.dtype``).
+    """
+    if op.dtype_policy == INT8_NATIVE:
+        v_in = (jnp.int8 if op.lif.leak_mode == "toward_zero"
+                else jnp.int32)
+        return v_in, jnp.int32, jnp.int8, v_in
+    f = jnp.float32
+    return f, f, f, f
+
+
+def validate_policy_layer(lspec: EConvSpec, index: int,
+                          dtype_policy: str) -> None:
+    """Reject a layer spec the named datapath cannot execute exactly.
+
+    int8-native needs a genuinely integer-domain layer: integral threshold /
+    leak (they become int32 scalars) and an int8-representable state clip
+    (the storage saturation).  `core.quant.quantize_net` produces exactly
+    such specs; float nets must go through it first.
+    """
+    if dtype_policy not in DTYPE_POLICIES:
+        raise ValueError(f"unknown dtype policy {dtype_policy!r} "
+                         f"(expected one of {DTYPE_POLICIES})")
+    if dtype_policy == F32_CARRIER:
+        return
+    p = lspec.lif
+    if p.state_clip is None or not (0 < p.state_clip <= INT8_MAX):
+        raise ValueError(
+            f"layer {index}: int8-native requires state_clip in (0, "
+            f"{INT8_MAX}], got {p.state_clip} — lower the net with "
+            f"core.quant.quantize_net first")
+    for name, val in (("threshold", p.threshold), ("leak", p.leak),
+                      ("state_clip", p.state_clip)):
+        if not float(val).is_integer():
+            raise ValueError(
+                f"layer {index}: int8-native requires integral {name}, got "
+                f"{val} — lower the net with core.quant.quantize_net")
+
+
+def validate_policy_spec(spec: "SNNSpec", dtype_policy: str) -> None:
+    """Whole-network face of :func:`validate_policy_layer`."""
+    if dtype_policy not in DTYPE_POLICIES:
+        raise ValueError(f"unknown dtype policy {dtype_policy!r} "
+                         f"(expected one of {DTYPE_POLICIES})")
+    for i, l in enumerate(spec.layers):
+        validate_policy_layer(l, i, dtype_policy)
+
+
 def layer_op(spec: EConvSpec, index: int = 0,
-             step_capacity: Optional[int] = None) -> LayerOp:
-    """Lower a single layer spec (the one-layer program used by econv)."""
+             step_capacity: Optional[int] = None,
+             dtype_policy: str = F32_CARRIER) -> LayerOp:
+    """Lower a single layer spec (the one-layer program used by econv).
+
+    Validates the spec against the policy here — every op construction
+    path (`compile_program`, `econv.event_forward`, direct use) gets the
+    same loud rejection instead of silently truncating float dynamics.
+    """
+    validate_policy_layer(spec, index, dtype_policy)
     return LayerOp(index=index, spec=spec, halo=_halo(spec),
                    step_capacity=(step_capacity if step_capacity is not None
-                                  else layer_step_capacity(spec)))
+                                  else layer_step_capacity(spec)),
+                   dtype_policy=dtype_policy)
 
 
 @functools.lru_cache(maxsize=64)
 def compile_program(spec: "SNNSpec",
                     step_capacities: Optional[Tuple[int, ...]] = None,
                     step_activity: float = 0.25, step_slack: float = 4.0,
-                    step_align: int = 8) -> LayerProgram:
+                    step_align: int = 8,
+                    dtype_policy: str = F32_CARRIER) -> LayerProgram:
     """Compile ``SNNSpec`` into the typed op sequence the executors run.
 
     ``step_capacities`` overrides the per-layer per-timestep event buckets
     (one per layer); by default :func:`layer_step_capacity` sizes them.
+    ``dtype_policy`` selects the datapath (one switch for every entry
+    point); int8-native specs are validated here, at compile time.
     The program is static and hashable — safe to close over in ``jax.jit``.
     """
     if step_capacities is not None and len(step_capacities) != len(spec.layers):
         raise ValueError("need one per-timestep capacity per layer")
+    if dtype_policy not in DTYPE_POLICIES:   # layer_op re-checks per layer,
+        raise ValueError(                    # but an empty spec must not slip
+            f"unknown dtype policy {dtype_policy!r} "
+            f"(expected one of {DTYPE_POLICIES})")
     ops = []
     for i, l in enumerate(spec.layers):
         cap = (step_capacities[i] if step_capacities is not None
                else layer_step_capacity(l, step_activity, step_slack,
                                         step_align))
-        ops.append(layer_op(l, index=i, step_capacity=cap))
-    return LayerProgram(spec=spec, ops=tuple(ops))
+        ops.append(layer_op(l, index=i, step_capacity=cap,
+                            dtype_policy=dtype_policy))
+    return LayerProgram(spec=spec, ops=tuple(ops), dtype_policy=dtype_policy)
 
 
 def default_stream_capacities(spec: "SNNSpec", activity: float = 0.05,
@@ -173,9 +270,14 @@ def default_step_capacities(spec: "SNNSpec", activity: float = 0.25,
 # Shared state-geometry primitives (3D single-stream and 4D slot-batched).
 # ---------------------------------------------------------------------------
 
-def padded_state(op: LayerOp, dtype, n_slots: Optional[int] = None
+def padded_state(op: LayerOp, dtype=None, n_slots: Optional[int] = None
                  ) -> jnp.ndarray:
-    """Zero halo-padded membrane state; batched when ``n_slots`` is given."""
+    """Zero halo-padded membrane state; batched when ``n_slots`` is given.
+
+    ``dtype=None`` picks the op's policy storage dtype (:func:`state_dtype`).
+    """
+    if dtype is None:
+        dtype = state_dtype(op)
     Ho, Wo, Co = op.spec.out_shape
     h = op.halo
     shape = (Ho + 2 * h, Wo + 2 * h, Co)
@@ -199,10 +301,15 @@ def write_interior(vp: jnp.ndarray, x: jnp.ndarray, h: int) -> jnp.ndarray:
 
 
 def clip_state(v: jnp.ndarray, p: LifParams) -> jnp.ndarray:
-    """8-bit-state saturation (no-op when the layer has no clip)."""
+    """8-bit-state saturation (no-op when the layer has no clip).
+
+    dtype-generic: the bound rides at ``v.dtype`` (float carrier or the
+    int32 accumulator — integral by the int8-native validation).
+    """
     if p.state_clip is None:
         return v
-    return jnp.clip(v, -p.state_clip, p.state_clip)
+    c = jnp.asarray(p.state_clip, v.dtype)
+    return jnp.clip(v, -c, c)
 
 
 # ---------------------------------------------------------------------------
@@ -250,6 +357,17 @@ def _channel_block(n_channels: int, want: int) -> int:
     return b
 
 
+def check_native_weights(op: LayerOp, params: EConvParams) -> None:
+    """int8-native requires integer weight codes, loudly (dtype is static,
+    so this check is jit-safe — it fires at trace time, not per step)."""
+    if (op.dtype_policy == INT8_NATIVE
+            and not jnp.issubdtype(params.w.dtype, jnp.integer)):
+        raise ValueError(
+            f"layer {op.index} ({op.kind}): int8-native execution needs "
+            f"integer weight codes, got {params.w.dtype} — lower the net "
+            f"with core.quant.quantize_net and use params_for('int8-native')")
+
+
 def scatter_events_batched(op: LayerOp, params: EConvParams, vp: jnp.ndarray,
                            xyc: jnp.ndarray, gate: jnp.ndarray,
                            co_blk: int = 128,
@@ -262,21 +380,60 @@ def scatter_events_batched(op: LayerOp, params: EConvParams, vp: jnp.ndarray,
       conv: per-event ``K x K x Co`` weight-patch accumulate (halo coords);
       pool: strided per-event one-site add (``kernels/event_pool``);
       fc:   gated weight-row gather accumulate (``kernels/event_fc``).
+
+    Under the int8-native policy the launch consumes the int8 slab (or the
+    int32-widened one for "subtract" leak — see :func:`scatter_dtypes`)
+    and returns the int32 accumulator slab; the carrier policy is
+    unchanged (dtype in == dtype out).
     """
     spec = op.spec
+    check_native_weights(op, params)
+    out_dtype = acc_dtype(op) if op.dtype_policy == INT8_NATIVE else None
     if spec.kind == "conv":
         # shift into halo coordinates (same arithmetic as scatter_event)
         off = jnp.asarray([spec.padding, spec.padding, 0], jnp.int32)
         return event_conv_batched(vp, params.w, xyc + off, gate,
                                   co_blk=_channel_block(spec.out_channels,
                                                         co_blk),
-                                  use_pallas=use_pallas)
+                                  use_pallas=use_pallas, out_dtype=out_dtype)
     if spec.kind == "pool":
         return event_pool_batched(vp, params.w, xyc, gate,
-                                  stride=spec.stride, use_pallas=use_pallas)
+                                  stride=spec.stride, use_pallas=use_pallas,
+                                  out_dtype=out_dtype)
     return event_fc_batched(vp, params.w, xyc, gate, in_shape=spec.in_shape,
                             d_blk=_channel_block(spec.out_channels, co_blk),
-                            use_pallas=use_pallas)
+                            use_pallas=use_pallas, out_dtype=out_dtype)
+
+
+def scatter_launch_bytes(op: LayerOp, n_slots: int, n_events: int) -> int:
+    """Bytes one slot-batched scatter launch moves (operands + result).
+
+    The dtype rules come from :func:`scatter_dtypes` — the same single
+    source the executor uses — so this accounting cannot drift from what
+    the kernels actually consume.  Events are int32 triples under every
+    policy; weights, gates and the membrane slabs carry the policy dtypes.
+    This is the figure `benchmarks/layer_program.py` pins: the int8-native
+    launch must move strictly fewer bytes than the float carrier's.
+    """
+    v_in_dt, v_out_dt, w_dt, gate_dt = scatter_dtypes(op)
+    spec = op.spec
+    Ho, Wo, Co = spec.out_shape
+    h = op.halo
+    slab = n_slots * (Ho + 2 * h) * (Wo + 2 * h) * Co
+    if spec.kind == "conv":
+        H, W, Ci = spec.in_shape
+        w_elems = spec.kernel * spec.kernel * Ci * spec.out_channels
+    elif spec.kind == "pool":
+        w_elems = spec.in_shape[2]
+    else:
+        H, W, Ci = spec.in_shape
+        w_elems = H * W * Ci * spec.out_channels
+    isz = (lambda dt: jnp.dtype(dt).itemsize)
+    return (n_slots * n_events * 3 * 4            # event triples, int32
+            + n_slots * n_events * isz(gate_dt)   # validity gates
+            + w_elems * isz(w_dt)                 # shared weights
+            + slab * isz(v_in_dt)                 # membrane slab in
+            + slab * isz(v_out_dt))               # accumulator slab out
 
 
 # ---------------------------------------------------------------------------
@@ -292,18 +449,43 @@ def layer_timestep(op: LayerOp, params: EConvParams, vp: jnp.ndarray,
     ``alive_t`` (N,) freezes slots whose request has no timestep here (the
     tail of a window past a short request) — their state and spikes are
     held/zeroed so a frozen slot is bit-identical to not stepping it.
+
+    Carrier policy: everything stays float32.  int8-native policy: ``vp``
+    is the int8 storage slab; leak runs in the int32 accumulator, the
+    scatter consumes the narrowest exact slab (:func:`scatter_dtypes`) and
+    accumulates in int32, clip/fire/reset run in int32, and the result is
+    saturated back to int8 storage.  The interior is exact by construction
+    (post-clip values fit int8); halo cells are write-only scratch — they
+    never feed an output — so saturating them is harmless.
     """
     lp = op.lif
     h = op.halo
-    vp_l = write_interior(vp, apply_leak(interior(vp, h), lp.leak, 1,
-                                         lp.leak_mode), h)
-    vp_s = scatter_events_batched(op, params, vp_l, xyc, gate, co_blk,
-                                  use_pallas)
-    v = clip_state(interior(vp_s, h), lp)
-    v, s = fire_and_reset(v, lp)
-    vp_new = write_interior(vp_s, v, h)
+    if op.dtype_policy == INT8_NATIVE:
+        acc = acc_dtype(op)
+        v_in_dt = scatter_dtypes(op)[0]
+        v_l = apply_leak(interior(vp, h).astype(acc), lp.leak, 1,
+                         lp.leak_mode)
+        vp_l = write_interior(vp.astype(v_in_dt), v_l.astype(v_in_dt), h)
+        vp_s = scatter_events_batched(op, params, vp_l, xyc, gate, co_blk,
+                                      use_pallas)                 # int32
+        v = clip_state(interior(vp_s, h), lp)
+        v, s = fire_and_reset(v, lp)
+        vp_new = write_interior(vp_s, v, h)
+        vp_new = jnp.clip(vp_new, INT8_MIN, INT8_MAX).astype(jnp.int8)
+    else:
+        vp_l = write_interior(vp, apply_leak(interior(vp, h), lp.leak, 1,
+                                             lp.leak_mode), h)
+        vp_s = scatter_events_batched(op, params, vp_l, xyc, gate, co_blk,
+                                      use_pallas)
+        v = clip_state(interior(vp_s, h), lp)
+        v, s = fire_and_reset(v, lp)
+        vp_new = write_interior(vp_s, v, h)
     m = alive_t.reshape(-1, 1, 1, 1)
-    return jnp.where(m > 0, vp_new, vp), s * m
+    # where (not s * m): keeps the spike dtype policy-native (int32 spikes
+    # would promote to f32 against the f32 alive mask); bitwise identical
+    # for the carrier since spikes are exactly 0/1
+    s = jnp.where(m > 0, s, jnp.zeros_like(s))
+    return jnp.where(m > 0, vp_new, vp), s
 
 
 def frame_to_events(s: jnp.ndarray, cap: int):
@@ -345,7 +527,7 @@ def apply_idle_decay(states, dt, *, program: LayerProgram):
     back bit-identical.  Traced inside :func:`window_step`, so the flush
     costs no separate dispatch.
     """
-    dt4 = dt.astype(jnp.float32).reshape(-1, 1, 1, 1)
+    dt4 = dt.reshape(-1, 1, 1, 1)
     out = []
     for vp, op in zip(states, program.ops):
         if not supports_idle_skip(op.lif):
@@ -353,7 +535,14 @@ def apply_idle_decay(states, dt, *, program: LayerProgram):
             # their deferred dt is always zero — pass the slab through
             out.append(vp)
             continue
-        dec = idle_decay(interior(vp, op.halo), op.lif, dt4)
+        v_in = interior(vp, op.halo)
+        if op.dtype_policy == INT8_NATIVE:
+            # decay in the wide accumulator (leak * dt can overflow int8);
+            # idle_decay ends clipped, so the downcast back is exact
+            dec = idle_decay(v_in.astype(acc_dtype(op)), op.lif,
+                             dt4).astype(jnp.int8)
+        else:
+            dec = idle_decay(v_in, op.lif, dt4.astype(v_in.dtype))
         out.append(write_interior(vp, dec, op.halo))
     return tuple(out)
 
@@ -396,11 +585,15 @@ def window_step(params: Sequence[EConvParams], states, class_counts,
             if op.index > 0:
                 xyc, gate, n_drop = frame_to_events(s, op.step_capacity)
                 drops = drops.at[op.index].add(n_drop)
-            counts = counts.at[op.index].add(jnp.sum(gate, axis=1))
+            counts = counts.at[op.index].add(
+                jnp.sum(gate, axis=1).astype(counts.dtype))
             states[op.index], s = layer_timestep(op, p, states[op.index],
                                                  xyc, gate, alive_t, co_blk,
                                                  use_pallas)
-        class_counts = class_counts + jnp.sum(s, axis=(1, 2))
+        # class counts stay float32 under every policy (integer spikes
+        # sum exactly; rate decoding is policy-independent)
+        class_counts = class_counts + jnp.sum(
+            s, axis=(1, 2)).astype(class_counts.dtype)
         return (tuple(states), class_counts, counts, drops), None
 
     counts0 = jnp.zeros((L, N), jnp.float32)
@@ -429,6 +622,12 @@ def layer_event_forward(op: LayerOp, params: EConvParams,
     The lazy timestep skip is exact only for hard resets (a reset neuron
     cannot re-cross the threshold without new input); SNE's datapath resets
     the membrane on fire, so this matches the hardware.
+
+    Under the int8-native policy the scan carries the membrane in the
+    int32 accumulator (the whole inference is one resident phase — the
+    VMEM-held analogue of the serving path's per-timestep int8 storage);
+    the emitted event stream is bitwise identical to the carrier oracle's
+    and the returned membrane holds the same integers in int32.
     """
     spec = op.spec
     Ho, Wo, Co = spec.out_shape
@@ -436,6 +635,7 @@ def layer_event_forward(op: LayerOp, params: EConvParams,
     if p.reset_mode != "zero":
         raise ValueError("event path requires reset_mode='zero' (hardware "
                          "semantics; lazy TLU skip is exact only then)")
+    check_native_weights(op, params)
     n_flat = Ho * Wo * Co
     # Flat coordinate tables for FIRE emission.
     ii = jnp.arange(n_flat, dtype=jnp.int32)
@@ -508,7 +708,8 @@ def layer_event_forward(op: LayerOp, params: EConvParams,
         n_upd = n_upd + is_upd.astype(jnp.int32)
         return (vp, t_cur, out, cursor, emitted, n_upd, n_bnd), None
 
-    vp0 = padded_state(op, params.w.dtype)
+    vp0 = padded_state(op, (acc_dtype(op) if op.dtype_policy == INT8_NATIVE
+                            else params.w.dtype))
     carry0 = (vp0, jnp.int32(0), out0, jnp.int32(0), jnp.int32(0),
               jnp.int32(0), jnp.int32(0))
     xs = (stream.t, stream.x, stream.y, stream.c, stream.op, stream.valid)

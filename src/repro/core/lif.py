@@ -50,11 +50,17 @@ class LifParams:
 
 
 def apply_leak(v: jnp.ndarray, leak, dt, mode: str) -> jnp.ndarray:
-    """Apply ``dt`` leak steps at once (TLU lazy leak — exact, see module doc)."""
+    """Apply ``dt`` leak steps at once (TLU lazy leak — exact, see module doc).
+
+    dtype-generic: runs in ``v.dtype`` (float32 carrier or a native integer
+    accumulator).  Integer callers must pass an integral ``leak`` — the
+    quantised nets do (`core.quant` rounds leak into integer units).
+    """
     dt = jnp.asarray(dt, v.dtype)
-    step = leak * dt
+    step = jnp.asarray(leak, v.dtype) * dt
     if mode == "toward_zero":
-        return jnp.sign(v) * jnp.maximum(jnp.abs(v) - step, 0.0)
+        return jnp.sign(v) * jnp.maximum(jnp.abs(v) - step,
+                                         jnp.asarray(0, v.dtype))
     elif mode == "subtract":
         return v - step
     raise ValueError(f"unknown leak mode {mode!r}")
@@ -124,12 +130,17 @@ def lif_rollout(v0: jnp.ndarray, syn_in: jnp.ndarray, p: LifParams,
 
 
 def fire_and_reset(v: jnp.ndarray, p: LifParams) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """FIRE_OP: threshold every neuron, emit spikes, reset firing neurons."""
-    s = (v >= p.threshold).astype(v.dtype)
+    """FIRE_OP: threshold every neuron, emit spikes, reset firing neurons.
+
+    dtype-generic (float carrier or native integer membrane); integer
+    callers must hold an integral threshold (quantised nets do).
+    """
+    th = jnp.asarray(p.threshold, v.dtype)
+    s = (v >= th).astype(v.dtype)
     if p.reset_mode == "zero":
-        v = v * (1.0 - s)
+        v = v * (1 - s)
     else:
-        v = v - s * p.threshold
+        v = v - s * th
     return v, s
 
 
@@ -170,7 +181,8 @@ def idle_decay(v: jnp.ndarray, p: LifParams, dt) -> jnp.ndarray:
     dt = jnp.asarray(dt)
     out = apply_leak(v, p.leak, dt, p.leak_mode)
     if p.state_clip is not None:
-        out = jnp.clip(out, -p.state_clip, p.state_clip)
+        c = jnp.asarray(p.state_clip, v.dtype)
+        out = jnp.clip(out, -c, c)
     # dt == 0 must be a bitwise no-op (apply_leak's sign(v)*|v| normalises
     # -0.0); jnp.where keeps untouched lanes bit-identical
     return jnp.where(dt > 0, out, v)

@@ -1,0 +1,12 @@
+"""Dtype-policy names for the layer-program executor (single source).
+
+A leaf module so every layer of the stack — `core.quant` (lowering),
+`core.econv` / `core.sne_net` (entry points), `core.layer_program`
+(executor), `serve.event_engine` (serving) — names the policies from one
+place without import cycles (econv cannot import layer_program, which
+imports it).  `core.layer_program` re-exports these for callers that
+already import it.
+"""
+F32_CARRIER = "f32-carrier"
+INT8_NATIVE = "int8-native"
+DTYPE_POLICIES = (F32_CARRIER, INT8_NATIVE)

@@ -1,26 +1,39 @@
 """Quantisation for SNE deployment (paper §III-D4: 4-bit weights, 8-bit state).
 
-Two pieces:
+Three pieces:
 
   * **QAT fake-quant** — straight-through-estimator rounding used while
     training in the dense path (the paper trains its SNE-LIF model in SLAYER
     with quantised dynamics, §IV-B).
   * **Integer deployment quantisation** — converts a trained layer to the
     integer domain the ASIC computes in: int4-range weights, integer leak /
-    threshold, int8-saturating membrane.  Because both execution paths in
-    :mod:`repro.core.econv` run the same arithmetic, the integer-domain
-    values are held in float32 carriers (exact for |x| < 2^24) and the
-    membrane clip implements the 8-bit saturation.
+    threshold, int8-saturating membrane.  :func:`quantize_net` lowers a whole
+    network at once and returns a :class:`QuantizedNet`, which can emit the
+    weights for either execution policy of the layer-program executor:
+
+      - ``"f32-carrier"`` — integer codes held in float32 carriers (exact
+        for |x| < 2^24); the bit-exactness *oracle*;
+      - ``"int8-native"`` — the same codes as native ``int8`` arrays, run
+        with int32 scatter accumulation and int8 membrane storage.
+
+  * **Pack / unpack / requantize plumbing** — the int4 nibble-packed weight
+    memory image (two codes per byte, the ASIC format), per-channel scales
+    kept on the side for dequantisation, and :func:`requantize_codes` for
+    moving integer codes between quantisation grids.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import TYPE_CHECKING, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.econv import EConvParams, EConvSpec
+from repro.core.policies import DTYPE_POLICIES, F32_CARRIER, INT8_NATIVE
+
+if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids import cycle)
+    from repro.core.sne_net import SNNSpec
 
 INT4_MIN, INT4_MAX = -8, 7
 INT8_MIN, INT8_MAX = -128, 127
@@ -43,8 +56,19 @@ _ste_round.defvjp(_ste_fwd, _ste_bwd)
 
 
 def weight_scale(w: jnp.ndarray, per_channel: bool = True) -> jnp.ndarray:
-    """Symmetric scale mapping the weight range onto int4."""
-    if per_channel and w.ndim >= 2:
+    """Symmetric scale mapping the weight range onto int4.
+
+    ``per_channel=True`` reduces over every axis but the last (the
+    output-channel axis of conv ``(K, K, Ci, Co)`` and fc ``(Din, Dout)``
+    weights).  1-D arrays (pool per-channel synapses, bias-like vectors)
+    are *already* per-channel — each entry is its own channel — so the
+    scale is elementwise ``|w| / 7``.  (They previously fell back to a
+    single per-tensor scale via a silent ``w.ndim >= 2`` guard.)
+
+    Dead channels (``amax == 0``) get the ``1e-8`` floor, so their codes
+    quantise to exactly 0 and dequantisation stays finite — no NaN/inf.
+    """
+    if per_channel:
         axes = tuple(range(w.ndim - 1))
         amax = jnp.max(jnp.abs(w), axis=axes, keepdims=True)
     else:
@@ -65,6 +89,48 @@ def quantize_weights_int(w: jnp.ndarray,
     s = weight_scale(w, per_channel)
     q = jnp.clip(jnp.round(w / s), INT4_MIN, INT4_MAX).astype(jnp.int8)
     return q, s
+
+
+def requantize_codes(q: jnp.ndarray, from_scale, to_scale) -> jnp.ndarray:
+    """Move integer codes from one quantisation grid onto another.
+
+    ``q * from_scale`` is the real value; re-expressing it on ``to_scale``
+    gives ``round(q * from_scale / to_scale)``, saturated back into the
+    int4 range — the integer-domain rescaling step (gemmlowp-style
+    requantisation) used when per-channel-stored codes must execute on a
+    layer-shared grid.  Scales may be scalars or broadcastable arrays.
+    """
+    ratio = jnp.asarray(from_scale, jnp.float32) / jnp.asarray(to_scale,
+                                                               jnp.float32)
+    out = jnp.round(q.astype(jnp.float32) * ratio)
+    return jnp.clip(out, INT4_MIN, INT4_MAX).astype(jnp.int8)
+
+
+def _integer_lif(lif, s_scalar: float, state_bits: int = 8):
+    """Express threshold / leak in weight-code units; set the 8-bit clip.
+
+    A lowered threshold above the state clip is rejected loudly: the
+    executor saturates the membrane to ``±clip`` *before* the fire
+    comparison, so such a layer could never spike — it would pass every
+    parity check (both policies agree on the all-zero outputs) while the
+    quantized model is silently dead.  The cure is training-side: a
+    larger weight scale (QAT) or a smaller real-unit threshold.
+    """
+    clip_val = float(2 ** (state_bits - 1) - 1)
+    th = float(max(round(lif.threshold / s_scalar), 1))
+    if th > clip_val:
+        raise ValueError(
+            f"integer-domain threshold {th:.0f} exceeds the "
+            f"{state_bits}-bit state clip {clip_val:.0f}: the membrane "
+            f"saturates below threshold and the layer can never fire "
+            f"(threshold {lif.threshold} / weight scale {s_scalar:.4g}) — "
+            f"retrain with QAT or rescale before lowering")
+    return dataclasses.replace(
+        lif,
+        threshold=th,
+        leak=float(max(round(lif.leak / s_scalar), 0)),
+        state_clip=clip_val,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,16 +155,126 @@ class QuantizedLayer:
             qi, s = quantize_weights_int(params.w, per_channel=False)
             q = qi.astype(jnp.float32)
             s_scalar = float(s)
-        clip_val = float(2 ** (state_bits - 1) - 1)
-        lif = dataclasses.replace(
-            spec.lif,
-            threshold=max(round(spec.lif.threshold / s_scalar), 1),
-            leak=max(round(spec.lif.leak / s_scalar), 0),
-            state_clip=clip_val,
-        )
+        lif = _integer_lif(spec.lif, s_scalar, state_bits)
         qspec = dataclasses.replace(spec, lif=lif)
         return QuantizedLayer(spec=qspec, params=EConvParams(w=q),
                               w_scale_max=s_scalar)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedNet:
+    """A whole eCNN lowered to the SNE integer domain, policy-agnostic.
+
+    Holds one integer model and every face of it the system needs:
+
+      * ``spec``   — the integer-domain ``SNNSpec`` (integral threshold /
+        leak per layer, int8 ``state_clip``); both dtype policies execute
+        exactly this spec, so their results can be compared bitwise.
+      * ``codes``  — per-layer int8 arrays of int4-range weight codes (the
+        execution weights; pool layers keep their unit synapses as codes).
+      * ``scales`` — per-layer *per-channel* quantisation scales kept on
+        the side (per-output-channel arrays for conv/fc when lowered with
+        ``per_channel=True``, elementwise for 1-D pool synapses).  They
+        describe the pre-requantisation per-channel grid — the side table
+        for error reporting and a finer-grained re-lowering — and are
+        never consulted by the datapath.
+      * ``shared_scales`` — the layer-shared execution grid (one float per
+        layer): ``codes * shared_scale`` IS the real-unit value the
+        datapath computes with, so :meth:`dequantized_params` uses exactly
+        this (the per-channel table would mis-scale the shared-grid codes).
+      * ``packed`` — per-layer uint8 nibble images of the *execution*
+        codes (two int4 codes per byte), the ASIC weight-memory format;
+        round-trips through :func:`unpack_int4`.
+    """
+
+    spec: "SNNSpec"
+    codes: Tuple[jnp.ndarray, ...]
+    scales: Tuple[jnp.ndarray, ...]
+    shared_scales: Tuple[float, ...]
+    packed: Tuple[jnp.ndarray, ...]
+
+    def params_for(self, dtype_policy: str) -> List[EConvParams]:
+        """Execution weights for one layer-program dtype policy."""
+        if dtype_policy == INT8_NATIVE:
+            return [EConvParams(w=c) for c in self.codes]
+        if dtype_policy == F32_CARRIER:
+            return [EConvParams(w=c.astype(jnp.float32)) for c in self.codes]
+        raise ValueError(f"unknown dtype policy {dtype_policy!r} "
+                         f"(expected one of {DTYPE_POLICIES})")
+
+    def dequantized_params(self) -> List[EConvParams]:
+        """Float reconstruction of the *executed* model: codes on the
+        layer-shared grid times that grid's scale (reporting)."""
+        return [EConvParams(w=c.astype(jnp.float32) * s)
+                for c, s in zip(self.codes, self.shared_scales)]
+
+    def weight_bytes(self) -> int:
+        """Bytes of the packed int4 weight memory image (all layers)."""
+        return int(sum(p.size for p in self.packed))
+
+    def unpacked_codes(self) -> List[jnp.ndarray]:
+        """Codes recovered from the packed image (must equal ``codes``)."""
+        return [unpack_int4(p, int(c.size)).reshape(c.shape)
+                for p, c in zip(self.packed, self.codes)]
+
+
+def quantize_net(params: Sequence[EConvParams], spec: "SNNSpec",
+                 per_channel: bool = True,
+                 state_bits: int = 8) -> QuantizedNet:
+    """Lower a trained float network to one integer-domain model.
+
+    Weights quantise symmetrically onto int4 codes.  With
+    ``per_channel=True`` the *stored* scales are per-output-channel
+    (smaller dequantisation error; the side table the ASIC would keep next
+    to its weight memory), while the codes the datapath executes are
+    requantised onto the layer-shared grid (``max`` channel scale) via
+    :func:`requantize_codes` — the shared grid is what lets threshold and
+    leak stay single integers per layer (`LifParams` scalars, the paper's
+    datapath).  ``per_channel=False`` quantises straight onto the shared
+    grid (no requantisation step).
+
+    Pool layers carry unit synapses on the integer datapath (scale 1);
+    non-integral pool weights cannot be represented there, so they are
+    rejected loudly rather than silently rounded away (a 0.25 avg-pool
+    synapse would otherwise quantise to a dead 0-code layer).
+
+    The returned :class:`QuantizedNet` serves both dtype policies; the
+    integer spec it carries passes ``compile_program``'s int8-native
+    validation by construction.
+    """
+    codes, scales, shared, packed, qlayers = [], [], [], [], []
+    for i, (p, l) in enumerate(zip(params, spec.layers)):
+        if l.kind == "pool":
+            q32 = jnp.round(p.w)
+            if (float(jnp.max(jnp.abs(p.w - q32))) > 1e-6
+                    or float(jnp.max(jnp.abs(q32))) > INT4_MAX
+                    or float(jnp.min(q32)) < INT4_MIN):
+                raise ValueError(
+                    f"layer {i} (pool): synapse weights must be int4-range "
+                    f"integers on the integer datapath (got values in "
+                    f"[{float(p.w.min()):.4g}, {float(p.w.max()):.4g}]) — "
+                    f"rescale the pool synapses/threshold before lowering")
+            q = q32.astype(jnp.int8)
+            s_side = jnp.ones_like(p.w)
+            s_shared = 1.0
+        else:
+            s_shared = float(weight_scale(p.w, per_channel=False))
+            if per_channel:
+                q_pc, s_pc = quantize_weights_int(p.w, per_channel=True)
+                q = requantize_codes(q_pc, s_pc, s_shared)
+                s_side = s_pc.reshape(p.w.shape[-1:])
+            else:
+                q, _ = quantize_weights_int(p.w, per_channel=False)
+                s_side = jnp.full(p.w.shape[-1:], s_shared)
+        codes.append(q)
+        scales.append(s_side)
+        shared.append(s_shared)
+        packed.append(pack_int4(q))
+        qlayers.append(dataclasses.replace(
+            l, lif=_integer_lif(l.lif, s_shared, state_bits)))
+    qspec = dataclasses.replace(spec, layers=tuple(qlayers))
+    return QuantizedNet(spec=qspec, codes=tuple(codes), scales=tuple(scales),
+                        shared_scales=tuple(shared), packed=tuple(packed))
 
 
 def quantize_state(v: jnp.ndarray, scale: float) -> jnp.ndarray:

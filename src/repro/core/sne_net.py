@@ -22,6 +22,7 @@ from repro.core import events as ev
 from repro.core.econv import (EConvParams, EConvSpec, EConvStats,
                               dense_forward, init_econv)
 from repro.core.lif import LifParams
+from repro.core.policies import F32_CARRIER
 from repro.core.quant import QuantizedLayer, fake_quant_weights
 
 
@@ -141,8 +142,8 @@ class NetworkEventStats(NamedTuple):
 
 
 def event_apply(params: Sequence[EConvParams], spec: SNNSpec,
-                stream: ev.EventStream,
-                capacities: Sequence[int]):
+                stream: ev.EventStream, capacities: Sequence[int],
+                dtype_policy: str = F32_CARRIER):
     """Run the whole eCNN in the event domain.
 
     ``capacities[i]`` sizes layer *i*'s output event buffer (the FIFO/DMA
@@ -151,9 +152,13 @@ def event_apply(params: Sequence[EConvParams], spec: SNNSpec,
     The spec is compiled once (`core.layer_program.compile_program`, cached)
     and the compiled program's stream driver chains every layer through the
     unified ``leak -> scatter -> clip -> fire -> reset`` executor.
+    ``dtype_policy`` selects the datapath dtype domain ("f32-carrier", or
+    "int8-native" for integer-domain specs with int8 weight codes from
+    `core.quant.quantize_net`); the emitted stream is bitwise identical
+    across policies on the same integer-domain net.
     """
     from repro.core.layer_program import compile_program, run_stream
-    program = compile_program(spec)
+    program = compile_program(spec, dtype_policy=dtype_policy)
     s, stats_all = run_stream(program, params, stream, capacities,
                               spec.n_timesteps)
     total_ev = sum(st.n_update_events for st in stats_all)
@@ -162,8 +167,10 @@ def event_apply(params: Sequence[EConvParams], spec: SNNSpec,
 
 
 def event_predict(params, spec: SNNSpec, stream: ev.EventStream,
-                  capacities: Sequence[int]):
-    out, stats = event_apply(params, spec, stream, capacities)
+                  capacities: Sequence[int],
+                  dtype_policy: str = F32_CARRIER):
+    out, stats = event_apply(params, spec, stream, capacities,
+                             dtype_policy=dtype_policy)
     # rate decoding over the output event stream
     cls = jnp.where(out.valid, out.c, spec.n_classes)
     counts = jnp.zeros((spec.n_classes + 1,)).at[cls].add(1.0)[:-1]
@@ -172,7 +179,14 @@ def event_predict(params, spec: SNNSpec, stream: ev.EventStream,
 
 def quantize_snn(params: Sequence[EConvParams],
                  spec: SNNSpec) -> Tuple[List[EConvParams], SNNSpec]:
-    """Lower every layer to the SNE integer domain (4-bit W / 8-bit state)."""
+    """Lower every layer to the SNE integer domain (4-bit W / 8-bit state).
+
+    Returns float32-carrier weights (integer codes in f32), the historical
+    per-layer form.  `core.quant.quantize_net` is the richer whole-network
+    lowering: it additionally yields native int8 codes for the
+    "int8-native" dtype policy, per-channel dequant scales, and the packed
+    int4 weight image.
+    """
     qp, ql = [], []
     for p, l in zip(params, spec.layers):
         q = QuantizedLayer.from_float(l, p)

@@ -46,21 +46,27 @@ def _event_conv_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
     the single-stream path is the N=1 special case of this kernel.
 
     ev_ref:   (1, E, 3) int32 — this slot's events (x, y, c).
-    gate_ref: (1, E, 1) float32 — 1.0 valid / 0.0 padding.
-    w_ref:    (K, K, Ci, CO_BLK) float32 — flipped weights, shared by slots.
-    v_ref:    (1, Hp, Wp, CO_BLK) float32 — this slot's membrane slab.
-    o_ref:    (1, Hp, Wp, CO_BLK) float32 — output slab.
+    gate_ref: (1, E, 1) — 1/0 valid/padding, same dtype as the v slab.
+    w_ref:    (K, K, Ci, CO_BLK) — flipped weights, shared by slots
+              (float32 carrier, or int8 codes on the native path).
+    v_ref:    (1, Hp, Wp, CO_BLK) — this slot's membrane slab (float32
+              carrier, or int8 storage on the native path).
+    o_ref:    (1, Hp, Wp, CO_BLK) — output slab in the *accumulator* dtype
+              (== v dtype on the carrier path; int32 on the native path,
+              so per-timestep sums never saturate mid-batch).
     """
     # Bring the slab into registers/VMEM once; all events accumulate on it.
-    o_ref[...] = v_ref[...]
+    o_ref[...] = v_ref[...].astype(o_ref.dtype)
 
     def body(i, _):
         x = ev_ref[0, i, 0]
         y = ev_ref[0, i, 1]
         c = ev_ref[0, i, 2]
         g = gate_ref[0, i, 0]
-        # (K, K, CO_BLK) patch for this event's input channel, gated.
-        patch = w_ref[:, :, c, :] * g
+        # (K, K, CO_BLK) patch for this event's input channel, gated; the
+        # product stays exact in every dtype pairing (gate is 1/0, int4
+        # codes fit int8) and promotes to o_ref's accumulator on the add.
+        patch = (w_ref[:, :, c, :] * g).astype(o_ref.dtype)
         cur = o_ref[0, pl.dslice(x, K), pl.dslice(y, K), :]
         o_ref[0, pl.dslice(x, K), pl.dslice(y, K), :] = cur + patch
         return ()
@@ -68,10 +74,12 @@ def _event_conv_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
     jax.lax.fori_loop(0, n_events, body, ())
 
 
-@functools.partial(jax.jit, static_argnames=("co_blk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("co_blk", "interpret",
+                                             "out_dtype"))
 def event_conv_pallas(v: jnp.ndarray, weights: jnp.ndarray,
                       ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
-                      co_blk: int = 128, interpret: bool = False):
+                      co_blk: int = 128, interpret: bool = False,
+                      out_dtype=None):
     """Scatter-accumulate an event batch into the membrane state.
 
     Matches :func:`repro.kernels.event_conv.ref.event_conv_ref` bit-for-bit
@@ -83,18 +91,24 @@ def event_conv_pallas(v: jnp.ndarray, weights: jnp.ndarray,
       v:        (Hp, Wp, Co) halo-padded membrane state.
       weights:  (K, K, Ci, Co) conv weights (unflipped; flipped here once).
       ev_xyc:   (E, 3) int32 events; coordinates already in halo coords.
-      ev_gate:  (E,) float32 validity gate.
+      ev_gate:  (E,) validity gate (cast to the slab dtype).
       co_blk:   output-channel block size (lane dimension of the slab).
+      out_dtype: accumulator/result dtype (default: ``v.dtype``).  The
+                int8-native policy passes int8 slabs with ``jnp.int32``
+                here so the batch accumulates without saturation.
     """
     return event_conv_batched_pallas(v[None], weights, ev_xyc[None],
                                      ev_gate[None], co_blk=co_blk,
-                                     interpret=interpret)[0]
+                                     interpret=interpret,
+                                     out_dtype=out_dtype)[0]
 
 
-@functools.partial(jax.jit, static_argnames=("co_blk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("co_blk", "interpret",
+                                             "out_dtype"))
 def event_conv_batched_pallas(v: jnp.ndarray, weights: jnp.ndarray,
                               ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
-                              co_blk: int = 128, interpret: bool = False):
+                              co_blk: int = 128, interpret: bool = False,
+                              out_dtype=None):
     """Scatter N slots' event batches into N membrane slabs in one launch.
 
     The batch (slot) axis is a grid dimension: grid step ``(n, co)`` owns
@@ -119,12 +133,13 @@ def event_conv_batched_pallas(v: jnp.ndarray, weights: jnp.ndarray,
         raise ValueError(
             f"slot-axis mismatch: v has {N} slots, events "
             f"{ev_xyc.shape[0]}, gates {ev_gate.shape[0]}")
+    out_dtype = v.dtype if out_dtype is None else jnp.dtype(out_dtype)
     E = ev_xyc.shape[1]
     if N == 0 or E == 0:
         # degenerate batch (idle-skip compaction can hand us an empty slot
         # or event axis) — a scatter of nothing is the identity; skip the
         # launch instead of building a zero-sized grid
-        return v
+        return v.astype(out_dtype)
     co_blk = min(co_blk, Co)
     if Co % co_blk:
         raise ValueError(f"Co={Co} not divisible by co_blk={co_blk}")
@@ -145,6 +160,6 @@ def event_conv_batched_pallas(v: jnp.ndarray, weights: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, Hp, Wp, co_blk),
                                lambda n, co: (n, 0, 0, co)),
-        out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+        out_shape=jax.ShapeDtypeStruct(v.shape, out_dtype),
         interpret=interpret,
     )(ev_xyc, gate3, w_f, v)

@@ -21,22 +21,25 @@ def _on_tpu() -> bool:
 
 def event_conv(v: jnp.ndarray, weights: jnp.ndarray, ev_xyc: jnp.ndarray,
                ev_gate: jnp.ndarray, co_blk: int = 128,
-               use_pallas: bool | None = None) -> jnp.ndarray:
+               use_pallas: bool | None = None, out_dtype=None) -> jnp.ndarray:
     """Accumulate a batch of UPDATE events into the membrane state.
 
     ``use_pallas=None`` auto-selects: Pallas (compiled) on TPU, Pallas
     interpret mode on CPU. ``use_pallas=False`` runs the pure-jnp oracle.
+    ``out_dtype`` widens the accumulator (int8-native policy: int8 slab
+    in, int32 accumulation out); default is ``v.dtype``.
     """
     if use_pallas is False:
-        return event_conv_ref(v, weights, ev_xyc, ev_gate)
+        return event_conv_ref(v, weights, ev_xyc, ev_gate,
+                              out_dtype=out_dtype)
     return event_conv_pallas(v, weights, ev_xyc, ev_gate, co_blk=co_blk,
-                             interpret=not _on_tpu())
+                             interpret=not _on_tpu(), out_dtype=out_dtype)
 
 
 def event_conv_batched(v: jnp.ndarray, weights: jnp.ndarray,
                        ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
-                       co_blk: int = 128,
-                       use_pallas: bool | None = None) -> jnp.ndarray:
+                       co_blk: int = 128, use_pallas: bool | None = None,
+                       out_dtype=None) -> jnp.ndarray:
     """Accumulate N slots' event batches into N membrane slabs at once.
 
     The slot axis is a grid dimension of a single ``pallas_call`` (the TPU
@@ -45,11 +48,14 @@ def event_conv_batched(v: jnp.ndarray, weights: jnp.ndarray,
     :func:`event_conv`.
 
     Empty batches (no slots, or a zero-length event axis after idle-skip
-    compaction) return ``v`` unchanged without launching anything.
+    compaction) return ``v`` unchanged (cast to ``out_dtype`` if given)
+    without launching anything.
     """
     if v.shape[0] == 0 or ev_xyc.shape[1] == 0:
-        return v
+        return v if out_dtype is None else v.astype(out_dtype)
     if use_pallas is False:
-        return event_conv_batched_ref(v, weights, ev_xyc, ev_gate)
+        return event_conv_batched_ref(v, weights, ev_xyc, ev_gate,
+                                      out_dtype=out_dtype)
     return event_conv_batched_pallas(v, weights, ev_xyc, ev_gate,
-                                     co_blk=co_blk, interpret=not _on_tpu())
+                                     co_blk=co_blk, interpret=not _on_tpu(),
+                                     out_dtype=out_dtype)

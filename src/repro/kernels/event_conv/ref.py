@@ -19,23 +19,29 @@ import jax.numpy as jnp
 
 
 def event_conv_ref(v: jnp.ndarray, weights: jnp.ndarray,
-                   ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray) -> jnp.ndarray:
+                   ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                   out_dtype=None) -> jnp.ndarray:
     """Oracle: sequential scatter-accumulate of event weight patches.
 
     Args:
       v:       (Hp, Wp, Co) halo-padded membrane state (Hp >= H + K - 1).
       weights: (K, K, Ci, Co) convolution weights (unflipped, HWIO).
       ev_xyc:  (E, 3) int32 event coordinates (x, y, c) in halo coords.
-      ev_gate: (E,) float gate; 0.0 disables an event (padding slot).
+      ev_gate: (E,) 1/0 gate; 0 disables an event (padding slot).
+      out_dtype: accumulator/result dtype (default ``v.dtype``; the
+               int8-native policy passes ``jnp.int32``).
 
     Returns the updated membrane state.
     """
+    acc = v.dtype if out_dtype is None else out_dtype
+    v = v.astype(acc)
+    ev_gate = ev_gate.astype(acc)
     w_f = jnp.flip(jnp.flip(weights, 0), 1)  # conv flip: out += W[i',j'] form
     K = weights.shape[0]
 
     def body(vv, e):
         xyc, g = e
-        patch = jnp.take(w_f, xyc[2], axis=2) * g          # (K, K, Co)
+        patch = (jnp.take(w_f, xyc[2], axis=2) * g).astype(acc)  # (K, K, Co)
         cur = jax.lax.dynamic_slice(vv, (xyc[0], xyc[1], 0),
                                     (K, K, vv.shape[2]))
         return jax.lax.dynamic_update_slice(vv, cur + patch,
@@ -46,8 +52,8 @@ def event_conv_ref(v: jnp.ndarray, weights: jnp.ndarray,
 
 
 def event_conv_batched_ref(v: jnp.ndarray, weights: jnp.ndarray,
-                           ev_xyc: jnp.ndarray,
-                           ev_gate: jnp.ndarray) -> jnp.ndarray:
+                           ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                           out_dtype=None) -> jnp.ndarray:
     """Oracle for the batched kernel: the single-stream oracle per slot.
 
     Args:
@@ -55,13 +61,16 @@ def event_conv_batched_ref(v: jnp.ndarray, weights: jnp.ndarray,
       weights: (K, K, Ci, Co) shared convolution weights.
       ev_xyc:  (N, E, 3) per-slot event coordinates.
       ev_gate: (N, E) per-slot gates.
+      out_dtype: accumulator/result dtype (default ``v.dtype``).
 
     vmap over the slot axis keeps the per-slab accumulation order identical
     to running :func:`event_conv_ref` slot by slot, so the batched kernel's
     bit-for-bit claim is checked against exactly the single-stream path.
     """
-    return jax.vmap(event_conv_ref, in_axes=(0, None, 0, 0))(
-        v, weights, ev_xyc, ev_gate)
+    def one(vv, xyc, gate):
+        return event_conv_ref(vv, weights, xyc, gate, out_dtype=out_dtype)
+
+    return jax.vmap(one, in_axes=(0, 0, 0))(v, ev_xyc, ev_gate)
 
 
 def selfcheck_batched_bitexact(N: int, H: int, W: int, Co: int, K: int,

@@ -34,12 +34,15 @@ def _event_fc_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
     """One grid step: one slot's event batch against one output stripe.
 
     ev_ref:   (1, E, 3) int32 — this slot's events (x, y, c), input coords.
-    gate_ref: (1, E, 1) float32 — 1.0 valid / 0.0 padding.
-    w_ref:    (Din, DBLK) float32 — weight stripe, shared by slots.
-    v_ref:    (1, 1, 1, DBLK) float32 — this slot's membrane stripe.
-    o_ref:    (1, 1, 1, DBLK) float32 — output stripe.
+    gate_ref: (1, E, 1) — 1/0 valid/padding, same dtype as the v stripe.
+    w_ref:    (Din, DBLK) — weight stripe, shared by slots (float32
+              carrier, or int8 codes on the native path).
+    v_ref:    (1, 1, 1, DBLK) — this slot's membrane stripe (float32
+              carrier, or int8 storage on the native path).
+    o_ref:    (1, 1, 1, DBLK) — output stripe in the *accumulator* dtype
+              (== v dtype on the carrier path; int32 on the native path).
     """
-    o_ref[...] = v_ref[...]
+    o_ref[...] = v_ref[...].astype(o_ref.dtype)
 
     def body(i, _):
         x = ev_ref[0, i, 0]
@@ -47,7 +50,7 @@ def _event_fc_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
         c = ev_ref[0, i, 2]
         g = gate_ref[0, i, 0]
         flat = (x * W + y) * C + c
-        row = w_ref[flat, :] * g                          # (DBLK,)
+        row = (w_ref[flat, :] * g).astype(o_ref.dtype)    # (DBLK,)
         o_ref[0, 0, 0, :] = o_ref[0, 0, 0, :] + row
         return ()
 
@@ -55,10 +58,11 @@ def _event_fc_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("in_shape", "d_blk",
-                                             "interpret"))
+                                             "interpret", "out_dtype"))
 def event_fc_pallas(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
                     ev_gate: jnp.ndarray, in_shape: Tuple[int, int, int],
-                    d_blk: int = 128, interpret: bool = False):
+                    d_blk: int = 128, interpret: bool = False,
+                    out_dtype=None):
     """Accumulate an FC event batch into the output membrane state.
 
     Matches :func:`repro.kernels.event_fc.ref.event_fc_ref` bit-for-bit
@@ -69,30 +73,35 @@ def event_fc_pallas(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
       v:        (1, 1, Dout) membrane state.
       w:        (Din, Dout) weight matrix.
       ev_xyc:   (E, 3) int32 events in input coordinates.
-      ev_gate:  (E,) float32 validity gate.
+      ev_gate:  (E,) validity gate (cast to the stripe dtype).
       in_shape: (H, W, C) static input geometry (flattening rule).
       d_blk:    output-block size (lane dimension of the stripe).
+      out_dtype: accumulator/result dtype (default ``v.dtype``; the
+                int8-native policy passes ``jnp.int32``).
     """
     return event_fc_batched_pallas(v[None], w, ev_xyc[None], ev_gate[None],
                                    in_shape=in_shape, d_blk=d_blk,
-                                   interpret=interpret)[0]
+                                   interpret=interpret,
+                                   out_dtype=out_dtype)[0]
 
 
 @functools.partial(jax.jit, static_argnames=("in_shape", "d_blk",
-                                             "interpret"))
+                                             "interpret", "out_dtype"))
 def event_fc_batched_pallas(v: jnp.ndarray, w: jnp.ndarray,
                             ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
                             in_shape: Tuple[int, int, int],
-                            d_blk: int = 128, interpret: bool = False):
+                            d_blk: int = 128, interpret: bool = False,
+                            out_dtype=None):
     """Accumulate N slots' FC event batches into N stripes in one launch.
 
     Args:
       v:        (N, 1, 1, Dout) membrane states, one per slot.
       w:        (Din, Dout) weight matrix, shared across slots.
       ev_xyc:   (N, E, 3) int32 events per slot, input coordinates.
-      ev_gate:  (N, E) float validity gates.
+      ev_gate:  (N, E) validity gates.
       in_shape: (H, W, C) static input geometry.
       d_blk:    output-block size.
+      out_dtype: accumulator/result dtype (default ``v.dtype``).
     """
     N = v.shape[0]
     Dout = v.shape[-1]
@@ -105,10 +114,11 @@ def event_fc_batched_pallas(v: jnp.ndarray, w: jnp.ndarray,
         raise ValueError(
             f"slot-axis mismatch: v has {N} slots, events "
             f"{ev_xyc.shape[0]}, gates {ev_gate.shape[0]}")
+    out_dtype = v.dtype if out_dtype is None else jnp.dtype(out_dtype)
     E = ev_xyc.shape[1]
     if N == 0 or E == 0:
         # degenerate batch (idle-skip compaction) — identity, skip the launch
-        return v
+        return v.astype(out_dtype)
     d_blk = min(d_blk, Dout)
     if Dout % d_blk:
         raise ValueError(f"Dout={Dout} not divisible by d_blk={d_blk}")
@@ -125,6 +135,6 @@ def event_fc_batched_pallas(v: jnp.ndarray, w: jnp.ndarray,
             pl.BlockSpec((1, 1, 1, d_blk), lambda n, d: (n, 0, 0, d)),
         ],
         out_specs=pl.BlockSpec((1, 1, 1, d_blk), lambda n, d: (n, 0, 0, d)),
-        out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+        out_shape=jax.ShapeDtypeStruct(v.shape, out_dtype),
         interpret=interpret,
     )(ev_xyc, gate3, w, v)

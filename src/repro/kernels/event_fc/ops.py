@@ -27,32 +27,39 @@ def _on_tpu() -> bool:
 
 def event_fc(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
              ev_gate: jnp.ndarray, in_shape: Tuple[int, int, int],
-             d_blk: int = 128,
-             use_pallas: bool | None = None) -> jnp.ndarray:
+             d_blk: int = 128, use_pallas: bool | None = None,
+             out_dtype=None) -> jnp.ndarray:
     """Accumulate a batch of FC UPDATE events into the membrane state.
 
     ``use_pallas=None`` auto-selects: Pallas (compiled) on TPU, Pallas
     interpret mode on CPU. ``use_pallas=False`` runs the pure-jnp oracle.
+    ``out_dtype`` widens the accumulator (int8-native policy: int8 stripe
+    in, int32 accumulation out); default is ``v.dtype``.
     """
     if use_pallas is False:
-        return event_fc_ref(v, w, ev_xyc, ev_gate, in_shape)
+        return event_fc_ref(v, w, ev_xyc, ev_gate, in_shape,
+                            out_dtype=out_dtype)
     return event_fc_pallas(v, w, ev_xyc, ev_gate, in_shape=in_shape,
-                           d_blk=d_blk, interpret=not _on_tpu())
+                           d_blk=d_blk, interpret=not _on_tpu(),
+                           out_dtype=out_dtype)
 
 
 def event_fc_batched(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
                      ev_gate: jnp.ndarray, in_shape: Tuple[int, int, int],
-                     d_blk: int = 128,
-                     use_pallas: bool | None = None) -> jnp.ndarray:
+                     d_blk: int = 128, use_pallas: bool | None = None,
+                     out_dtype=None) -> jnp.ndarray:
     """Accumulate N slots' FC event batches into N stripes at once.
 
     Same auto-selection rules as :func:`event_fc`.  Empty batches (no
     slots, or a zero-length event axis after idle-skip compaction) return
-    ``v`` unchanged without launching anything.
+    ``v`` unchanged (cast to ``out_dtype`` if given) without launching
+    anything.
     """
     if v.shape[0] == 0 or ev_xyc.shape[1] == 0:
-        return v
+        return v if out_dtype is None else v.astype(out_dtype)
     if use_pallas is False:
-        return event_fc_batched_ref(v, w, ev_xyc, ev_gate, in_shape)
+        return event_fc_batched_ref(v, w, ev_xyc, ev_gate, in_shape,
+                                    out_dtype=out_dtype)
     return event_fc_batched_pallas(v, w, ev_xyc, ev_gate, in_shape=in_shape,
-                                   d_blk=d_blk, interpret=not _on_tpu())
+                                   d_blk=d_blk, interpret=not _on_tpu(),
+                                   out_dtype=out_dtype)

@@ -20,26 +20,31 @@ import jax.numpy as jnp
 
 
 def event_fc_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
-                 ev_gate: jnp.ndarray,
-                 in_shape: Tuple[int, int, int]) -> jnp.ndarray:
+                 ev_gate: jnp.ndarray, in_shape: Tuple[int, int, int],
+                 out_dtype=None) -> jnp.ndarray:
     """Oracle: sequential gated row-gather accumulate.
 
     Args:
       v:        (1, 1, Dout) membrane state (FC output geometry).
       w:        (Din, Dout) weight matrix, Din == H * W * C.
       ev_xyc:   (E, 3) int32 event coordinates (x, y, c) in input coords.
-      ev_gate:  (E,) float gate; 0.0 disables an event (padding slot).
+      ev_gate:  (E,) 1/0 gate; 0 disables an event (padding slot).
       in_shape: (H, W, C) input geometry used to flatten coordinates.
+      out_dtype: accumulator/result dtype (default ``v.dtype``; the
+                int8-native policy passes ``jnp.int32``).
 
     Returns the updated membrane state.  One row-add per event, in event
     order — the bit-for-bit contract for the kernel.
     """
     _, W, C = in_shape
+    acc = v.dtype if out_dtype is None else out_dtype
+    v = v.astype(acc)
+    ev_gate = ev_gate.astype(acc)
 
     def body(vv, e):
         xyc, g = e
         flat = (xyc[0] * W + xyc[1]) * C + xyc[2]
-        row = jnp.take(w, flat, axis=0) * g               # (Dout,)
+        row = (jnp.take(w, flat, axis=0) * g).astype(acc)  # (Dout,)
         return vv.at[0, 0, :].add(row), None
 
     v, _ = jax.lax.scan(body, v, (ev_xyc, ev_gate))
@@ -48,7 +53,8 @@ def event_fc_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
 
 def event_fc_batched_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
                          ev_gate: jnp.ndarray,
-                         in_shape: Tuple[int, int, int]) -> jnp.ndarray:
+                         in_shape: Tuple[int, int, int],
+                         out_dtype=None) -> jnp.ndarray:
     """Oracle for the batched kernel: the single-stream oracle per slot.
 
     Args:
@@ -57,6 +63,9 @@ def event_fc_batched_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
       ev_xyc:   (N, E, 3) per-slot event coordinates.
       ev_gate:  (N, E) per-slot gates.
       in_shape: (H, W, C) input geometry.
+      out_dtype: accumulator/result dtype (default ``v.dtype``).
     """
-    return jax.vmap(event_fc_ref, in_axes=(0, None, 0, 0, None))(
-        v, w, ev_xyc, ev_gate, in_shape)
+    def one(vv, xyc, gate):
+        return event_fc_ref(vv, w, xyc, gate, in_shape, out_dtype=out_dtype)
+
+    return jax.vmap(one, in_axes=(0, 0, 0))(v, ev_xyc, ev_gate)

@@ -33,12 +33,15 @@ def _event_pool_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
     """One grid step: one slot's event batch against its pool slab.
 
     ev_ref:   (1, E, 3) int32 — this slot's events (x, y, c), input coords.
-    gate_ref: (1, E, 1) float32 — 1.0 valid / 0.0 padding.
-    w_ref:    (1, 1, C) float32 — per-channel weights, shared by slots.
-    v_ref:    (1, Ho, Wo, C) float32 — this slot's membrane slab.
-    o_ref:    (1, Ho, Wo, C) float32 — output slab.
+    gate_ref: (1, E, 1) — 1/0 valid/padding, same dtype as the v slab.
+    w_ref:    (1, 1, C) — per-channel weights, shared by slots (float32
+              carrier, or int8 codes on the native path).
+    v_ref:    (1, Ho, Wo, C) — this slot's membrane slab (float32 carrier,
+              or int8 storage on the native path).
+    o_ref:    (1, Ho, Wo, C) — output slab in the *accumulator* dtype
+              (== v dtype on the carrier path; int32 on the native path).
     """
-    o_ref[...] = v_ref[...]
+    o_ref[...] = v_ref[...].astype(o_ref.dtype)
     Ho, Wo, C = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
     lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 1, C), 2)
 
@@ -63,51 +66,64 @@ def _event_pool_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
     jax.lax.fori_loop(0, n_events, body, ())
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+@functools.partial(jax.jit, static_argnames=("stride", "interpret",
+                                             "out_dtype"))
 def event_pool_pallas(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
                       ev_gate: jnp.ndarray, stride: int,
-                      interpret: bool = False):
+                      interpret: bool = False, out_dtype=None):
     """Scatter-accumulate a pooled event batch into the membrane state.
 
     Matches :func:`repro.kernels.event_pool.ref.event_pool_ref` bit-for-bit
-    (one float add per event, in event order).  Single-stream entry point —
-    the N=1 special case of the batched kernel, same body.
+    (one add per event, in event order).  Single-stream entry point — the
+    N=1 special case of the batched kernel, same body.
 
     Args:
       v:       (Ho, Wo, C) membrane state (no halo for pool layers).
       w:       (C,) per-channel synapse weights.
       ev_xyc:  (E, 3) int32 events in input coordinates.
-      ev_gate: (E,) float32 validity gate.
+      ev_gate: (E,) validity gate (cast to the slab dtype).
       stride:  pooling stride.
+      out_dtype: accumulator/result dtype (default ``v.dtype``; the
+               int8-native policy passes ``jnp.int32``).
     """
     return event_pool_batched_pallas(v[None], w, ev_xyc[None], ev_gate[None],
-                                     stride=stride, interpret=interpret)[0]
+                                     stride=stride, interpret=interpret,
+                                     out_dtype=out_dtype)[0]
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+@functools.partial(jax.jit, static_argnames=("stride", "interpret",
+                                             "out_dtype"))
 def event_pool_batched_pallas(v: jnp.ndarray, w: jnp.ndarray,
                               ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
-                              stride: int, interpret: bool = False):
+                              stride: int, interpret: bool = False,
+                              out_dtype=None):
     """Scatter N slots' pooled event batches into N slabs in one launch.
 
     Args:
       v:       (N, Ho, Wo, C) membrane states, one per slot.
       w:       (C,) per-channel weights, shared across slots.
       ev_xyc:  (N, E, 3) int32 events per slot, input coordinates.
-      ev_gate: (N, E) float validity gates.
+      ev_gate: (N, E) validity gates.
       stride:  pooling stride.
+      out_dtype: accumulator/result dtype (default ``v.dtype``).
     """
     N, Ho, Wo, C = v.shape
     if ev_xyc.shape[0] != N or ev_gate.shape[0] != N:
         raise ValueError(
             f"slot-axis mismatch: v has {N} slots, events "
             f"{ev_xyc.shape[0]}, gates {ev_gate.shape[0]}")
+    out_dtype = v.dtype if out_dtype is None else jnp.dtype(out_dtype)
     E = ev_xyc.shape[1]
     if N == 0 or E == 0:
         # degenerate batch (idle-skip compaction) — identity, skip the launch
-        return v
+        return v.astype(out_dtype)
     gate3 = ev_gate.astype(v.dtype).reshape(N, E, 1)
-    w3 = w.astype(v.dtype).reshape(1, 1, C)
+    # integer weight codes ride at their own width (int8) even when the
+    # slab is widened (int32 "subtract"-leak case) — the launch must move
+    # exactly the bytes `layer_program.scatter_launch_bytes` accounts for;
+    # float weights keep the historical cast to the slab dtype
+    w3 = (w if jnp.issubdtype(w.dtype, jnp.integer)
+          else w.astype(v.dtype)).reshape(1, 1, C)
 
     grid = (N,)
     return pl.pallas_call(
@@ -121,6 +137,6 @@ def event_pool_batched_pallas(v: jnp.ndarray, w: jnp.ndarray,
             pl.BlockSpec((1, Ho, Wo, C), lambda n: (n, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, Ho, Wo, C), lambda n: (n, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+        out_shape=jax.ShapeDtypeStruct(v.shape, out_dtype),
         interpret=interpret,
     )(ev_xyc, gate3, w3, v)

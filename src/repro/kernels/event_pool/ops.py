@@ -26,30 +26,37 @@ def _on_tpu() -> bool:
 
 def event_pool(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
                ev_gate: jnp.ndarray, stride: int,
-               use_pallas: bool | None = None) -> jnp.ndarray:
+               use_pallas: bool | None = None, out_dtype=None) -> jnp.ndarray:
     """Accumulate a batch of pooled UPDATE events into the membrane state.
 
     ``use_pallas=None`` auto-selects: Pallas (compiled) on TPU, Pallas
     interpret mode on CPU. ``use_pallas=False`` runs the pure-jnp oracle.
+    ``out_dtype`` widens the accumulator (int8-native policy: int8 slab
+    in, int32 accumulation out); default is ``v.dtype``.
     """
     if use_pallas is False:
-        return event_pool_ref(v, w, ev_xyc, ev_gate, stride)
+        return event_pool_ref(v, w, ev_xyc, ev_gate, stride,
+                              out_dtype=out_dtype)
     return event_pool_pallas(v, w, ev_xyc, ev_gate, stride=stride,
-                             interpret=not _on_tpu())
+                             interpret=not _on_tpu(), out_dtype=out_dtype)
 
 
 def event_pool_batched(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
                        ev_gate: jnp.ndarray, stride: int,
-                       use_pallas: bool | None = None) -> jnp.ndarray:
+                       use_pallas: bool | None = None,
+                       out_dtype=None) -> jnp.ndarray:
     """Accumulate N slots' pooled event batches into N slabs at once.
 
     Same auto-selection rules as :func:`event_pool`.  Empty batches (no
     slots, or a zero-length event axis after idle-skip compaction) return
-    ``v`` unchanged without launching anything.
+    ``v`` unchanged (cast to ``out_dtype`` if given) without launching
+    anything.
     """
     if v.shape[0] == 0 or ev_xyc.shape[1] == 0:
-        return v
+        return v if out_dtype is None else v.astype(out_dtype)
     if use_pallas is False:
-        return event_pool_batched_ref(v, w, ev_xyc, ev_gate, stride)
+        return event_pool_batched_ref(v, w, ev_xyc, ev_gate, stride,
+                                      out_dtype=out_dtype)
     return event_pool_batched_pallas(v, w, ev_xyc, ev_gate, stride=stride,
-                                     interpret=not _on_tpu())
+                                     interpret=not _on_tpu(),
+                                     out_dtype=out_dtype)

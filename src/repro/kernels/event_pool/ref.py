@@ -19,25 +19,30 @@ import jax.numpy as jnp
 
 
 def event_pool_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
-                   ev_gate: jnp.ndarray, stride: int) -> jnp.ndarray:
+                   ev_gate: jnp.ndarray, stride: int,
+                   out_dtype=None) -> jnp.ndarray:
     """Oracle: sequential scatter-accumulate of pooled events.
 
     Args:
       v:       (Ho, Wo, C) membrane state (pool layers have no halo).
       w:       (C,) per-channel synapse weights.
       ev_xyc:  (E, 3) int32 event coordinates (x, y, c) in *input* coords.
-      ev_gate: (E,) float gate; 0.0 disables an event (padding slot).
+      ev_gate: (E,) 1/0 gate; 0 disables an event (padding slot).
       stride:  pooling stride (== kernel for spiking sum-pool).
+      out_dtype: accumulator/result dtype (default ``v.dtype``; the
+               int8-native policy passes ``jnp.int32``).
 
     Returns the updated membrane state.  Accumulation order is the event
     order, one add per event — the bit-for-bit contract for the kernel.
     """
-    Ho, Wo, _ = v.shape
+    acc = v.dtype if out_dtype is None else out_dtype
+    v = v.astype(acc)
+    ev_gate = ev_gate.astype(acc)
 
     def body(vv, e):
         xyc, g = e
         xo, yo = xyc[0] // stride, xyc[1] // stride
-        val = jnp.take(w, xyc[2]) * g
+        val = (jnp.take(w, xyc[2]) * g).astype(acc)
         # mode="drop" makes the out-of-grid tail explicit (VALID-window rule)
         return vv.at[xo, yo, xyc[2]].add(val, mode="drop"), None
 
@@ -47,7 +52,7 @@ def event_pool_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
 
 def event_pool_batched_ref(v: jnp.ndarray, w: jnp.ndarray,
                            ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
-                           stride: int) -> jnp.ndarray:
+                           stride: int, out_dtype=None) -> jnp.ndarray:
     """Oracle for the batched kernel: the single-stream oracle per slot.
 
     Args:
@@ -55,9 +60,12 @@ def event_pool_batched_ref(v: jnp.ndarray, w: jnp.ndarray,
       w:       (C,) shared per-channel weights.
       ev_xyc:  (N, E, 3) per-slot event coordinates.
       ev_gate: (N, E) per-slot gates.
+      out_dtype: accumulator/result dtype (default ``v.dtype``).
 
     vmap over the slot axis keeps the per-slab accumulation order identical
     to running :func:`event_pool_ref` slot by slot.
     """
-    return jax.vmap(event_pool_ref, in_axes=(0, None, 0, 0, None))(
-        v, w, ev_xyc, ev_gate, stride)
+    def one(vv, xyc, gate):
+        return event_pool_ref(vv, w, xyc, gate, stride, out_dtype=out_dtype)
+
+    return jax.vmap(one, in_axes=(0, 0, 0))(v, ev_xyc, ev_gate)

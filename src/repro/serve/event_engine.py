@@ -35,8 +35,13 @@ construction the network is compiled to a layer program
 `core.layer_program.window_step` — the same unified
 ``leak -> scatter(events) -> clip -> fire -> reset`` executor the core
 event path (`econv.event_forward`, `sne_net.event_apply`) runs, here over
-slot-batched state.  Every layer kind is one slot-batched Pallas launch
-per timestep (`kernels/event_conv`, `kernels/event_pool`,
+slot-batched state.  ``dtype_policy`` selects the program's dtype domain:
+the default float32 carrier, or ``"int8-native"`` (paper §III-D4) where
+the resident membrane slabs are int8, the weights are int8 codes from
+`core.quant.quantize_net`, and scatters accumulate in int32 — bitwise
+identical results, 4x less resident state and strictly smaller launches.
+Every layer kind is one slot-batched Pallas launch per timestep
+(`kernels/event_conv`, `kernels/event_pool`,
 `kernels/event_fc`), with inter-layer event routing
 (`layer_program.frame_to_events`) staying on device — so engine outputs
 match the dense path (`sne_net.dense_apply`) up to float summation order,
@@ -71,8 +76,9 @@ import numpy as np
 from repro.core import events as ev
 from repro.core.econv import EConvParams
 from repro.core.engine import SneConfig
-from repro.core.layer_program import (LayerOp, compile_program,
-                                      window_step)
+from repro.core.layer_program import (F32_CARRIER, LayerOp,
+                                      check_native_weights, compile_program,
+                                      state_dtype, window_step)
 from repro.core.layer_program import \
     default_step_capacities as _program_step_capacities
 from repro.core.lif import supports_idle_skip
@@ -133,7 +139,7 @@ class EventServeEngine:
                  sne_cfg: Optional[SneConfig] = None,
                  n_parallel_slices: Optional[int] = None,
                  co_blk: int = 128, use_pallas: Optional[bool] = None,
-                 idle_skip: bool = True):
+                 idle_skip: bool = True, dtype_policy: str = F32_CARRIER):
         if n_slots < 1 or window < 1:
             raise ValueError("need n_slots >= 1 and window >= 1")
         # fail fast — not inside _finish after a request was fully served
@@ -143,10 +149,18 @@ class EventServeEngine:
         self.params = list(params)
         self.N = n_slots
         self.W = window
+        self.dtype_policy = dtype_policy
         # compile the network once; the program is the engine's datapath
+        # (compile also validates the spec against the dtype policy)
         self.program = compile_program(
             spec, step_capacities=(tuple(step_capacities)
-                                   if step_capacities is not None else None))
+                                   if step_capacities is not None else None),
+            dtype_policy=dtype_policy)
+        # fail at construction, not at first trace: the native datapath
+        # executes integer codes (same single-sourced check the executor
+        # applies per scatter — see layer_program.check_native_weights)
+        for op, p in zip(self.program.ops, self.params):
+            check_native_weights(op, p)
         self.caps = self.program.step_capacities
         self.cfg = sne_cfg or SneConfig()
         self.n_parallel_slices = n_parallel_slices
@@ -192,10 +206,15 @@ class EventServeEngine:
     def _zero_state(self, op: LayerOp) -> jnp.ndarray:
         Ho, Wo, Co = op.spec.out_shape
         h = op.halo
-        return jnp.zeros((self.N, Ho + 2 * h, Wo + 2 * h, Co), jnp.float32)
+        # storage dtype follows the program's dtype policy: float32
+        # carrier, or int8 resident membranes on the native path (4x less
+        # slot state held between windows)
+        return jnp.zeros((self.N, Ho + 2 * h, Wo + 2 * h, Co),
+                         state_dtype(op))
 
     def _reset_slot_state(self, slot: int) -> None:
-        self.states = tuple(v.at[slot].set(0.0) for v in self.states)
+        self.states = tuple(v.at[slot].set(jnp.zeros((), v.dtype))
+                            for v in self.states)
         self.class_counts = self.class_counts.at[slot].set(0.0)
 
     @property

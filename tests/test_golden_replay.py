@@ -1,0 +1,99 @@
+"""Golden replay: the bundled recording through the serving engine.
+
+`samples/tiny_gesture.npz` is segmented exactly as `examples/serve_events
+--source file` does and served through `EventServeEngine` on the quantized
+`tiny_net` under BOTH dtype policies.  Spike rasters (per-request
+class-count vectors — the engine's rate-decode output) and telemetry
+counters (per-layer consumed events, inter-layer drops, predictions) are
+compared against a committed golden file, so an end-to-end serving
+regression is caught without a live sensor — and the two policies are
+pinned bitwise-identical on real data, not just synthetic streams.
+
+Everything on the path is integer arithmetic (quantized codes, binary
+spikes), so the golden values are exact across jax versions/backends.
+
+Regenerate after an *intentional* behaviour change with:
+
+    PYTHONPATH=src:tests python tests/test_golden_replay.py --regen
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.quant import quantize_net
+from repro.core.sne_net import init_snn, tiny_net
+from repro.data.events_ds import (load_recording, sample_recording_path,
+                                  segment_recording)
+from repro.serve.event_engine import EventServeEngine
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "tiny_gesture_serve.npz")
+WINDOW_US = 1000   # examples/serve_events.py --source file default
+
+
+def _serve(dtype_policy: str):
+    spec = tiny_net()
+    qn = quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec)
+    rec = load_recording(sample_recording_path())
+    reqs = segment_recording(rec, qn.spec.in_shape, qn.spec.n_timesteps,
+                             WINDOW_US)
+    eng = EventServeEngine(qn.spec, qn.params_for(dtype_policy), n_slots=2,
+                           window=4, use_pallas=False,
+                           dtype_policy=dtype_policy)
+    eng.run(reqs)
+    tele = [r.telemetry for r in reqs]
+    return {
+        "class_counts": np.stack([r.class_counts for r in reqs]),
+        "predictions": np.asarray([r.prediction for r in reqs], np.int64),
+        "per_layer_events": np.stack(
+            [np.asarray(t.per_layer_events) for t in tele]),
+        "inter_layer_dropped": np.stack(
+            [np.asarray(t.inter_layer_dropped) for t in tele]),
+        "input_dropped": np.asarray([t.input_dropped for t in tele],
+                                    np.int64),
+        "n_dense_timesteps": np.asarray([t.n_dense_timesteps for t in tele],
+                                        np.int64),
+    }
+
+
+@pytest.fixture(scope="module")
+def served():
+    return {pol: _serve(pol) for pol in ("f32-carrier", "int8-native")}
+
+
+def test_policies_agree_on_real_recording(served):
+    """int8-native == f32-carrier, bitwise, on the bundled sensor data."""
+    a, b = served["f32-carrier"], served["int8-native"]
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_golden_replay(served):
+    """Both policies must reproduce the committed golden file exactly."""
+    assert os.path.exists(GOLDEN), (
+        f"golden file missing: {GOLDEN} — regenerate with "
+        f"PYTHONPATH=src:tests python tests/test_golden_replay.py --regen")
+    gold = np.load(GOLDEN)
+    for pol, res in served.items():
+        for k in res:
+            np.testing.assert_array_equal(
+                res[k], gold[k],
+                err_msg=f"{pol}:{k} diverged from the golden replay — if "
+                        f"intentional, regenerate tests/golden/")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        res = _serve("f32-carrier")
+        chk = _serve("int8-native")
+        for k in res:
+            np.testing.assert_array_equal(res[k], chk[k])
+        np.savez_compressed(GOLDEN, **res)
+        print(f"wrote {GOLDEN}:",
+              {k: v.shape for k, v in res.items()})
+    else:
+        print(__doc__)

@@ -1,0 +1,353 @@
+"""Property-based parity: int8-native vs float-carrier, bitwise.
+
+The tentpole contract of the integer datapath: on any integer-domain
+network (`core.quant.quantize_net` output, or any spec passing
+`layer_program.validate_policy_spec`), the "int8-native" dtype policy —
+int8 weight codes, int8 membrane storage, int32 scatter accumulation —
+computes *exactly* the integers the "f32-carrier" oracle holds in float32
+(exact below 2^24).  Equality is asserted bitwise after a plain dtype
+cast, per layer step and over whole `event_apply` / window-step runs.
+
+Hypothesis strategies draw a single integer seed and derive the structure
+(layer kinds x strides x widths not divisible by the kernel block size x
+soft/hard reset x leak modes) from it with numpy — this works identically
+under real hypothesis (CI) and the deterministic fallback shim (container).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:           # container has no hypothesis; see the shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import events as ev
+from repro.core import layer_program as lp
+from repro.core.econv import EConvParams, EConvSpec
+from repro.core.lif import LifParams
+from repro.core.quant import INT4_MAX, INT4_MIN, quantize_net
+from repro.core.sne_net import (SNNSpec, default_capacities, dvs_gesture_net,
+                                event_apply, init_snn, tiny_net)
+
+F32, I8 = lp.F32_CARRIER, lp.INT8_NATIVE
+
+
+# ---------------------------------------------------------------------------
+# seed-derived generators (structure + data from one integer)
+# ---------------------------------------------------------------------------
+
+def _rand_layer(rng) -> EConvSpec:
+    """One random integer-domain layer: kind x geometry x reset x leak.
+
+    Channel widths are drawn from a set that includes primes and values
+    far from the default co_blk=128 block (the divisor-snapping edge)."""
+    kind = ["conv", "pool", "fc"][rng.integers(0, 3)]
+    widths = [1, 2, 3, 5, 7, 11, 13, 16]
+    H = int(rng.integers(4, 10))
+    W = int(rng.integers(4, 10))
+    Ci = int(widths[rng.integers(0, len(widths))])
+    lif = LifParams(
+        threshold=float(rng.integers(1, 9)),
+        leak=float(rng.integers(0, 4)),
+        leak_mode=["toward_zero", "subtract"][rng.integers(0, 2)],
+        reset_mode=["zero", "subtract"][rng.integers(0, 2)],
+        state_clip=127.0,
+    )
+    if kind == "conv":
+        K = int([1, 3, 5][rng.integers(0, 3)])
+        return EConvSpec("conv", (H, W, Ci),
+                         int(widths[rng.integers(0, len(widths))]),
+                         kernel=K, padding=int(rng.integers(0, (K + 1) // 2 + 1)),
+                         lif=lif)
+    if kind == "pool":
+        s = int(rng.integers(2, 5))
+        return EConvSpec("pool", (H, W, Ci), Ci, kernel=s, stride=s, lif=lif)
+    return EConvSpec("fc", (H, W, Ci),
+                     int(widths[rng.integers(0, len(widths))]), lif=lif)
+
+
+def _rand_codes(rng, spec: EConvSpec) -> EConvParams:
+    """Random int4-range weight codes as native int8 (pool: unit-ish)."""
+    if spec.kind == "conv":
+        shape = (spec.kernel, spec.kernel, spec.in_shape[2],
+                 spec.out_channels)
+    elif spec.kind == "pool":
+        shape = (spec.in_shape[2],)
+    else:
+        H, W, C = spec.in_shape
+        shape = (H * W * C, spec.out_channels)
+    q = rng.integers(INT4_MIN, INT4_MAX + 1, size=shape).astype(np.int8)
+    return EConvParams(w=jnp.asarray(q))
+
+
+def _rand_events(rng, spec: EConvSpec, n_slots: int, E: int):
+    H, W, C = spec.in_shape
+    xyc = np.stack([rng.integers(0, H, (n_slots, E)),
+                    rng.integers(0, W, (n_slots, E)),
+                    rng.integers(0, C, (n_slots, E))], -1).astype(np.int32)
+    gate = (rng.random((n_slots, E)) < 0.7).astype(np.float32)
+    return jnp.asarray(xyc), jnp.asarray(gate)
+
+
+def _rand_state(rng, op: lp.LayerOp, n_slots: int):
+    """Identical int8-range membranes for both policies (interior only;
+    the halo starts zero, as every executor entry point initialises it)."""
+    Ho, Wo, Co = op.spec.out_shape
+    v = rng.integers(-127, 128, size=(n_slots, Ho, Wo, Co)).astype(np.int8)
+    vp8 = lp.write_interior(lp.padded_state(op, jnp.int8, n_slots),
+                            jnp.asarray(v), op.halo)
+    vpf = lp.write_interior(lp.padded_state(op, jnp.float32, n_slots),
+                            jnp.asarray(v.astype(np.float32)), op.halo)
+    return vp8, vpf
+
+
+# ---------------------------------------------------------------------------
+# per-layer-step parity: every kind, every reset/leak mode, both kernels
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_layer_timestep_parity(seed):
+    rng = np.random.default_rng(seed)
+    spec = _rand_layer(rng)
+    params = _rand_codes(rng, spec)
+    op8 = lp.layer_op(spec, dtype_policy=I8)
+    opf = lp.layer_op(spec, dtype_policy=F32)
+    N, E = int(rng.integers(1, 4)), int(rng.integers(1, 33))
+    xyc, gate = _rand_events(rng, spec, N, E)
+    vp8, vpf = _rand_state(rng, op8, N)
+    alive = jnp.asarray((rng.random((N,)) < 0.8).astype(np.float32))
+    use_pallas = [None, False][rng.integers(0, 2)]
+
+    v8, s8 = lp.layer_timestep(op8, params, vp8, xyc, gate, alive,
+                               use_pallas=use_pallas)
+    vf, sf = lp.layer_timestep(opf, EConvParams(w=params.w.astype(jnp.float32)),
+                               vpf, xyc, gate, alive, use_pallas=use_pallas)
+    assert v8.dtype == jnp.int8 and vf.dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(lp.interior(v8, op8.halo)).astype(np.float32),
+        np.asarray(lp.interior(vf, opf.halo)))
+    np.testing.assert_array_equal(np.asarray(s8).astype(np.float32),
+                                  np.asarray(sf))
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_scatter_parity_all_kernels(seed):
+    """The bare scatter launch: int8 slab in / int32 accumulator out must
+    hold exactly the floats of the carrier launch, pallas AND oracle."""
+    rng = np.random.default_rng(seed)
+    spec = _rand_layer(rng)
+    params = _rand_codes(rng, spec)
+    op8 = lp.layer_op(spec, dtype_policy=I8)
+    opf = lp.layer_op(spec, dtype_policy=F32)
+    N, E = 2, int(rng.integers(1, 25))
+    xyc, gate = _rand_events(rng, spec, N, E)
+    vp8, vpf = _rand_state(rng, op8, N)
+    for mode in (None, False):
+        out8 = lp.scatter_events_batched(op8, params, vp8, xyc, gate,
+                                         use_pallas=mode)
+        outf = lp.scatter_events_batched(
+            opf, EConvParams(w=params.w.astype(jnp.float32)), vpf, xyc, gate,
+            use_pallas=mode)
+        assert out8.dtype == jnp.int32
+        np.testing.assert_array_equal(
+            np.asarray(out8).astype(np.float32), np.asarray(outf))
+
+
+# ---------------------------------------------------------------------------
+# whole-network parity: random multi-layer specs through both drivers
+# ---------------------------------------------------------------------------
+
+def _rand_net(rng) -> SNNSpec:
+    """A random 2-3 layer chain whose geometries compose (conv/pool body,
+    fc head), hard resets (the stream driver's requirement)."""
+    def lif():
+        return LifParams(threshold=float(rng.integers(1, 5)),
+                         leak=float(rng.integers(0, 3)),
+                         leak_mode=["toward_zero",
+                                    "subtract"][rng.integers(0, 2)],
+                         state_clip=127.0)
+    H = int(rng.integers(6, 11))
+    Ci = int([2, 3][rng.integers(0, 2)])
+    layers = []
+    if rng.integers(0, 2):
+        K = int([1, 3][rng.integers(0, 2)])
+        layers.append(EConvSpec("conv", (H, H, Ci),
+                                int([3, 5, 11][rng.integers(0, 3)]),
+                                kernel=K, padding=K // 2, lif=lif()))
+    else:
+        s = int(rng.integers(2, 4))
+        layers.append(EConvSpec("pool", (H, H, Ci), Ci, kernel=s, stride=s,
+                                lif=lif()))
+    if rng.integers(0, 2) and min(layers[-1].out_shape[:2]) >= 2:
+        layers.append(EConvSpec("pool", layers[-1].out_shape,
+                                layers[-1].out_shape[2], kernel=2, stride=2,
+                                lif=lif()))
+    n_classes = int([4, 7][rng.integers(0, 2)])
+    layers.append(EConvSpec("fc", layers[-1].out_shape, n_classes,
+                            lif=lif()))
+    return SNNSpec(layers=tuple(layers), n_timesteps=int(rng.integers(4, 9)),
+                   n_classes=n_classes)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_event_apply_parity(seed):
+    """Full stream-driver runs must emit bitwise-identical event streams
+    and final stats across policies."""
+    rng = np.random.default_rng(seed)
+    spec = _rand_net(rng)
+    params = [_rand_codes(rng, l) for l in spec.layers]
+    T, shape = spec.n_timesteps, spec.in_shape
+    spikes = jnp.asarray((rng.random((T,) + shape) < 0.15)
+                         .astype(np.float32))
+    stream = ev.dense_to_events(spikes, int(jnp.sum(spikes)) + 8)
+    caps = default_capacities(spec, activity=0.3, slack=6.0)
+    pf = [EConvParams(w=p.w.astype(jnp.float32)) for p in params]
+    out_f, st_f = event_apply(pf, spec, stream, caps)
+    out_i, st_i = event_apply(params, spec, stream, caps, dtype_policy=I8)
+    for a, b in zip(out_f, out_i):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(st_f.total_events) == int(st_i.total_events)
+    assert int(st_f.total_sops) == int(st_i.total_sops)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=8, deadline=None)
+def test_window_step_parity(seed):
+    """The slot-batched serving step: states, class counts and telemetry
+    counters must agree bitwise across policies (soft reset included —
+    the window driver, unlike the stream driver, supports it)."""
+    rng = np.random.default_rng(seed)
+    spec = _rand_net(rng)
+    if rng.integers(0, 2):   # soft-reset variant (window driver only)
+        spec = dataclasses.replace(spec, layers=tuple(
+            dataclasses.replace(l, lif=dataclasses.replace(
+                l.lif, reset_mode="subtract")) for l in spec.layers))
+    params = [_rand_codes(rng, l) for l in spec.layers]
+    caps = tuple(min(c, 64) for c in
+                 (lp.layer_step_capacity(l) for l in spec.layers))
+    prog_f = lp.compile_program(spec, step_capacities=caps, dtype_policy=F32)
+    prog_i = lp.compile_program(spec, step_capacities=caps, dtype_policy=I8)
+    N, W = 2, 3
+    E0 = prog_f.ops[0].step_capacity
+    H, Wd, C = spec.in_shape
+    xyc = jnp.asarray(np.stack([rng.integers(0, H, (W, N, E0)),
+                                rng.integers(0, Wd, (W, N, E0)),
+                                rng.integers(0, C, (W, N, E0))],
+                               -1).astype(np.int32))
+    gate = jnp.asarray((rng.random((W, N, E0)) < 0.5).astype(np.float32))
+    alive = jnp.asarray((rng.random((W, N)) < 0.9).astype(np.float32))
+    pre_dt = jnp.asarray(rng.integers(0, 3, (N,)).astype(np.int32))
+    if not all(l.lif.reset_mode == "zero" for l in spec.layers):
+        pre_dt = jnp.zeros((N,), jnp.int32)  # engine defers none w/o skip
+    cc0 = jnp.zeros((N, spec.n_classes), jnp.float32)
+
+    def run(prog, params):
+        states = tuple(lp.padded_state(op, n_slots=N) for op in prog.ops)
+        return lp.window_step(params, states, cc0, xyc, gate, alive, pre_dt,
+                              program=prog, use_pallas=False)
+
+    sf, ccf, cf, df = run(prog_f,
+                          [EConvParams(w=p.w.astype(jnp.float32))
+                           for p in params])
+    si, cci, ci, di = run(prog_i, params)
+    np.testing.assert_array_equal(np.asarray(ccf), np.asarray(cci))
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(ci))
+    np.testing.assert_array_equal(np.asarray(df), np.asarray(di))
+    for a, b, op in zip(sf, si, prog_f.ops):
+        assert b.dtype == jnp.int8
+        np.testing.assert_array_equal(
+            np.asarray(lp.interior(b, op.halo)).astype(np.float32),
+            np.asarray(lp.interior(a, op.halo)))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance anchor: a full dvs_gesture_net window step, both policies
+# ---------------------------------------------------------------------------
+
+def test_full_dvs_gesture_window_step_parity():
+    """One slot-batched window step of the paper's full-geometry Fig. 6
+    network (128x128x2 input, all 7 layers): int8-native must equal the
+    carrier oracle bitwise on every layer's membrane and the class
+    counts.  Capacities are overridden small so the oracle kernels stay
+    CPU-tractable; the op mix and geometry are the real network's."""
+    spec = dvs_gesture_net(n_timesteps=8)
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    qn = quantize_net(params, spec)
+    caps = (64,) * len(spec.layers)
+    prog_f = lp.compile_program(qn.spec, step_capacities=caps,
+                                dtype_policy=F32)
+    prog_i = lp.compile_program(qn.spec, step_capacities=caps,
+                                dtype_policy=I8)
+    rng = np.random.default_rng(0)
+    N, W, E0 = 1, 2, 64
+    H, Wd, C = qn.spec.in_shape
+    xyc = jnp.asarray(np.stack([rng.integers(0, H, (W, N, E0)),
+                                rng.integers(0, Wd, (W, N, E0)),
+                                rng.integers(0, C, (W, N, E0))],
+                               -1).astype(np.int32))
+    gate = jnp.asarray(np.ones((W, N, E0), np.float32))
+    alive = jnp.ones((W, N), jnp.float32)
+    pre_dt = jnp.zeros((N,), jnp.int32)
+    cc0 = jnp.zeros((N, qn.spec.n_classes), jnp.float32)
+
+    def run(prog, params):
+        states = tuple(lp.padded_state(op, n_slots=N) for op in prog.ops)
+        return lp.window_step(params, states, cc0, xyc, gate, alive, pre_dt,
+                              program=prog, use_pallas=False)
+
+    sf, ccf, cf, _ = run(prog_f, qn.params_for(F32))
+    si, cci, ci, _ = run(prog_i, qn.params_for(I8))
+    np.testing.assert_array_equal(np.asarray(ccf), np.asarray(cci))
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(ci))
+    for a, b, op in zip(sf, si, prog_f.ops):
+        np.testing.assert_array_equal(
+            np.asarray(lp.interior(b, op.halo)).astype(np.float32),
+            np.asarray(lp.interior(a, op.halo)))
+
+
+# ---------------------------------------------------------------------------
+# policy plumbing: validation + accounting invariants
+# ---------------------------------------------------------------------------
+
+def test_native_policy_rejects_float_spec():
+    spec = tiny_net()   # float thresholds/leaks, no state clip
+    with pytest.raises(ValueError, match="quantize_net"):
+        lp.compile_program(spec, dtype_policy=lp.INT8_NATIVE)
+
+
+def test_native_policy_rejects_float_weights():
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    qn = quantize_net(params, spec)
+    op = lp.layer_op(qn.spec.layers[0], dtype_policy=lp.INT8_NATIVE)
+    vp = lp.padded_state(op, n_slots=1)
+    xyc = jnp.zeros((1, 4, 3), jnp.int32)
+    gate = jnp.zeros((1, 4), jnp.float32)
+    with pytest.raises(ValueError, match="integer weight codes"):
+        lp.scatter_events_batched(op, qn.params_for(F32)[0], vp, xyc, gate)
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown dtype policy"):
+        lp.compile_program(tiny_net(), dtype_policy="bf16-wishful")
+
+
+def test_scatter_launch_bytes_strictly_fewer():
+    """The accounting the benchmark gate pins: for every layer of the
+    quantized gesture net, the native launch moves strictly fewer bytes
+    than the carrier launch at identical (slots, events)."""
+    spec = dvs_gesture_net(n_timesteps=8)
+    qn = quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec)
+    pf = lp.compile_program(qn.spec, dtype_policy=F32)
+    pi = lp.compile_program(qn.spec, dtype_policy=I8)
+    for opf, opi in zip(pf.ops, pi.ops):
+        bf = lp.scatter_launch_bytes(opf, n_slots=4, n_events=128)
+        bi = lp.scatter_launch_bytes(opi, n_slots=4, n_events=128)
+        assert bi < bf, (opf.kind, bi, bf)

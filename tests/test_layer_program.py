@@ -307,6 +307,52 @@ def test_program_rejects_soft_reset_stream_driver():
         lp.layer_event_forward(lp.layer_op(spec), params, stream, 8, 2)
 
 
+# ---------------------------------------------------------------------------
+# block-size divisor snapping: prime / tiny channel counts, every kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_channels", [2, 3, 7, 13, 127])
+def test_channel_block_snaps_to_divisor(n_channels):
+    """Prime or smaller-than-block channel counts must snap to a dividing
+    block (primes snap all the way to the count itself)."""
+    b = lp._channel_block(n_channels, 128)
+    assert 1 <= b <= min(128, n_channels) and n_channels % b == 0
+    if n_channels in (2, 3, 7, 13, 127):    # prime < 128: only divisor <= it
+        assert b == n_channels
+
+
+@pytest.mark.parametrize("kind,out_ch", [
+    ("conv", 13),     # prime, < block
+    ("conv", 5),      # tiny
+    ("pool", 7),      # pool channels == in channels, prime
+    ("fc", 13),       # prime head
+    ("fc", 3),        # smaller than any block
+])
+def test_prime_channels_launch_and_match_oracle(kind, out_ch):
+    """Every kernel package must still launch (snapped block) and match
+    its oracle bitwise when the channel count is prime or tiny."""
+    kw = {"conv": dict(kernel=3, padding=1),
+          "pool": dict(kernel=2, stride=2), "fc": {}}[kind]
+    in_c = out_ch if kind == "pool" else 2
+    spec = EConvSpec(kind, (6, 6, in_c), out_ch,
+                     lif=LifParams(threshold=1.0), **kw)
+    params = init_econv(jax.random.PRNGKey(out_ch), spec)
+    op = lp.layer_op(spec)
+    vp = lp.padded_state(op, jnp.float32, n_slots=2)
+    rng = np.random.default_rng(out_ch)
+    xyc = jnp.asarray(np.stack([rng.integers(0, 6, (2, 9)),
+                                rng.integers(0, 6, (2, 9)),
+                                rng.integers(0, in_c, (2, 9))],
+                               -1).astype(np.int32))
+    gate = jnp.ones((2, 9), jnp.float32)
+    got = lp.scatter_events_batched(op, params, vp, xyc, gate, co_blk=128,
+                                    use_pallas=None)
+    want = lp.scatter_events_batched(op, params, vp, xyc, gate, co_blk=128,
+                                     use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert bool(jnp.any(got != vp))   # the launch really scattered work
+
+
 def test_quantized_program_round_trip():
     """A quantized spec (state_clip set) still compiles + serves through
     the unified executor and matches its own dense path."""

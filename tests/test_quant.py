@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:           # container has no hypothesis; see the shim
@@ -66,6 +67,136 @@ def test_state_quant_roundtrip():
     back = q.dequantize_state(qs, scale)
     np.testing.assert_allclose(np.asarray(back), np.asarray(v),
                                atol=scale)
+
+
+def test_weight_scale_1d_is_per_channel():
+    """1-D arrays (pool synapses, bias-like vectors) are already
+    per-channel: each entry gets its own elementwise scale |w|/7
+    (previously a silent ``w.ndim >= 2`` guard fell back to per-tensor)."""
+    w = jnp.asarray([0.7, -3.5, 0.07], jnp.float32)
+    s = q.weight_scale(w, per_channel=True)
+    assert s.shape == w.shape
+    np.testing.assert_allclose(np.asarray(s),
+                               np.abs(np.asarray(w)) / q.INT4_MAX,
+                               rtol=1e-6)
+    # and per-tensor stays a scalar
+    assert q.weight_scale(w, per_channel=False).shape == ()
+
+
+def test_weight_scale_dead_channel():
+    """amax == 0 channels hit the 1e-8 floor: codes are exactly 0 and the
+    dequantised reconstruction is finite (no NaN/inf), per-channel and
+    per-tensor, 1-D and 2-D."""
+    w2 = jnp.asarray(np.stack([np.zeros(4), np.ones(4)], -1), jnp.float32)
+    for per_channel in (True, False):
+        s = q.weight_scale(w2, per_channel)
+        assert bool(jnp.isfinite(s).all()) and float(s.min()) > 0
+        qi, sc = q.quantize_weights_int(w2, per_channel)
+        assert np.asarray(qi)[:, 0].max() == 0  # dead channel -> zero codes
+        assert bool(jnp.isfinite(jnp.asarray(qi, jnp.float32) * sc).all())
+    w1 = jnp.zeros((3,), jnp.float32)           # fully dead 1-D vector
+    qi, sc = q.quantize_weights_int(w1, per_channel=True)
+    np.testing.assert_array_equal(np.asarray(qi), 0)
+    assert bool(jnp.isfinite(sc).all())
+
+
+def test_requantize_codes_roundtrip_and_saturation():
+    codes = jnp.arange(q.INT4_MIN, q.INT4_MAX + 1, dtype=jnp.int8)
+    # same grid: identity
+    np.testing.assert_array_equal(
+        np.asarray(q.requantize_codes(codes, 0.25, 0.25)), np.asarray(codes))
+    # finer -> coarser grid halves the codes (round-to-even at .5)
+    half = q.requantize_codes(codes, 0.25, 0.5)
+    np.testing.assert_array_equal(np.asarray(half),
+                                  np.round(np.arange(-8, 8) / 2).astype(np.int8))
+    # coarser -> finer grid saturates at the int4 rails
+    sat = q.requantize_codes(codes, 1.0, 0.25)
+    assert int(sat.min()) == q.INT4_MIN and int(sat.max()) == q.INT4_MAX
+
+
+def test_quantize_net_structure():
+    """quantize_net: int8 codes in range, per-channel scales on the side,
+    nibble-packed image round-trips, integer-domain spec validates."""
+    from repro.core.layer_program import INT8_NATIVE, validate_policy_spec
+    from repro.core.sne_net import init_snn, tiny_net
+    spec = tiny_net()
+    qn = q.quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec)
+    validate_policy_spec(qn.spec, INT8_NATIVE)   # must not raise
+    for c, s, l in zip(qn.codes, qn.scales, spec.layers):
+        assert c.dtype == jnp.int8
+        assert int(c.min()) >= q.INT4_MIN and int(c.max()) <= q.INT4_MAX
+        assert s.shape == (np.asarray(c).shape[-1],)
+    for u, c in zip(qn.unpacked_codes(), qn.codes):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(c))
+    # the two policy faces hold the same codes in different dtypes
+    pf = qn.params_for("f32-carrier")
+    pi = qn.params_for("int8-native")
+    for a, b in zip(pf, pi):
+        assert a.w.dtype == jnp.float32 and b.w.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(a.w),
+                                      np.asarray(b.w).astype(np.float32))
+    # packed image is ~1/8 the float weight footprint (2 codes per byte)
+    float_bytes = sum(int(np.asarray(p.w).size) * 4 for p in pf)
+    assert qn.weight_bytes() <= float_bytes // 7
+    with pytest.raises(ValueError, match="unknown dtype policy"):
+        qn.params_for("fp8")
+
+
+def test_quantize_net_per_channel_dequant_error():
+    """Per-channel side scales reconstruct the float weights at least as
+    well as the shared per-tensor scale on every conv/fc layer."""
+    from repro.core.sne_net import init_snn, tiny_net
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(1), spec)
+    qn = q.quantize_net(params, spec, per_channel=True)
+    for p, l, s_side in zip(params, spec.layers, qn.scales):
+        if l.kind == "pool":
+            continue
+        w = np.asarray(p.w)
+        q_pc, s_pc = q.quantize_weights_int(p.w, per_channel=True)
+        err_pc = np.abs(w - np.asarray(q_pc, np.float32)
+                        * np.asarray(s_pc)).max()
+        q_pt, s_pt = q.quantize_weights_int(p.w, per_channel=False)
+        err_pt = np.abs(w - np.asarray(q_pt, np.float32)
+                        * float(s_pt)).max()
+        assert err_pc <= err_pt + 1e-6
+        np.testing.assert_allclose(np.asarray(s_side).reshape(-1),
+                                   np.asarray(s_pc).reshape(-1), rtol=1e-6)
+
+
+def test_quantize_net_rejects_dead_layer_threshold():
+    """Weights so small that the integer threshold lands above the int8
+    clip would yield a layer that can never fire (the clip runs before
+    the fire comparison); lowering must reject that loudly instead of
+    shipping a silently dead quantized model."""
+    from repro.core.econv import EConvParams
+    from repro.core.sne_net import init_snn, tiny_net
+    spec = tiny_net()
+    params = [EConvParams(w=p.w * 0.01)
+              for p in init_snn(jax.random.PRNGKey(0), spec)]
+    with pytest.raises(ValueError, match="can never fire"):
+        q.quantize_net(params, spec)
+    with pytest.raises(ValueError, match="can never fire"):
+        q.QuantizedLayer.from_float(spec.layers[0], params[0])
+
+
+def test_dequantized_params_use_execution_grid():
+    """dequantized_params must reconstruct the EXECUTED model: shared-grid
+    codes x the shared scale, within half a shared-grid step of the float
+    weights (regression: it once multiplied shared-grid codes by the
+    per-channel side scales, mis-scaling small-amax channels ~7x)."""
+    from repro.core.sne_net import init_snn, tiny_net
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(2), spec)
+    qn = q.quantize_net(params, spec, per_channel=True)
+    for p, l, dq, c, s in zip(params, spec.layers, qn.dequantized_params(),
+                              qn.codes, qn.shared_scales):
+        np.testing.assert_allclose(np.asarray(dq.w),
+                                   np.asarray(c, np.float32) * s, rtol=1e-6)
+        if l.kind != "pool":
+            # requantisation can cost one extra half-step of rounding
+            err = np.abs(np.asarray(dq.w) - np.asarray(p.w)).max()
+            assert err <= 1.01 * s, (l.kind, err, s)
 
 
 def test_quantized_layer_preserves_firing_semantics():
