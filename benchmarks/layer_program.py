@@ -14,8 +14,15 @@ that claim the way `benchmarks/idle_skip.py` measures the TLU skip:
   * assert the unified path dispatches strictly fewer device ops per
     window on `tiny_net` — each layer's scatter collapses into exactly
     one launch;
+  * trace the WHOLE `window_step` under both **fusion policies** and
+    count Pallas launches: the fused-window lowering must be exactly L
+    launches per window (one fused kernel per layer, time loop inside)
+    vs L x W for the per-step oracle — the launch-overhead delta the
+    regression gate pins (``fused_launch_ratio_min``) — and a cohort
+    served under each fusion policy must decode bitwise identically;
   * serve a small cohort through `EventServeEngine` (which jits exactly
-    this executor) and record the serving-level events/J headline;
+    this executor, fused windows by default) and record the
+    serving-level events/J headline;
   * compare the two **dtype policies** on the quantized net: per-layer
     bytes one scatter launch moves (f32 carrier vs int8-native — the
     int8 path must be strictly smaller on EVERY layer), the effective
@@ -79,6 +86,28 @@ def _subjaxprs(v):
             yield u
 
 
+def _count_executed(jaxpr) -> tuple:
+    """Like :func:`_count_ops`, but weighted by *execution* count: a
+    ``lax.scan`` body's ops and launches run once per trip, so they are
+    multiplied by the scan length (the per-step window driver scans over
+    timesteps — its launches must be charged W times, exactly what the
+    device replays)."""
+    n_eqns = n_pallas = 0
+    for eqn in jaxpr.eqns:
+        n_eqns += 1
+        if eqn.primitive.name == "pallas_call":
+            n_pallas += 1
+            continue
+        mult = (eqn.params.get("length", 1)
+                if eqn.primitive.name == "scan" else 1)
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                e, p = _count_executed(sub)
+                n_eqns += mult * e
+                n_pallas += mult * p
+    return n_eqns, n_pallas
+
+
 def layer_dispatches(spec, params, use_pallas):
     """Trace one (layer, timestep) step per layer; count its device ops.
 
@@ -114,8 +143,31 @@ def layer_dispatches(spec, params, use_pallas):
     return rows
 
 
+def window_launches(spec, params, fusion_policy, use_pallas=None):
+    """Trace one whole `window_step` under a fusion policy; count launches.
+
+    Returns ``(device_ops, pallas_launches)`` for the full L-layer,
+    W-timestep serving step — the figure the fused lowering collapses
+    from L x W to L.
+    """
+    from functools import partial
+    prog = lp.compile_program(spec, fusion_policy=fusion_policy)
+    states = tuple(lp.padded_state(op, n_slots=SLOTS) for op in prog.ops)
+    cc = jnp.zeros((SLOTS, spec.n_classes), jnp.float32)
+    E0 = prog.ops[0].step_capacity
+    xyc = jnp.zeros((WINDOW, SLOTS, E0, 3), jnp.int32)
+    gate = jnp.zeros((WINDOW, SLOTS, E0), jnp.float32)
+    alive = jnp.ones((WINDOW, SLOTS), jnp.float32)
+    pre_dt = jnp.zeros((SLOTS,), jnp.int32)
+    jx = jax.make_jaxpr(partial(lp.window_step, program=prog,
+                                use_pallas=use_pallas))(
+        params, states, cc, xyc, gate, alive, pre_dt)
+    return _count_executed(jx.jaxpr)
+
+
 def serve_cohort(spec, params, n_timesteps, seed=0,
-                 dtype_policy=lp.F32_CARRIER):
+                 dtype_policy=lp.F32_CARRIER,
+                 fusion_policy=lp.FUSED_WINDOW):
     """Serve a small random cohort; return engine stats + events/J."""
     rng = np.random.default_rng(seed)
     H, W, C = spec.in_shape
@@ -125,7 +177,8 @@ def serve_cohort(spec, params, n_timesteps, seed=0,
         reqs.append(EventRequest.from_dense(
             uid, jnp.asarray(spikes.astype(np.float32))))
     eng = EventServeEngine(spec, params, n_slots=SLOTS, window=WINDOW,
-                           use_pallas=False, dtype_policy=dtype_policy)
+                           use_pallas=False, dtype_policy=dtype_policy,
+                           fusion_policy=fusion_policy)
     t0 = time.time()
     eng.run(reqs)
     wall = time.time() - t0
@@ -178,11 +231,32 @@ def main(fast: bool = False) -> None:
           f"{WINDOW * launches} kernel launches) vs {win_f} fallback "
           f"-> {win_f / win_u:.2f}x fewer dispatches")
 
+    # --- fusion policies: L launches per fused window vs L x W ----------
+    ops_fused, launches_fused = window_launches(spec, params,
+                                                lp.FUSED_WINDOW)
+    ops_step, launches_step = window_launches(spec, params, lp.PER_STEP)
+    # the fused-window contract: exactly ONE launch per LAYER per WINDOW
+    assert launches_fused == L, (launches_fused, L)
+    assert launches_step == WINDOW * L, (launches_step, WINDOW * L)
+    fused_ratio = launches_step / launches_fused
+    print(f"  window launches: {launches_fused} fused vs {launches_step} "
+          f"per-step -> x{fused_ratio:.1f} fewer launches "
+          f"({ops_fused} vs {ops_step} device ops per window)")
+
     served = serve_cohort(spec, params, n_ts)
-    # the engine accounts one launch per layer per timestep
-    assert served["launches_per_window"] == WINDOW * L
+    served_step = serve_cohort(spec, params, n_ts,
+                               fusion_policy=lp.PER_STEP)
+    # the engine accounts one launch per layer per window when fused,
+    # one per layer per timestep on the per-step oracle lowering
+    assert served["launches_per_window"] == L
+    assert served_step["launches_per_window"] == WINDOW * L
+    # and the two lowerings must decode bitwise identically
+    np.testing.assert_array_equal(served["class_counts"],
+                                  served_step["class_counts"])
     print(f"  served {served['events']:.0f} events, "
-          f"{served['launches_per_window']:.0f} launches/window, "
+          f"{served['launches_per_window']:.0f} launches/window fused "
+          f"(vs {served_step['launches_per_window']:.0f} per-step, "
+          f"bitwise-equal decode), "
           f"{served['events_per_joule']:.3e} events/J")
 
     # --- dtype policies: bytes per launch + effective pJ/SOP + parity ----
@@ -221,6 +295,10 @@ def main(fast: bool = False) -> None:
         "ops_per_window_unified": win_u,
         "ops_per_window_fallback": win_f,
         "dispatch_ratio": win_f / win_u,
+        "fused_launches_per_window": launches_fused,
+        "perstep_launches_per_window": launches_step,
+        "fused_launch_ratio": fused_ratio,
+        "fused_parity": True,
         "launches_per_window": served["launches_per_window"],
         "events_per_joule": served["events_per_joule"],
         "per_layer_launch_bytes": byte_rows,

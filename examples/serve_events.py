@@ -1,7 +1,8 @@
 """Serve concurrent DVS event streams through the slot-batched engine.
 
     PYTHONPATH=src python examples/serve_events.py [--requests 8] \
-        [--slots 4] [--window 4] [--oracle] [--no-idle-skip]
+        [--slots 4] [--window 4] [--oracle] [--no-idle-skip] \
+        [--dtype-policy int8-native] [--fusion-policy per-step]
     PYTHONPATH=src python examples/serve_events.py --source file \
         [--file path/to/recording.npz|.aedat] [--speedup 2000]
 
@@ -15,12 +16,19 @@ Two sources:
     admits each segment at its recording-relative arrival time and paces
     engine windows to (scaled) sensor time.
 
-All active slots advance together through the jitted per-window step; with
+All active slots advance together through the jitted per-window step
+(fused windows by default: ONE Pallas launch per layer per window); with
 the window-level idle skip (default on) all-idle (slot, window) pairs
 bypass the batched Pallas launch entirely and their leak is applied
-analytically.  Each completed inference reports its measured event counts
+analytically.  ``--dtype-policy int8-native`` quantizes the net
+(`core.quant.quantize_net`) and serves it on the native integer datapath;
+``--fusion-policy per-step`` selects the launch-per-timestep oracle
+lowering.  Each completed inference reports its measured event counts
 mapped through the analytic SNE hardware model — latency, energy, and
 activity per request.
+
+This example's flags mirror `EventServeEngine`'s constructor kwargs; CI
+runs it under both policies so the two surfaces cannot drift apart.
 """
 import argparse
 import time
@@ -28,6 +36,9 @@ import time
 import jax
 import numpy as np
 
+from repro.core.policies import (DTYPE_POLICIES, F32_CARRIER,
+                                 FUSED_WINDOW, FUSION_POLICIES, INT8_NATIVE)
+from repro.core.quant import quantize_net
 from repro.core.sne_net import init_snn, tiny_net
 from repro.data.events_ds import (TINY, ReplayClient, batch_at,
                                   load_recording, sample_recording_path,
@@ -56,14 +67,27 @@ def main():
                     "Pallas kernel (interpret mode on CPU)")
     ap.add_argument("--no-idle-skip", action="store_true",
                     help="step every window densely (the pre-skip engine)")
+    ap.add_argument("--dtype-policy", choices=DTYPE_POLICIES,
+                    default=F32_CARRIER,
+                    help="datapath dtype domain; int8-native quantizes the "
+                    "net and serves int8 codes/storage (paper §III-D4)")
+    ap.add_argument("--fusion-policy", choices=FUSION_POLICIES,
+                    default=FUSED_WINDOW,
+                    help="window lowering: fused-window (one launch per "
+                    "layer per window, default) or the per-step oracle")
     args = ap.parse_args()
 
     spec = tiny_net()
     params = init_snn(jax.random.PRNGKey(args.seed), spec)
+    if args.dtype_policy == INT8_NATIVE:
+        qn = quantize_net(params, spec)
+        spec, params = qn.spec, qn.params_for(args.dtype_policy)
     eng = EventServeEngine(spec, params, n_slots=args.slots,
                            window=args.window,
                            use_pallas=False if args.oracle else None,
-                           idle_skip=not args.no_idle_skip)
+                           idle_skip=not args.no_idle_skip,
+                           dtype_policy=args.dtype_policy,
+                           fusion_policy=args.fusion_policy)
 
     labels = None
     client = None

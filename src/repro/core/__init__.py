@@ -1,3 +1,10 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The SNE execution model: events, LIF dynamics, the layer program.
+
+The paper's primary contribution lives here — the event representation
+(`core.events`), the linearised LIF neuron (`core.lif`), the event-conv
+layer (`core.econv`), the eCNN assembly (`core.sne_net`), the integer
+lowering (`core.quant`), the execution-policy names (`core.policies`),
+the analytic hardware model (`core.engine`), and the ONE event-domain
+executor every entry point runs through (`core.layer_program`).  See
+``docs/architecture.md`` for the pipeline map.
+"""

@@ -56,6 +56,7 @@ class EConvSpec:
 
     @property
     def out_shape(self) -> Tuple[int, int, int]:
+        """Output geometry (H, W, C) this layer's kind implies."""
         H, W, C = self.in_shape
         if self.kind == "conv":
             Ho = H + 2 * self.padding - self.kernel + 1
@@ -69,6 +70,7 @@ class EConvSpec:
 
     @property
     def fan_in(self) -> int:
+        """Synapses feeding one output neuron (init scaling)."""
         H, W, C = self.in_shape
         if self.kind == "conv":
             return self.kernel * self.kernel * C
@@ -89,11 +91,14 @@ class EConvSpec:
 
 
 class EConvParams(NamedTuple):
+    """One layer's learnable synapses (shape depends on the kind)."""
+
     w: jnp.ndarray  # conv: (K,K,Ci,Co); pool: (C,); fc: (Din, Dout)
 
 
 def init_econv(key: jax.Array, spec: EConvSpec,
                dtype=jnp.float32) -> EConvParams:
+    """He-style init scaled for spiking rates (pool: unit synapses)."""
     if spec.kind == "conv":
         H, W, C = spec.in_shape
         shape = (spec.kernel, spec.kernel, C, spec.out_channels)
@@ -162,6 +167,8 @@ def dense_forward(params: EConvParams, spec: EConvSpec, spikes: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 class EConvStats(NamedTuple):
+    """Per-layer event-path counters (the energy-model inputs)."""
+
     n_update_events: jnp.ndarray   # consumed UPDATE events
     n_sops: jnp.ndarray            # nominal synaptic operations performed
     n_out_events: jnp.ndarray      # emitted events (pre-overflow-drop)

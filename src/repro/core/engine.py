@@ -24,6 +24,8 @@ from typing import Dict, List, Sequence, Tuple
 
 @dataclasses.dataclass(frozen=True)
 class SneConfig:
+    """The SNE macro-architecture parameters (paper §III-D / §IV-A)."""
+
     n_slices: int = 8
     clusters_per_slice: int = 16
     tdm_neurons: int = 64           # neurons per cluster (time-multiplexed)
@@ -43,10 +45,12 @@ class SneConfig:
 
     @property
     def n_neurons(self) -> int:
+        """Total neurons the engine time-multiplexes."""
         return self.n_slices * self.clusters_per_slice * self.tdm_neurons
 
     @property
     def sops_per_cycle(self) -> int:
+        """Peak synaptic updates per clock."""
         # every cluster updates one TDM neuron per cycle
         return self.n_slices * self.clusters_per_slice
 
@@ -86,6 +90,7 @@ def energy_per_sop_j(cfg: SneConfig, activity: float = 0.05) -> float:
 
 
 def efficiency_tsops_w(cfg: SneConfig, activity: float = 0.05) -> float:
+    """Energy efficiency in TSOP/s/W (the paper's 4.5 headline figure)."""
     return peak_sops(cfg) / power_w(cfg, activity) / 1e12
 
 
@@ -170,6 +175,7 @@ def inference_energy_j(cfg: SneConfig, total_events: float,
 
 
 def inference_rate_hz(cfg: SneConfig, total_events: float) -> float:
+    """Modeled inferences per second at this event count."""
     return 1.0 / inference_time_s(cfg, total_events)
 
 
@@ -180,6 +186,8 @@ def inference_rate_hz(cfg: SneConfig, total_events: float) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class LayerActivity:
+    """One layer's measured (or analytic) event/SOP/neuron counts."""
+
     name: str
     n_events: float          # input events consumed by this layer
     n_sops: float            # synaptic updates triggered
@@ -201,6 +209,7 @@ def network_events_from_activity(layer_sizes: Sequence[Tuple[str, int, int]],
 
 def summarize_inference(cfg: SneConfig, layers: Sequence[LayerActivity],
                         activity: float = 0.05) -> Dict[str, float]:
+    """Map per-layer counts to the Table-I row (time/energy/power)."""
     total_events = sum(l.n_events for l in layers)
     total_sops = sum(l.n_sops for l in layers)
     t = inference_time_s(cfg, total_events)

@@ -45,9 +45,11 @@ class EventStream(NamedTuple):
 
     @property
     def capacity(self) -> int:
+        """Static buffer size (valid slots + padding)."""
         return self.t.shape[0]
 
     def count(self) -> jnp.ndarray:
+        """Number of valid events in the buffer."""
         return jnp.sum(self.valid.astype(jnp.int32))
 
 
@@ -73,6 +75,7 @@ class EventFormat:
 
     @property
     def shifts(self) -> Tuple[int, int, int, int, int]:
+        """Bit offsets (op, t, c, x, y) of each packed field."""
         y_s = 0
         x_s = self.y_bits
         c_s = x_s + self.x_bits

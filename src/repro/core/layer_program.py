@@ -21,7 +21,13 @@ to the membrane state differs.  This module is that design point in JAX:
         (`kernels/event_conv`, `kernels/event_pool`, `kernels/event_fc`)
         and inter-layer event routing (:func:`frame_to_events`) stays on
         device — the only dense materialisation between layers is the
-        spike frame at FIRE.
+        spike frame at FIRE.  Its **fusion policy** (compiled, like the
+        dtype policy) picks the lowering: ``"per-step"`` (one scatter
+        launch per layer per timestep — the bit-exactness oracle) or
+        ``"fused-window"`` (the whole window per layer in ONE fused
+        launch via :func:`layer_window`, time loop inside the kernel,
+        membrane in VMEM scratch — L launches per window instead of
+        L×T).
 
   * the per-layer capacity heuristics (:func:`layer_step_capacity` for
     serving-time per-timestep buckets, :func:`layer_stream_capacity` for
@@ -58,11 +64,14 @@ from repro.core.lif import (LifParams, apply_leak, fire_and_reset,
                             idle_decay, supports_idle_skip)
 # the policy names live in the leaf module `core.policies` (see its
 # docstring); re-exported here for every executor caller
-from repro.core.policies import DTYPE_POLICIES, F32_CARRIER, INT8_NATIVE
+from repro.core.policies import (DTYPE_POLICIES, F32_CARRIER, FUSED_WINDOW,
+                                 FUSION_POLICIES, INT8_NATIVE, PER_STEP)
 from repro.core.quant import INT8_MAX, INT8_MIN
-from repro.kernels.event_conv.ops import event_conv_batched
-from repro.kernels.event_fc.ops import event_fc_batched
-from repro.kernels.event_pool.ops import event_pool_batched
+from repro.kernels.event_conv.ops import (event_conv_batched,
+                                          event_conv_window)
+from repro.kernels.event_fc.ops import event_fc_batched, event_fc_window
+from repro.kernels.event_pool.ops import (event_pool_batched,
+                                          event_pool_window)
 
 if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids an import cycle)
     from repro.core.sne_net import SNNSpec
@@ -119,26 +128,38 @@ class LayerOp:
 
     @property
     def kind(self) -> str:
+        """Scatter kind ("conv" | "pool" | "fc")."""
         return self.spec.kind
 
     @property
     def lif(self) -> LifParams:
+        """The layer's LIF plan (shared boundary dynamics)."""
         return self.spec.lif
 
 
 @dataclasses.dataclass(frozen=True)
 class LayerProgram:
-    """A compiled eCNN: the typed op sequence every entry point executes."""
+    """A compiled eCNN: the typed op sequence every entry point executes.
+
+    ``dtype_policy`` names the dtype domain the datapath computes in;
+    ``fusion_policy`` names how :func:`window_step` lowers a window onto
+    Pallas launches — ``"per-step"`` (one scatter launch per layer per
+    timestep; the bit-exactness oracle) or ``"fused-window"`` (one fused
+    launch per layer for the whole window).  Both are compiled in, so the
+    jitted serving step closes over one fully-resolved execution plan.
+    """
 
     spec: "SNNSpec"
     ops: Tuple[LayerOp, ...]
     dtype_policy: str = F32_CARRIER
+    fusion_policy: str = PER_STEP
 
     def __len__(self) -> int:
         return len(self.ops)
 
     @property
     def step_capacities(self) -> Tuple[int, ...]:
+        """Per-layer per-timestep event buckets the program baked in."""
         return tuple(op.step_capacity for op in self.ops)
 
 
@@ -227,13 +248,15 @@ def compile_program(spec: "SNNSpec",
                     step_capacities: Optional[Tuple[int, ...]] = None,
                     step_activity: float = 0.25, step_slack: float = 4.0,
                     step_align: int = 8,
-                    dtype_policy: str = F32_CARRIER) -> LayerProgram:
+                    dtype_policy: str = F32_CARRIER,
+                    fusion_policy: str = PER_STEP) -> LayerProgram:
     """Compile ``SNNSpec`` into the typed op sequence the executors run.
 
     ``step_capacities`` overrides the per-layer per-timestep event buckets
     (one per layer); by default :func:`layer_step_capacity` sizes them.
-    ``dtype_policy`` selects the datapath (one switch for every entry
-    point); int8-native specs are validated here, at compile time.
+    ``dtype_policy`` selects the datapath dtype domain and
+    ``fusion_policy`` the window lowering (one switch each for every
+    entry point); int8-native specs are validated here, at compile time.
     The program is static and hashable — safe to close over in ``jax.jit``.
     """
     if step_capacities is not None and len(step_capacities) != len(spec.layers):
@@ -242,6 +265,9 @@ def compile_program(spec: "SNNSpec",
         raise ValueError(                    # but an empty spec must not slip
             f"unknown dtype policy {dtype_policy!r} "
             f"(expected one of {DTYPE_POLICIES})")
+    if fusion_policy not in FUSION_POLICIES:
+        raise ValueError(f"unknown fusion policy {fusion_policy!r} "
+                         f"(expected one of {FUSION_POLICIES})")
     ops = []
     for i, l in enumerate(spec.layers):
         cap = (step_capacities[i] if step_capacities is not None
@@ -249,7 +275,8 @@ def compile_program(spec: "SNNSpec",
                                         step_align))
         ops.append(layer_op(l, index=i, step_capacity=cap,
                             dtype_policy=dtype_policy))
-    return LayerProgram(spec=spec, ops=tuple(ops), dtype_policy=dtype_policy)
+    return LayerProgram(spec=spec, ops=tuple(ops), dtype_policy=dtype_policy,
+                        fusion_policy=fusion_policy)
 
 
 def default_stream_capacities(spec: "SNNSpec", activity: float = 0.05,
@@ -547,15 +574,111 @@ def apply_idle_decay(states, dt, *, program: LayerProgram):
     return tuple(out)
 
 
+def layer_window(op: LayerOp, params: EConvParams, vp: jnp.ndarray,
+                 xyc: jnp.ndarray, gate: jnp.ndarray, alive: jnp.ndarray,
+                 co_blk: int = 128, use_pallas: Optional[bool] = None):
+    """One layer × one WHOLE window for every slot: one fused launch.
+
+    The fused-window counterpart of :func:`layer_timestep`: the full
+    ``leak -> scatter -> clip -> fire -> reset`` chain over all T
+    timesteps runs inside a single Pallas launch per layer
+    (``kernels/event_conv|event_pool|event_fc`` ``*_window`` kernels),
+    with the membrane carried in VMEM scratch between iterations and the
+    per-timestep event buckets passed as a packed schedule.  Results —
+    final membranes and every timestep's spike frame — are bitwise
+    identical to iterating :func:`layer_timestep` (the per-step oracle),
+    under both dtype policies.
+
+    Args:
+      vp:    (N, Hp, Wp, C) membrane slab in the op's storage dtype.
+      xyc:   (T, N, E, 3) int32 events binned by timestep (layer coords;
+             conv shifts into halo coords here, like the per-step path).
+      gate:  (T, N, E) validity gates.
+      alive: (T, N) 1.0 where the slot has a real timestep (frozen
+             timesteps hold state and emit no spikes, exactly the
+             per-step ``alive_t`` semantics).
+
+    Returns ``(vp_new, spikes (T, N, Ho, Wo, C))`` with spikes in the
+    op's accumulator dtype (what :func:`frame_to_events` routes onward).
+    """
+    spec = op.spec
+    check_native_weights(op, params)
+    native = op.dtype_policy == INT8_NATIVE
+    x = jnp.transpose(xyc, (1, 0, 2, 3))     # slot-major for the kernels
+    g = jnp.transpose(gate, (1, 0, 2))
+    a = jnp.transpose(alive, (1, 0))
+    if spec.kind == "conv":
+        off = jnp.asarray([spec.padding, spec.padding, 0], jnp.int32)
+        vp_new, s = event_conv_window(
+            vp, params.w, x + off, g, a, lif=op.lif, halo=op.halo,
+            co_blk=_channel_block(spec.out_channels, co_blk), native=native,
+            use_pallas=use_pallas)
+    elif spec.kind == "pool":
+        vp_new, s = event_pool_window(vp, params.w, x, g, a, lif=op.lif,
+                                      stride=spec.stride, native=native,
+                                      use_pallas=use_pallas)
+    else:
+        vp_new, s = event_fc_window(
+            vp, params.w, x, g, a, lif=op.lif, in_shape=spec.in_shape,
+            d_blk=_channel_block(spec.out_channels, co_blk), native=native,
+            use_pallas=use_pallas)
+    return vp_new, jnp.transpose(s, (1, 0, 2, 3, 4))
+
+
+def _window_step_fused(params: Sequence[EConvParams], states, class_counts,
+                       ev_xyc, ev_gate, alive, pre_dt, *,
+                       program: LayerProgram, co_blk: int = 128,
+                       use_pallas: Optional[bool] = None):
+    """The fused-window driver behind :func:`window_step` (L launches).
+
+    Layer-major instead of timestep-major: layer *l* at timestep *t*
+    depends only on layer *l-1*'s frames at the same timestep and its own
+    state, so the whole window can run layer by layer — each layer ONE
+    fused launch (:func:`layer_window`) — with :func:`frame_to_events`
+    routing every timestep's FIRE frame at once (vmapped over the window,
+    still on device, still zero extra launches).  Outputs are bitwise
+    equal to the per-step driver's.
+    """
+    L = len(program.ops)
+    N = class_counts.shape[0]
+    states = list(apply_idle_decay(states, pre_dt, program=program))
+    counts = jnp.zeros((L, N), jnp.float32)
+    drops = jnp.zeros((L, N), jnp.int32)
+    xyc, gate = ev_xyc, ev_gate
+    s_frames = None
+    for op, p in zip(program.ops, params):
+        if op.index > 0:
+            xyc, gate, n_drop = jax.vmap(
+                lambda s, cap=op.step_capacity: frame_to_events(s, cap)
+            )(s_frames)
+            drops = drops.at[op.index].add(jnp.sum(n_drop, axis=0))
+        counts = counts.at[op.index].add(
+            jnp.sum(gate, axis=(0, 2)).astype(counts.dtype))
+        states[op.index], s_frames = layer_window(
+            op, p, states[op.index], xyc, gate, alive, co_blk, use_pallas)
+    class_counts = class_counts + jnp.sum(
+        s_frames, axis=(0, 2, 3)).astype(class_counts.dtype)
+    return tuple(states), class_counts, counts, drops
+
+
 def window_step(params: Sequence[EConvParams], states, class_counts,
                 ev_xyc, ev_gate, alive, pre_dt, *, program: LayerProgram,
                 co_blk: int = 128, use_pallas: Optional[bool] = None):
     """Advance every slot through one window of timesteps (jit this).
 
-    The whole-network step the serving engine executes: per timestep the
-    program chain runs layer by layer, each layer one slot-batched scatter
-    launch, with :func:`frame_to_events` routing the FIRE frame into the
-    next layer's event bucket on device.
+    The whole-network step the serving engine executes.  The program's
+    compiled ``fusion_policy`` picks the lowering (same pattern as
+    ``dtype_policy`` — one switch, every entry point honours it):
+
+      * ``"per-step"`` — per timestep the program chain runs layer by
+        layer, each layer one slot-batched scatter launch (L×T launches
+        per window), with :func:`frame_to_events` routing the FIRE frame
+        into the next layer's event bucket on device.  This is the
+        bit-exactness oracle for the fused path.
+      * ``"fused-window"`` — each layer's full window runs in ONE fused
+        Pallas launch (:func:`layer_window`; L launches per window), the
+        time loop inside the kernel and the membrane resident in VMEM
+        scratch.  Bitwise identical outputs.
 
     Args:
       states:       tuple of per-layer membrane slabs, each (N, Hp, Wp, C).
@@ -572,6 +695,10 @@ def window_step(params: Sequence[EConvParams], states, class_counts,
     Returns new states, class_counts, per-layer per-slot consumed-event
     counts (L, N) and inter-layer overflow drops (L, N) for this window.
     """
+    if program.fusion_policy == FUSED_WINDOW:
+        return _window_step_fused(params, states, class_counts, ev_xyc,
+                                  ev_gate, alive, pre_dt, program=program,
+                                  co_blk=co_blk, use_pallas=use_pallas)
     L = len(program.ops)
     N = class_counts.shape[0]
     states = apply_idle_decay(states, pre_dt, program=program)

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class LifParams:
+    """The linearised LIF plan: threshold, leak, reset, 8-bit clip."""
+
     threshold: float = 1.0
     leak: float = 0.0625
     leak_mode: str = "toward_zero"   # or "subtract"

@@ -32,6 +32,7 @@ class SigmaDelta(NamedTuple):
 
 
 def sd_init(x0: jnp.ndarray) -> SigmaDelta:
+    """Zero reference state shaped like the first activation."""
     return SigmaDelta(ref=jnp.zeros_like(x0, dtype=jnp.float32))
 
 
@@ -52,6 +53,7 @@ def sd_encode(sd: SigmaDelta, x: jnp.ndarray,
 
 
 def sd_event_rate(fires: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of channels that emitted (the activity metric)."""
     return jnp.mean(fires.astype(jnp.float32))
 
 

@@ -1,4 +1,4 @@
-"""Dtype-policy names for the layer-program executor (single source).
+"""Execution-policy names for the layer-program executor (single source).
 
 A leaf module so every layer of the stack — `core.quant` (lowering),
 `core.econv` / `core.sne_net` (entry points), `core.layer_program`
@@ -6,7 +6,24 @@ A leaf module so every layer of the stack — `core.quant` (lowering),
 place without import cycles (econv cannot import layer_program, which
 imports it).  `core.layer_program` re-exports these for callers that
 already import it.
+
+Two orthogonal axes (see ``docs/policies.md`` for the full matrix):
+
+* **dtype policy** — which dtype domain the datapath computes in:
+  ``"f32-carrier"`` (the exactness oracle; integers held in float32) or
+  ``"int8-native"`` (paper §III-D4: int8 codes/storage, int32
+  accumulation).
+* **fusion policy** — how the slot-batched window step lowers onto Pallas
+  launches: ``"per-step"`` (one scatter launch per layer per timestep —
+  the bit-exactness oracle) or ``"fused-window"`` (the whole
+  ``leak -> scatter -> clip -> fire -> reset`` chain over all T timesteps
+  of a window in ONE launch per layer, membrane resident in VMEM scratch
+  — L launches per window instead of L×T).
 """
 F32_CARRIER = "f32-carrier"
 INT8_NATIVE = "int8-native"
 DTYPE_POLICIES = (F32_CARRIER, INT8_NATIVE)
+
+PER_STEP = "per-step"
+FUSED_WINDOW = "fused-window"
+FUSION_POLICIES = (PER_STEP, FUSED_WINDOW)

@@ -283,6 +283,7 @@ def quantize_state(v: jnp.ndarray, scale: float) -> jnp.ndarray:
 
 
 def dequantize_state(q: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """Inverse of :func:`quantize_state`."""
     return q.astype(jnp.float32) * scale
 
 
@@ -297,6 +298,7 @@ def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
 
 
 def unpack_int4(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4`: first ``n`` signed int4 codes."""
     b = packed.astype(jnp.int32)
     lo = (b & 0xF)
     hi = (b >> 4) & 0xF

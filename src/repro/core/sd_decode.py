@@ -31,6 +31,7 @@ from repro.distributed.sharding import shard_map
 
 
 def sd_cap(d_in: int, frac: float) -> int:
+    """Event budget: ``frac`` of the input width, aligned and floored."""
     return max(8, min(d_in, int(round(d_in * frac))))
 
 

@@ -28,12 +28,15 @@ from repro.core.quant import QuantizedLayer, fake_quant_weights
 
 @dataclasses.dataclass(frozen=True)
 class SNNSpec:
+    """A whole eCNN: the per-layer specs plus run geometry."""
+
     layers: Tuple[EConvSpec, ...]
     n_timesteps: int
     n_classes: int
 
     @property
     def in_shape(self):
+        """Sensor-facing input geometry (layer 0's)."""
         return self.layers[0].in_shape
 
 
@@ -85,6 +88,7 @@ def tiny_net(n_timesteps: int = 16, n_classes: int = 4) -> SNNSpec:
 
 
 def init_snn(key: jax.Array, spec: SNNSpec) -> List[EConvParams]:
+    """Initialise every layer's synapses from one PRNG key."""
     keys = jax.random.split(key, len(spec.layers))
     return [init_econv(k, l) for k, l in zip(keys, spec.layers)]
 
@@ -122,12 +126,14 @@ def count_loss(out_spikes: jnp.ndarray, label: jnp.ndarray, spec: SNNSpec,
 
 
 def ce_loss(out_spikes: jnp.ndarray, label: jnp.ndarray) -> jnp.ndarray:
+    """Cross-entropy over rate-decoded spike counts."""
     counts = spike_counts(out_spikes)
     logp = jax.nn.log_softmax(counts)
     return -logp[label]
 
 
 def predict(out_spikes: jnp.ndarray) -> jnp.ndarray:
+    """Rate decoding: the class with the most output spikes."""
     return jnp.argmax(spike_counts(out_spikes))
 
 
@@ -136,6 +142,8 @@ def predict(out_spikes: jnp.ndarray) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 class NetworkEventStats(NamedTuple):
+    """Whole-network event-path counters (per layer + totals)."""
+
     per_layer: Tuple[EConvStats, ...]
     total_events: jnp.ndarray
     total_sops: jnp.ndarray
@@ -169,6 +177,7 @@ def event_apply(params: Sequence[EConvParams], spec: SNNSpec,
 def event_predict(params, spec: SNNSpec, stream: ev.EventStream,
                   capacities: Sequence[int],
                   dtype_policy: str = F32_CARRIER):
+    """Rate-decode one event-path inference: (class, counts, stats)."""
     out, stats = event_apply(params, spec, stream, capacities,
                              dtype_policy=dtype_policy)
     # rate decoding over the output event stream

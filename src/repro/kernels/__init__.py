@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel packages for the event-domain compute hot-spots.
+
+One package per scatter family (`event_conv`, `event_pool`, `event_fc`,
+plus the fused LIF elementwise pass in `lif`), each shipping a Pallas
+kernel, a pure-jnp reference oracle proven bit-for-bit against it, and a
+jit'd dispatcher (`ops.py`).  The slot-batched per-timestep kernels and
+the fused multi-timestep ``*_window`` kernels share per-package modules;
+the LIF boundary arithmetic the window kernels have in common lives in
+`window_common`.  See ``docs/kernels.md`` for the kernel contract and
+how to add a package.
+"""

@@ -1,5 +1,8 @@
-from repro.kernels.event_conv.ops import event_conv
+"""Event-conv scatter kernels: per-event K×K×Co weight-patch accumulate."""
+from repro.kernels.event_conv.ops import (event_conv, event_conv_batched,
+                                          event_conv_window)
 from repro.kernels.event_conv.ref import event_conv_ref
 from repro.kernels.event_conv.kernel import event_conv_pallas
 
-__all__ = ["event_conv", "event_conv_ref", "event_conv_pallas"]
+__all__ = ["event_conv", "event_conv_batched", "event_conv_window",
+           "event_conv_ref", "event_conv_pallas"]

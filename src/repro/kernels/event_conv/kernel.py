@@ -35,6 +35,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lif import LifParams
+from repro.kernels.window_common import (clip_fire_reset, leak_boundary,
+                                         saturate_int8, window_acc_dtype)
 
 
 def _event_conv_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
@@ -163,3 +168,136 @@ def event_conv_batched_pallas(v: jnp.ndarray, weights: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct(v.shape, out_dtype),
         interpret=interpret,
     )(ev_xyc, gate3, w_f, v)
+
+
+def _event_conv_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
+                              v_out_ref, s_out_ref, acc_ref, *, K: int,
+                              halo: int, n_events: int, lif: LifParams,
+                              native: bool):
+    """One grid step: one slot's WHOLE window against one channel slab.
+
+    The fused form of `_event_conv_batched_kernel`: the timestep loop runs
+    *inside* the kernel, with the membrane carried in the ``acc_ref`` VMEM
+    scratch between iterations (the cluster state memory staying resident
+    across the whole window, not just one dense phase), so a window costs
+    one launch instead of T.  Per timestep the full executor chain runs —
+    ``leak -> scatter(events of t) -> clip -> fire -> reset`` — with the
+    boundary arithmetic delegated to `kernels.window_common` (bitwise the
+    per-step executor's).
+
+    ev_ref:    (1, T, E, 3) int32 — this slot's packed window schedule
+               (events binned by timestep, halo coords).
+    gate_ref:  (1, T, E, 1) — per-timestep validity gates, accumulator
+               dtype.
+    alive_ref: (1, T) float32 — 1.0 where the slot has a real timestep.
+    w_ref:     (K, K, Ci, CO_BLK) — flipped weights, shared by slots.
+    v_ref:     (1, Hp, Wp, CO_BLK) — membrane slab in *storage* dtype
+               (float32 carrier / int8 native).
+    v_out_ref: (1, Hp, Wp, CO_BLK) — final membrane, storage dtype.
+    s_out_ref: (1, T, Ho, Wo, CO_BLK) — per-timestep spike frames in the
+               accumulator dtype (what `frame_to_events` routes onward).
+    acc_ref:   (1, Hp, Wp, CO_BLK) VMEM scratch, accumulator dtype — the
+               resident membrane.
+    """
+    acc_ref[...] = v_ref[...].astype(acc_ref.dtype)
+    T = s_out_ref.shape[1]
+    Hp, Wp = acc_ref.shape[1], acc_ref.shape[2]
+    h = halo
+    for t in range(T):          # static trip count: T is the window shape
+        prev = acc_ref[...]     # value snapshot — the frozen-slot fallback
+        acc_ref[0, h:Hp - h, h:Wp - h, :] = leak_boundary(
+            acc_ref[0, h:Hp - h, h:Wp - h, :], lif)
+
+        def body(i, _, t=t):
+            x = ev_ref[0, t, i, 0]
+            y = ev_ref[0, t, i, 1]
+            c = ev_ref[0, t, i, 2]
+            g = gate_ref[0, t, i, 0]
+            patch = (w_ref[:, :, c, :] * g).astype(acc_ref.dtype)
+            cur = acc_ref[0, pl.dslice(x, K), pl.dslice(y, K), :]
+            acc_ref[0, pl.dslice(x, K), pl.dslice(y, K), :] = cur + patch
+            return ()
+
+        jax.lax.fori_loop(0, n_events, body, ())
+        v_new, s = clip_fire_reset(acc_ref[0, h:Hp - h, h:Wp - h, :], lif)
+        acc_ref[0, h:Hp - h, h:Wp - h, :] = v_new
+        if native:
+            # int8 storage saturation at every boundary, halo included —
+            # exactly the per-step executor's whole-slab downcast
+            acc_ref[...] = saturate_int8(acc_ref[...])
+        a = alive_ref[0, t] > 0
+        acc_ref[...] = jnp.where(a, acc_ref[...], prev)
+        s_out_ref[0, t] = jnp.where(a, s, jnp.zeros_like(s))
+    v_out_ref[...] = acc_ref[...].astype(v_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lif", "halo", "co_blk",
+                                             "native", "interpret"))
+def event_conv_window_pallas(v: jnp.ndarray, weights: jnp.ndarray,
+                             ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                             alive: jnp.ndarray, *, lif: LifParams,
+                             halo: int, co_blk: int = 128,
+                             native: bool = False, interpret: bool = False):
+    """Advance N slots through a whole T-timestep window in ONE launch.
+
+    The fused window form of :func:`event_conv_batched_pallas`: instead of
+    one scatter launch per timestep (with leak/fire between launches in
+    XLA), the timestep loop moves inside the kernel and the membrane slab
+    stays resident in VMEM scratch for the full window.  Results —
+    membrane AND every timestep's spike frame — are bitwise identical to
+    iterating the per-step executor (`tests/test_fused_window.py`).
+
+    Args:
+      v:       (N, Hp, Wp, Co) halo-padded membranes in storage dtype
+               (float32 carrier, int8 native).
+      weights: (K, K, Ci, Co) conv weights (unflipped; flipped here once).
+      ev_xyc:  (N, T, E, 3) int32 packed schedule, halo coordinates.
+      ev_gate: (N, T, E) validity gates (cast to the accumulator dtype).
+      alive:   (N, T) 1.0 where the slot has a real timestep (frozen
+               timesteps hold state and emit no spikes).
+      lif:     the layer's LIF plan (static — baked into the kernel).
+      halo:    conv halo width (K - 1 headroom; the interior crop rule).
+      co_blk:  output-channel block size (must divide Co).
+      native:  int8-native policy — int32 accumulator, int8 saturation at
+               every boundary, int8 storage out.
+
+    Returns ``(v_out (N, Hp, Wp, Co) storage dtype,
+    spikes (N, T, Ho, Wo, Co) accumulator dtype)``.
+    """
+    N, Hp, Wp, Co = v.shape
+    K = weights.shape[0]
+    T, E = ev_xyc.shape[1], ev_xyc.shape[2]
+    Ho, Wo = Hp - 2 * halo, Wp - 2 * halo
+    acc_dt = window_acc_dtype(v.dtype, native)
+    co_blk = min(co_blk, Co)
+    if Co % co_blk:
+        raise ValueError(f"Co={Co} not divisible by co_blk={co_blk}")
+    w_f = jnp.flip(jnp.flip(weights, 0), 1)
+    gate4 = ev_gate.astype(acc_dt).reshape(N, T, E, 1)
+    alive2 = alive.astype(jnp.float32)
+
+    grid = (N, Co // co_blk)
+    return pl.pallas_call(
+        functools.partial(_event_conv_window_kernel, K=K, halo=halo,
+                          n_events=E, lif=lif, native=native),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, E, 3), lambda n, co: (n, 0, 0, 0)),
+            pl.BlockSpec((1, T, E, 1), lambda n, co: (n, 0, 0, 0)),
+            pl.BlockSpec((1, T), lambda n, co: (n, 0)),
+            pl.BlockSpec((K, K, weights.shape[2], co_blk),
+                         lambda n, co: (0, 0, 0, co)),
+            pl.BlockSpec((1, Hp, Wp, co_blk), lambda n, co: (n, 0, 0, co)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Hp, Wp, co_blk), lambda n, co: (n, 0, 0, co)),
+            pl.BlockSpec((1, T, Ho, Wo, co_blk),
+                         lambda n, co: (n, 0, 0, 0, co)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+            jax.ShapeDtypeStruct((N, T, Ho, Wo, Co), acc_dt),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, Hp, Wp, co_blk), acc_dt)],
+        interpret=interpret,
+    )(ev_xyc, gate4, alive2, w_f, v)

@@ -10,9 +10,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.event_conv.kernel import (event_conv_batched_pallas,
-                                             event_conv_pallas)
+                                             event_conv_pallas,
+                                             event_conv_window_pallas)
 from repro.kernels.event_conv.ref import (event_conv_batched_ref,
-                                          event_conv_ref)
+                                          event_conv_ref,
+                                          event_conv_window_ref)
+from repro.kernels.window_common import pad_empty_schedule
 
 
 def _on_tpu() -> bool:
@@ -59,3 +62,30 @@ def event_conv_batched(v: jnp.ndarray, weights: jnp.ndarray,
     return event_conv_batched_pallas(v, weights, ev_xyc, ev_gate,
                                      co_blk=co_blk, interpret=not _on_tpu(),
                                      out_dtype=out_dtype)
+
+
+def event_conv_window(v: jnp.ndarray, weights: jnp.ndarray,
+                      ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                      alive: jnp.ndarray, *, lif, halo: int,
+                      co_blk: int = 128, native: bool = False,
+                      use_pallas: bool | None = None):
+    """Advance N slots through a whole T-timestep window in ONE launch.
+
+    The fused window entry point (``fusion_policy="fused-window"``): the
+    timestep loop runs inside the kernel with the membrane resident in
+    VMEM scratch, so a window costs one launch per layer instead of T.
+    Same auto-selection rules as :func:`event_conv`; ``use_pallas=False``
+    runs the pure-jnp window oracle.  Returns ``(v_out, spikes)`` with
+    spikes shaped ``(N, T, Ho, Wo, Co)``.
+
+    A zero-length event axis still runs the window (leak/fire must
+    advance, unlike the scatter-only kernels) — the schedule is padded to
+    one gated-off event so the launch geometry stays valid.
+    """
+    ev_xyc, ev_gate = pad_empty_schedule(ev_xyc, ev_gate)
+    if use_pallas is False:
+        return event_conv_window_ref(v, weights, ev_xyc, ev_gate, alive,
+                                     lif=lif, halo=halo, native=native)
+    return event_conv_window_pallas(v, weights, ev_xyc, ev_gate, alive,
+                                    lif=lif, halo=halo, co_blk=co_blk,
+                                    native=native, interpret=not _on_tpu())

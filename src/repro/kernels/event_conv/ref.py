@@ -73,6 +73,40 @@ def event_conv_batched_ref(v: jnp.ndarray, weights: jnp.ndarray,
     return jax.vmap(one, in_axes=(0, 0, 0))(v, ev_xyc, ev_gate)
 
 
+def event_conv_window_ref(v: jnp.ndarray, weights: jnp.ndarray,
+                          ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                          alive: jnp.ndarray, *, lif, halo: int,
+                          native: bool = False):
+    """Oracle for the fused window kernel: per slot, per timestep, the full
+    ``leak -> scatter -> clip -> fire -> reset`` chain in kernel order.
+
+    The scatter stage is :func:`event_conv_ref` (already the batched
+    kernel's bit-for-bit contract); the boundary stages come from
+    `kernels.window_common`, the same helpers the Pallas window kernel
+    calls — so oracle and kernel share every line of arithmetic.
+
+    Args:
+      v:       (N, Hp, Wp, Co) halo-padded membranes, storage dtype.
+      weights: (K, K, Ci, Co) shared conv weights (unflipped).
+      ev_xyc:  (N, T, E, 3) int32 packed window schedule, halo coords.
+      ev_gate: (N, T, E) validity gates.
+      alive:   (N, T) per-timestep liveness (frozen timesteps hold state).
+      lif:     the layer's `LifParams`.
+      halo:    conv halo width.
+      native:  int8-native policy (int32 accumulator + boundary
+               saturation).
+
+    Returns ``(v_out, spikes (N, T, Ho, Wo, Co))``.
+    """
+    from repro.kernels.window_common import fused_window_ref
+
+    def scatter(acc, xyc, gate):
+        return event_conv_ref(acc, weights, xyc, gate)
+
+    return fused_window_ref(v, ev_xyc, ev_gate, alive, scatter, lif=lif,
+                            halo=halo, native=native)
+
+
 def selfcheck_batched_bitexact(N: int, H: int, W: int, Co: int, K: int,
                                Ci: int, E: int, seed: int = 0) -> None:
     """Assert the batched kernel == per-slot kernel == oracle, bit-for-bit.

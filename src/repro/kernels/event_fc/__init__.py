@@ -1,3 +1,5 @@
-from repro.kernels.event_fc.ops import event_fc, event_fc_batched
+"""Event-FC kernels: gated weight-row gather accumulate."""
+from repro.kernels.event_fc.ops import (event_fc, event_fc_batched,
+                                        event_fc_window)
 
-__all__ = ["event_fc", "event_fc_batched"]
+__all__ = ["event_fc", "event_fc_batched", "event_fc_window"]

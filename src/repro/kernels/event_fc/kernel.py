@@ -27,6 +27,11 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lif import LifParams
+from repro.kernels.window_common import (clip_fire_reset, leak_boundary,
+                                         saturate_int8, window_acc_dtype)
 
 
 def _event_fc_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
@@ -138,3 +143,116 @@ def event_fc_batched_pallas(v: jnp.ndarray, w: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct(v.shape, out_dtype),
         interpret=interpret,
     )(ev_xyc, gate3, w, v)
+
+
+def _event_fc_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
+                            v_out_ref, s_out_ref, acc_ref, *, n_events: int,
+                            W: int, C: int, lif: LifParams, native: bool):
+    """One grid step: one slot's WHOLE window against one output stripe.
+
+    The fused form of `_event_fc_batched_kernel`: the timestep loop runs
+    inside the kernel with the membrane stripe in ``acc_ref`` VMEM
+    scratch, one launch per window instead of T.  FC layers have no halo,
+    so the stripe is the interior the LIF boundary runs on; the boundary
+    arithmetic comes from `kernels.window_common`.
+
+    ev_ref:    (1, T, E, 3) int32 — packed window schedule, input coords.
+    gate_ref:  (1, T, E, 1) — per-timestep gates, accumulator dtype.
+    alive_ref: (1, T) float32 — per-timestep liveness.
+    w_ref:     (Din, DBLK) — weight stripe, shared by slots.
+    v_ref:     (1, 1, 1, DBLK) — membrane stripe, storage dtype.
+    v_out_ref: (1, 1, 1, DBLK) — final membrane, storage dtype.
+    s_out_ref: (1, T, 1, 1, DBLK) — spike frames, accumulator dtype.
+    acc_ref:   (1, 1, 1, DBLK) VMEM scratch, accumulator dtype.
+    """
+    acc_ref[...] = v_ref[...].astype(acc_ref.dtype)
+    T = s_out_ref.shape[1]
+    for t in range(T):
+        prev = acc_ref[...]
+        acc_ref[0, 0, 0, :] = leak_boundary(acc_ref[0, 0, 0, :], lif)
+
+        def body(i, _, t=t):
+            x = ev_ref[0, t, i, 0]
+            y = ev_ref[0, t, i, 1]
+            c = ev_ref[0, t, i, 2]
+            g = gate_ref[0, t, i, 0]
+            flat = (x * W + y) * C + c
+            row = (w_ref[flat, :] * g).astype(acc_ref.dtype)
+            acc_ref[0, 0, 0, :] = acc_ref[0, 0, 0, :] + row
+            return ()
+
+        jax.lax.fori_loop(0, n_events, body, ())
+        v_new, s = clip_fire_reset(acc_ref[0, 0, 0, :], lif)
+        acc_ref[0, 0, 0, :] = v_new
+        if native:
+            acc_ref[...] = saturate_int8(acc_ref[...])
+        a = alive_ref[0, t] > 0
+        acc_ref[...] = jnp.where(a, acc_ref[...], prev)
+        s_out_ref[0, t, 0, 0, :] = jnp.where(a, s, jnp.zeros_like(s))
+    v_out_ref[...] = acc_ref[...].astype(v_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lif", "in_shape", "d_blk",
+                                             "native", "interpret"))
+def event_fc_window_pallas(v: jnp.ndarray, w: jnp.ndarray,
+                           ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                           alive: jnp.ndarray, *, lif: LifParams,
+                           in_shape: Tuple[int, int, int], d_blk: int = 128,
+                           native: bool = False, interpret: bool = False):
+    """Advance N slots through a whole T-timestep FC window in ONE launch.
+
+    The fused window form of :func:`event_fc_batched_pallas`; results are
+    bitwise identical to iterating the per-step executor.
+
+    Args:
+      v:        (N, 1, 1, Dout) membrane stripes, storage dtype.
+      w:        (Din, Dout) shared weight matrix.
+      ev_xyc:   (N, T, E, 3) int32 packed schedule, input coordinates.
+      ev_gate:  (N, T, E) validity gates.
+      alive:    (N, T) per-timestep liveness.
+      lif:      the layer's LIF plan (static).
+      in_shape: (H, W, C) static input geometry (flattening rule).
+      d_blk:    output-block size (must divide Dout).
+      native:   int8-native policy switch.
+
+    Returns ``(v_out (N, 1, 1, Dout) storage dtype,
+    spikes (N, T, 1, 1, Dout) accumulator dtype)``.
+    """
+    N = v.shape[0]
+    Dout = v.shape[-1]
+    Din = w.shape[0]
+    H, W, C = in_shape
+    if H * W * C != Din:
+        raise ValueError(f"in_shape {in_shape} flattens to {H * W * C} "
+                         f"!= weight rows {Din}")
+    T, E = ev_xyc.shape[1], ev_xyc.shape[2]
+    acc_dt = window_acc_dtype(v.dtype, native)
+    d_blk = min(d_blk, Dout)
+    if Dout % d_blk:
+        raise ValueError(f"Dout={Dout} not divisible by d_blk={d_blk}")
+    gate4 = ev_gate.astype(acc_dt).reshape(N, T, E, 1)
+    alive2 = alive.astype(jnp.float32)
+
+    grid = (N, Dout // d_blk)
+    return pl.pallas_call(
+        functools.partial(_event_fc_window_kernel, n_events=E, W=W, C=C,
+                          lif=lif, native=native),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, E, 3), lambda n, d: (n, 0, 0, 0)),
+            pl.BlockSpec((1, T, E, 1), lambda n, d: (n, 0, 0, 0)),
+            pl.BlockSpec((1, T), lambda n, d: (n, 0)),
+            pl.BlockSpec((Din, d_blk), lambda n, d: (0, d)),
+            pl.BlockSpec((1, 1, 1, d_blk), lambda n, d: (n, 0, 0, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, d_blk), lambda n, d: (n, 0, 0, d)),
+            pl.BlockSpec((1, T, 1, 1, d_blk), lambda n, d: (n, 0, 0, 0, d)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+            jax.ShapeDtypeStruct((N, T, 1, 1, Dout), acc_dt),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 1, 1, d_blk), acc_dt)],
+        interpret=interpret,
+    )(ev_xyc, gate4, alive2, w, v)

@@ -17,8 +17,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.event_fc.kernel import (event_fc_batched_pallas,
-                                           event_fc_pallas)
-from repro.kernels.event_fc.ref import event_fc_batched_ref, event_fc_ref
+                                           event_fc_pallas,
+                                           event_fc_window_pallas)
+from repro.kernels.event_fc.ref import (event_fc_batched_ref, event_fc_ref,
+                                        event_fc_window_ref)
+from repro.kernels.window_common import pad_empty_schedule
 
 
 def _on_tpu() -> bool:
@@ -63,3 +66,27 @@ def event_fc_batched(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
     return event_fc_batched_pallas(v, w, ev_xyc, ev_gate, in_shape=in_shape,
                                    d_blk=d_blk, interpret=not _on_tpu(),
                                    out_dtype=out_dtype)
+
+
+def event_fc_window(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
+                    ev_gate: jnp.ndarray, alive: jnp.ndarray, *, lif,
+                    in_shape: Tuple[int, int, int], d_blk: int = 128,
+                    native: bool = False, use_pallas: bool | None = None):
+    """Advance N slots through a whole T-timestep FC window in ONE launch.
+
+    The fused window entry point (``fusion_policy="fused-window"``) —
+    timestep loop inside the kernel, membrane stripe resident in VMEM
+    scratch.  Same auto-selection rules as :func:`event_fc`;
+    ``use_pallas=False`` runs the pure-jnp window oracle.  Returns
+    ``(v_out, spikes)`` with spikes shaped ``(N, T, 1, 1, Dout)``.
+
+    A zero-length event axis still runs the window (leak/fire must
+    advance) — the schedule is padded to one gated-off event.
+    """
+    ev_xyc, ev_gate = pad_empty_schedule(ev_xyc, ev_gate)
+    if use_pallas is False:
+        return event_fc_window_ref(v, w, ev_xyc, ev_gate, alive, lif=lif,
+                                   in_shape=in_shape, native=native)
+    return event_fc_window_pallas(v, w, ev_xyc, ev_gate, alive, lif=lif,
+                                  in_shape=in_shape, d_blk=d_blk,
+                                  native=native, interpret=not _on_tpu())

@@ -51,6 +51,37 @@ def event_fc_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
     return v
 
 
+def event_fc_window_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
+                        ev_gate: jnp.ndarray, alive: jnp.ndarray, *, lif,
+                        in_shape: Tuple[int, int, int],
+                        native: bool = False):
+    """Oracle for the fused FC window kernel (kernel-order arithmetic).
+
+    The scatter stage is :func:`event_fc_ref`; the per-timestep boundary
+    sequence is `kernels.window_common.fused_window_ref` — the same
+    helpers the Pallas window kernel calls.
+
+    Args:
+      v:        (N, 1, 1, Dout) membrane stripes, storage dtype.
+      w:        (Din, Dout) shared weight matrix.
+      ev_xyc:   (N, T, E, 3) int32 packed schedule, input coordinates.
+      ev_gate:  (N, T, E) validity gates.
+      alive:    (N, T) per-timestep liveness.
+      lif:      the layer's `LifParams`.
+      in_shape: (H, W, C) input geometry.
+      native:   int8-native policy switch.
+
+    Returns ``(v_out, spikes (N, T, 1, 1, Dout))``.
+    """
+    from repro.kernels.window_common import fused_window_ref
+
+    def scatter(acc, xyc, gate):
+        return event_fc_ref(acc, w, xyc, gate, in_shape)
+
+    return fused_window_ref(v, ev_xyc, ev_gate, alive, scatter, lif=lif,
+                            halo=0, native=native)
+
+
 def event_fc_batched_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
                          ev_gate: jnp.ndarray,
                          in_shape: Tuple[int, int, int],

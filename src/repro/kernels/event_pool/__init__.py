@@ -1,3 +1,5 @@
-from repro.kernels.event_pool.ops import event_pool, event_pool_batched
+"""Event-pool kernels: strided per-event one-site accumulate."""
+from repro.kernels.event_pool.ops import (event_pool, event_pool_batched,
+                                          event_pool_window)
 
-__all__ = ["event_pool", "event_pool_batched"]
+__all__ = ["event_pool", "event_pool_batched", "event_pool_window"]

@@ -26,6 +26,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lif import LifParams
+from repro.kernels.window_common import (clip_fire_reset, leak_boundary,
+                                         saturate_int8, window_acc_dtype)
 
 
 def _event_pool_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
@@ -140,3 +145,117 @@ def event_pool_batched_pallas(v: jnp.ndarray, w: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct(v.shape, out_dtype),
         interpret=interpret,
     )(ev_xyc, gate3, w3, v)
+
+
+def _event_pool_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
+                              v_out_ref, s_out_ref, acc_ref, *, stride: int,
+                              n_events: int, lif: LifParams, native: bool):
+    """One grid step: one slot's WHOLE window against its pool slab.
+
+    The fused form of `_event_pool_batched_kernel`: the timestep loop runs
+    inside the kernel with the membrane in ``acc_ref`` VMEM scratch, one
+    launch per window instead of T.  Pool layers have no halo, so the
+    whole slab is the interior the LIF boundary runs on; the boundary
+    arithmetic comes from `kernels.window_common` (bitwise the per-step
+    executor's).
+
+    ev_ref:    (1, T, E, 3) int32 — packed window schedule, input coords.
+    gate_ref:  (1, T, E, 1) — per-timestep gates, accumulator dtype.
+    alive_ref: (1, T) float32 — per-timestep liveness.
+    w_ref:     (1, 1, C) — per-channel weights, shared by slots.
+    v_ref:     (1, Ho, Wo, C) — membrane slab, storage dtype.
+    v_out_ref: (1, Ho, Wo, C) — final membrane, storage dtype.
+    s_out_ref: (1, T, Ho, Wo, C) — spike frames, accumulator dtype.
+    acc_ref:   (1, Ho, Wo, C) VMEM scratch, accumulator dtype.
+    """
+    acc_ref[...] = v_ref[...].astype(acc_ref.dtype)
+    T = s_out_ref.shape[1]
+    Ho, Wo, C = acc_ref.shape[1], acc_ref.shape[2], acc_ref.shape[3]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 1, C), 2)
+    for t in range(T):
+        prev = acc_ref[...]
+        acc_ref[0] = leak_boundary(acc_ref[0], lif)
+
+        def body(i, _, t=t):
+            x = ev_ref[0, t, i, 0]
+            y = ev_ref[0, t, i, 1]
+            c = ev_ref[0, t, i, 2]
+            g = gate_ref[0, t, i, 0]
+            xo = x // stride
+            yo = y // stride
+            ok = ((xo < Ho) & (yo < Wo)).astype(acc_ref.dtype)
+            sel = (lanes == c).astype(acc_ref.dtype)
+            contrib = (sel * w_ref[...] * (g * ok)).astype(acc_ref.dtype)
+            xo = jnp.minimum(xo, Ho - 1)
+            yo = jnp.minimum(yo, Wo - 1)
+            cur = acc_ref[0, pl.dslice(xo, 1), pl.dslice(yo, 1), :]
+            acc_ref[0, pl.dslice(xo, 1), pl.dslice(yo, 1), :] = cur + contrib
+            return ()
+
+        jax.lax.fori_loop(0, n_events, body, ())
+        v_new, s = clip_fire_reset(acc_ref[0], lif)
+        acc_ref[0] = v_new
+        if native:
+            acc_ref[...] = saturate_int8(acc_ref[...])
+        a = alive_ref[0, t] > 0
+        acc_ref[...] = jnp.where(a, acc_ref[...], prev)
+        s_out_ref[0, t] = jnp.where(a, s, jnp.zeros_like(s))
+    v_out_ref[...] = acc_ref[...].astype(v_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lif", "stride", "native",
+                                             "interpret"))
+def event_pool_window_pallas(v: jnp.ndarray, w: jnp.ndarray,
+                             ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                             alive: jnp.ndarray, *, lif: LifParams,
+                             stride: int, native: bool = False,
+                             interpret: bool = False):
+    """Advance N slots through a whole T-timestep pool window in ONE launch.
+
+    The fused window form of :func:`event_pool_batched_pallas`; results
+    are bitwise identical to iterating the per-step executor.
+
+    Args:
+      v:       (N, Ho, Wo, C) membranes, storage dtype.
+      w:       (C,) per-channel weights, shared across slots.
+      ev_xyc:  (N, T, E, 3) int32 packed schedule, input coordinates.
+      ev_gate: (N, T, E) validity gates.
+      alive:   (N, T) per-timestep liveness.
+      lif:     the layer's LIF plan (static).
+      stride:  pooling stride.
+      native:  int8-native policy switch.
+
+    Returns ``(v_out (N, Ho, Wo, C) storage dtype,
+    spikes (N, T, Ho, Wo, C) accumulator dtype)``.
+    """
+    N, Ho, Wo, C = v.shape
+    T, E = ev_xyc.shape[1], ev_xyc.shape[2]
+    acc_dt = window_acc_dtype(v.dtype, native)
+    gate4 = ev_gate.astype(acc_dt).reshape(N, T, E, 1)
+    alive2 = alive.astype(jnp.float32)
+    w3 = (w if jnp.issubdtype(w.dtype, jnp.integer)
+          else w.astype(v.dtype)).reshape(1, 1, C)
+
+    grid = (N,)
+    return pl.pallas_call(
+        functools.partial(_event_pool_window_kernel, stride=stride,
+                          n_events=E, lif=lif, native=native),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, E, 3), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((1, T, E, 1), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((1, T), lambda n: (n, 0)),
+            pl.BlockSpec((1, 1, C), lambda n: (0, 0, 0)),
+            pl.BlockSpec((1, Ho, Wo, C), lambda n: (n, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Ho, Wo, C), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((1, T, Ho, Wo, C), lambda n: (n, 0, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+            jax.ShapeDtypeStruct((N, T, Ho, Wo, C), acc_dt),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, Ho, Wo, C), acc_dt)],
+        interpret=interpret,
+    )(ev_xyc, gate4, alive2, w3, v)

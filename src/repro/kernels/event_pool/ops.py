@@ -15,9 +15,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.event_pool.kernel import (event_pool_batched_pallas,
-                                             event_pool_pallas)
+                                             event_pool_pallas,
+                                             event_pool_window_pallas)
 from repro.kernels.event_pool.ref import (event_pool_batched_ref,
-                                          event_pool_ref)
+                                          event_pool_ref,
+                                          event_pool_window_ref)
+from repro.kernels.window_common import pad_empty_schedule
 
 
 def _on_tpu() -> bool:
@@ -60,3 +63,27 @@ def event_pool_batched(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
     return event_pool_batched_pallas(v, w, ev_xyc, ev_gate, stride=stride,
                                      interpret=not _on_tpu(),
                                      out_dtype=out_dtype)
+
+
+def event_pool_window(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
+                      ev_gate: jnp.ndarray, alive: jnp.ndarray, *, lif,
+                      stride: int, native: bool = False,
+                      use_pallas: bool | None = None):
+    """Advance N slots through a whole T-timestep pool window in ONE launch.
+
+    The fused window entry point (``fusion_policy="fused-window"``) —
+    timestep loop inside the kernel, membrane resident in VMEM scratch.
+    Same auto-selection rules as :func:`event_pool`; ``use_pallas=False``
+    runs the pure-jnp window oracle.  Returns ``(v_out, spikes)`` with
+    spikes shaped ``(N, T, Ho, Wo, C)``.
+
+    A zero-length event axis still runs the window (leak/fire must
+    advance) — the schedule is padded to one gated-off event.
+    """
+    ev_xyc, ev_gate = pad_empty_schedule(ev_xyc, ev_gate)
+    if use_pallas is False:
+        return event_pool_window_ref(v, w, ev_xyc, ev_gate, alive, lif=lif,
+                                     stride=stride, native=native)
+    return event_pool_window_pallas(v, w, ev_xyc, ev_gate, alive, lif=lif,
+                                    stride=stride, native=native,
+                                    interpret=not _on_tpu())

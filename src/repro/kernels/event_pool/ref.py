@@ -50,6 +50,37 @@ def event_pool_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
     return v
 
 
+def event_pool_window_ref(v: jnp.ndarray, w: jnp.ndarray,
+                          ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                          alive: jnp.ndarray, *, lif, stride: int,
+                          native: bool = False):
+    """Oracle for the fused pool window kernel (kernel-order arithmetic).
+
+    The scatter stage is :func:`event_pool_ref`; the per-timestep boundary
+    sequence is `kernels.window_common.fused_window_ref` — the same
+    helpers the Pallas window kernel calls.
+
+    Args:
+      v:       (N, Ho, Wo, C) membranes, storage dtype.
+      w:       (C,) shared per-channel weights.
+      ev_xyc:  (N, T, E, 3) int32 packed schedule, input coordinates.
+      ev_gate: (N, T, E) validity gates.
+      alive:   (N, T) per-timestep liveness.
+      lif:     the layer's `LifParams`.
+      stride:  pooling stride.
+      native:  int8-native policy switch.
+
+    Returns ``(v_out, spikes (N, T, Ho, Wo, C))``.
+    """
+    from repro.kernels.window_common import fused_window_ref
+
+    def scatter(acc, xyc, gate):
+        return event_pool_ref(acc, w, xyc, gate, stride)
+
+    return fused_window_ref(v, ev_xyc, ev_gate, alive, scatter, lif=lif,
+                            halo=0, native=native)
+
+
 def event_pool_batched_ref(v: jnp.ndarray, w: jnp.ndarray,
                            ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
                            stride: int, out_dtype=None) -> jnp.ndarray:

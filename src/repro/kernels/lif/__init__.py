@@ -1,3 +1,4 @@
+"""Fused LIF elementwise kernel: leak → integrate → clip → fire → reset."""
 from repro.kernels.lif.ops import lif_fused
 from repro.kernels.lif.ref import lif_fused_ref
 from repro.kernels.lif.kernel import lif_fused_pallas

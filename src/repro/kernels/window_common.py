@@ -1,0 +1,164 @@
+"""Shared LIF boundary sequence for the fused multi-timestep window kernels.
+
+The fused ``*_window`` kernels (`kernels/event_conv`, `kernels/event_pool`,
+`kernels/event_fc`) run the whole ``leak -> scatter -> clip -> fire ->
+reset`` chain for every timestep of a serving window inside ONE Pallas
+launch, with the membrane carried in VMEM scratch between iterations.  The
+per-timestep boundary arithmetic must stay *bitwise identical* to the
+per-step executor (`core.layer_program.layer_timestep`), which is the
+fused path's exactness oracle — so the boundary ops are not re-derived
+here: :func:`leak_boundary` and :func:`clip_fire_reset` call straight into
+`core.lif` (`apply_leak`, `fire_and_reset`), the single source both
+executors share.
+
+This module is a *leaf* on the kernel side of the layering: it may import
+`core.lif` / `core.quant` (which import no kernels), and every kernel
+package's ``kernel.py`` / ``ref.py`` may import it, but it must never
+import `core.layer_program` (which imports the kernel packages — the one
+cycle the layering forbids).  The two halo-crop helpers are therefore
+restated here rather than imported from the executor.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LifParams, apply_leak, fire_and_reset
+from repro.core.quant import INT8_MAX, INT8_MIN
+
+__all__ = ["INT8_MAX", "INT8_MIN", "clip_fire_reset", "crop_interior",
+           "fused_window_ref", "leak_boundary", "pad_empty_schedule",
+           "saturate_int8", "window_acc_dtype", "write_cropped"]
+
+
+def pad_empty_schedule(ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray):
+    """Pad a zero-length event axis to one gated-off event.
+
+    A fused window must still run its leak/fire boundaries even with no
+    events (unlike the scatter-only kernels, where an empty batch is the
+    identity), so the ``(N, T, 0, 3)`` schedule is widened to one padding
+    event per timestep with ``gate = 0`` to keep the launch geometry
+    valid.  Shared by every ``*_window`` ops wrapper.
+    """
+    if ev_xyc.shape[2] == 0:
+        ev_xyc = jnp.pad(ev_xyc, [(0, 0), (0, 0), (0, 1), (0, 0)])
+        ev_gate = jnp.pad(ev_gate, [(0, 0), (0, 0), (0, 1)])
+    return ev_xyc, ev_gate
+
+
+def window_acc_dtype(storage_dtype, native: bool):
+    """Accumulator dtype a fused window computes in.
+
+    The native integer path widens its int8 storage slab to int32 for the
+    whole in-kernel window (the resident-phase analogue of the per-step
+    executor's per-timestep widening); the carrier path accumulates in the
+    storage dtype itself.
+    """
+    return jnp.int32 if native else jnp.dtype(storage_dtype)
+
+
+def leak_boundary(v: jnp.ndarray, lif: LifParams) -> jnp.ndarray:
+    """One timestep boundary's leak on the interior values (dt == 1).
+
+    Delegates to `core.lif.apply_leak` so the arithmetic is the per-step
+    executor's, bit for bit.
+    """
+    return apply_leak(v, lif.leak, 1, lif.leak_mode)
+
+
+def clip_fire_reset(v: jnp.ndarray, lif: LifParams):
+    """Finish a timestep on the interior: clip, threshold, emit, reset.
+
+    Returns ``(v_next, spikes)`` in ``v.dtype``.  The clip is the 8-bit
+    state saturation (`layer_program.clip_state` semantics: a no-op when
+    the layer has no ``state_clip``); fire/reset delegate to
+    `core.lif.fire_and_reset`.
+    """
+    if lif.state_clip is not None:
+        c = jnp.asarray(lif.state_clip, v.dtype)
+        v = jnp.clip(v, -c, c)
+    return fire_and_reset(v, lif)
+
+
+def saturate_int8(v: jnp.ndarray) -> jnp.ndarray:
+    """Apply int8 storage saturation in the accumulator dtype.
+
+    The per-step native executor downcasts the whole slab (halo included)
+    to int8 at every timestep boundary; inside a fused window the state
+    stays in the int32 accumulator, so the saturation is expressed as a
+    clip to the int8 rails — the values are exactly the downcast-upcast
+    round trip's.
+    """
+    return jnp.clip(v, INT8_MIN, INT8_MAX)
+
+
+def crop_interior(vp: jnp.ndarray, h: int) -> jnp.ndarray:
+    """Crop the halo off ``(..., Hp, Wp, C)`` — the logical layer geometry.
+
+    Restates `core.layer_program.interior` (see module doc for why it is
+    not imported).
+    """
+    if h == 0:
+        return vp
+    return vp[..., h:vp.shape[-3] - h, h:vp.shape[-2] - h, :]
+
+
+def write_cropped(vp: jnp.ndarray, x: jnp.ndarray, h: int) -> jnp.ndarray:
+    """Write the logical interior back into the halo-padded buffer.
+
+    Restates `core.layer_program.write_interior`.
+    """
+    if h == 0:
+        return x
+    return vp.at[..., h:vp.shape[-3] - h, h:vp.shape[-2] - h, :].set(x)
+
+
+def fused_window_ref(v: jnp.ndarray, ev_xyc: jnp.ndarray,
+                     ev_gate: jnp.ndarray, alive: jnp.ndarray,
+                     scatter: Callable, *, lif: LifParams, halo: int,
+                     native: bool):
+    """Pure-jnp oracle driver shared by every ``*_window_ref``.
+
+    Runs the fused window sequence — per timestep ``leak -> scatter ->
+    clip -> fire -> reset`` with frozen-timestep fallback and (native) int8
+    boundary saturation — per slot, in exactly the order the Pallas window
+    kernels execute it.  ``scatter(acc, xyc_t, gate_t)`` is the layer
+    kind's single-slot batch-scatter oracle (`event_conv_ref` and
+    friends), already bit-for-bit the kernels' inner event loop.
+
+    Args:
+      v:       (N, Hp, Wp, C) membranes in storage dtype.
+      ev_xyc:  (N, T, E, 3) int32 packed window schedule.
+      ev_gate: (N, T, E) validity gates.
+      alive:   (N, T) per-timestep liveness.
+      scatter: per-slot scatter oracle closing over weights/geometry.
+      lif:     the layer's LIF plan.
+      halo:    halo width (0 for pool/fc).
+      native:  int8-native policy switch.
+
+    Returns ``(v_out (N, ...) storage dtype, spikes (N, T, ...)
+    accumulator dtype)``.
+    """
+    acc_dt = window_acc_dtype(v.dtype, native)
+    T = ev_xyc.shape[1]
+
+    def one(vp, xyc, gate, al):
+        acc = vp.astype(acc_dt)
+        frames = []
+        for t in range(T):
+            prev = acc
+            acc = write_cropped(acc, leak_boundary(crop_interior(acc, halo),
+                                                   lif), halo)
+            acc = scatter(acc, xyc[t], gate[t].astype(acc_dt))
+            v_new, s = clip_fire_reset(crop_interior(acc, halo), lif)
+            acc = write_cropped(acc, v_new, halo)
+            if native:
+                acc = saturate_int8(acc)
+            a = al[t] > 0
+            acc = jnp.where(a, acc, prev)
+            frames.append(jnp.where(a, s, jnp.zeros_like(s)))
+        return acc.astype(vp.dtype), jnp.stack(frames)
+
+    return jax.vmap(one)(v, ev_xyc, ev_gate, alive)

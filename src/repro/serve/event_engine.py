@@ -40,10 +40,14 @@ the default float32 carrier, or ``"int8-native"`` (paper §III-D4) where
 the resident membrane slabs are int8, the weights are int8 codes from
 `core.quant.quantize_net`, and scatters accumulate in int32 — bitwise
 identical results, 4x less resident state and strictly smaller launches.
-Every layer kind is one slot-batched Pallas launch per timestep
-(`kernels/event_conv`, `kernels/event_pool`,
-`kernels/event_fc`), with inter-layer event routing
-(`layer_program.frame_to_events`) staying on device — so engine outputs
+``fusion_policy`` selects the window lowering: the default
+``"fused-window"`` runs each layer's WHOLE window — leak, scatter, clip,
+fire, reset for every timestep — in ONE fused Pallas launch
+(`kernels/*/..._window` kernels, membrane resident in VMEM scratch), so a
+window costs L launches instead of L×window; ``"per-step"`` is the
+bitwise-identical oracle lowering with one slot-batched scatter launch
+per layer per timestep.  Either way inter-layer event routing
+(`layer_program.frame_to_events`) stays on device — so engine outputs
 match the dense path (`sne_net.dense_apply`) up to float summation order,
 and each scatter is bit-for-bit its single-stream kernel per slab.
 
@@ -76,7 +80,7 @@ import numpy as np
 from repro.core import events as ev
 from repro.core.econv import EConvParams
 from repro.core.engine import SneConfig
-from repro.core.layer_program import (F32_CARRIER, LayerOp,
+from repro.core.layer_program import (F32_CARRIER, FUSED_WINDOW, LayerOp,
                                       check_native_weights, compile_program,
                                       state_dtype, window_step)
 from repro.core.layer_program import \
@@ -139,7 +143,16 @@ class EventServeEngine:
                  sne_cfg: Optional[SneConfig] = None,
                  n_parallel_slices: Optional[int] = None,
                  co_blk: int = 128, use_pallas: Optional[bool] = None,
-                 idle_skip: bool = True, dtype_policy: str = F32_CARRIER):
+                 idle_skip: bool = True, dtype_policy: str = F32_CARRIER,
+                 fusion_policy: str = FUSED_WINDOW):
+        """Compile the network into the engine's jitted per-window step.
+
+        ``dtype_policy`` selects the datapath dtype domain;
+        ``fusion_policy`` the window lowering — the default
+        ``"fused-window"`` runs each layer's whole window in one Pallas
+        launch (L launches per window); ``"per-step"`` is the bitwise-
+        identical oracle lowering (L×window launches).
+        """
         if n_slots < 1 or window < 1:
             raise ValueError("need n_slots >= 1 and window >= 1")
         # fail fast — not inside _finish after a request was fully served
@@ -150,12 +163,13 @@ class EventServeEngine:
         self.N = n_slots
         self.W = window
         self.dtype_policy = dtype_policy
+        self.fusion_policy = fusion_policy
         # compile the network once; the program is the engine's datapath
-        # (compile also validates the spec against the dtype policy)
+        # (compile also validates the spec against both policies)
         self.program = compile_program(
             spec, step_capacities=(tuple(step_capacities)
                                    if step_capacities is not None else None),
-            dtype_policy=dtype_policy)
+            dtype_policy=dtype_policy, fusion_policy=fusion_policy)
         # fail at construction, not at first trace: the native datapath
         # executes integer codes (same single-sourced check the executor
         # applies per scatter — see layer_program.check_native_weights)
@@ -456,9 +470,12 @@ class EventServeEngine:
             self.acc_drops[:, idx] += drops_np[:, :A]
         self.dense_ts[idx] += alive[:, idx].sum(axis=0).astype(np.int64)
         self.stats["step_calls"] += 1
-        # every layer (conv, pool, fc) is one slot-batched scatter launch
-        # per timestep in the program executor
-        self.stats["kernel_launches"] += self.W * len(self.program.ops)
+        # fused-window: ONE launch per layer per window; per-step: one
+        # slot-batched scatter launch per layer per timestep
+        if self.program.fusion_policy == FUSED_WINDOW:
+            self.stats["kernel_launches"] += len(self.program.ops)
+        else:
+            self.stats["kernel_launches"] += self.W * len(self.program.ops)
 
     def _finish(self, slot: int) -> None:
         req = self.slot_req[slot]

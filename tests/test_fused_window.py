@@ -1,0 +1,428 @@
+"""Fused-window parity: L-launch windows vs the per-step oracle, bitwise.
+
+The tentpole contract of the fused window lowering: a `window_step` run
+under ``fusion_policy="fused-window"`` — the whole ``leak -> scatter ->
+clip -> fire -> reset`` chain over all T timesteps of a window in ONE
+Pallas launch per layer, membrane carried in VMEM scratch — computes
+*exactly* what the per-step driver (one scatter launch per layer per
+timestep) computes: states, spike routing, class counts and telemetry
+counters, bit for bit, under BOTH dtype policies and both kernel modes
+(Pallas and the pure-jnp window oracles).
+
+Hypothesis strategies draw a single integer seed and derive the structure
+(layer kinds x strides x prime widths x soft/hard reset x leak modes)
+from it with numpy — identical under real hypothesis (CI) and the
+deterministic fallback shim (container), mirroring
+`tests/test_int_datapath.py`.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:           # container has no hypothesis; see the shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import layer_program as lp
+from repro.core.econv import EConvParams, EConvSpec
+from repro.core.lif import LifParams
+from repro.core.quant import INT4_MAX, INT4_MIN, quantize_net
+from repro.core.sne_net import SNNSpec, dvs_gesture_net, init_snn, tiny_net
+from repro.serve.event_engine import EventRequest, EventServeEngine
+
+F32, I8 = lp.F32_CARRIER, lp.INT8_NATIVE
+FUSED, STEP = lp.FUSED_WINDOW, lp.PER_STEP
+
+
+# ---------------------------------------------------------------------------
+# seed-derived generators (structure + data from one integer)
+# ---------------------------------------------------------------------------
+
+def _rand_layer(rng) -> EConvSpec:
+    """One random integer-domain layer: kind x geometry x reset x leak.
+
+    Channel widths include primes and values far from the default
+    co_blk=128 block (divisor snapping), strides 2-4, BOTH reset modes
+    (the window driver, unlike the stream driver, serves soft resets).
+    """
+    kind = ["conv", "pool", "fc"][rng.integers(0, 3)]
+    widths = [1, 2, 3, 5, 7, 11, 13, 16]
+    H = int(rng.integers(4, 10))
+    W = int(rng.integers(4, 10))
+    Ci = int(widths[rng.integers(0, len(widths))])
+    lif = LifParams(
+        threshold=float(rng.integers(1, 9)),
+        leak=float(rng.integers(0, 4)),
+        leak_mode=["toward_zero", "subtract"][rng.integers(0, 2)],
+        reset_mode=["zero", "subtract"][rng.integers(0, 2)],
+        state_clip=127.0,
+    )
+    if kind == "conv":
+        K = int([1, 3, 5][rng.integers(0, 3)])
+        return EConvSpec("conv", (H, W, Ci),
+                         int(widths[rng.integers(0, len(widths))]),
+                         kernel=K,
+                         padding=int(rng.integers(0, (K + 1) // 2 + 1)),
+                         lif=lif)
+    if kind == "pool":
+        s = int(rng.integers(2, 5))
+        return EConvSpec("pool", (H, W, Ci), Ci, kernel=s, stride=s, lif=lif)
+    return EConvSpec("fc", (H, W, Ci),
+                     int(widths[rng.integers(0, len(widths))]), lif=lif)
+
+
+def _rand_codes(rng, spec: EConvSpec) -> EConvParams:
+    """Random int4-range weight codes as native int8."""
+    if spec.kind == "conv":
+        shape = (spec.kernel, spec.kernel, spec.in_shape[2],
+                 spec.out_channels)
+    elif spec.kind == "pool":
+        shape = (spec.in_shape[2],)
+    else:
+        H, W, C = spec.in_shape
+        shape = (H * W * C, spec.out_channels)
+    q = rng.integers(INT4_MIN, INT4_MAX + 1, size=shape).astype(np.int8)
+    return EConvParams(w=jnp.asarray(q))
+
+
+def _rand_net(rng) -> SNNSpec:
+    """A random 2-3 layer chain whose geometries compose, random resets."""
+    def lif():
+        return LifParams(threshold=float(rng.integers(1, 5)),
+                         leak=float(rng.integers(0, 3)),
+                         leak_mode=["toward_zero",
+                                    "subtract"][rng.integers(0, 2)],
+                         reset_mode=["zero", "subtract"][rng.integers(0, 2)],
+                         state_clip=127.0)
+    H = int(rng.integers(6, 11))
+    Ci = int([2, 3][rng.integers(0, 2)])
+    layers = []
+    if rng.integers(0, 2):
+        K = int([1, 3][rng.integers(0, 2)])
+        layers.append(EConvSpec("conv", (H, H, Ci),
+                                int([3, 5, 11][rng.integers(0, 3)]),
+                                kernel=K, padding=K // 2, lif=lif()))
+    else:
+        s = int(rng.integers(2, 4))
+        layers.append(EConvSpec("pool", (H, H, Ci), Ci, kernel=s, stride=s,
+                                lif=lif()))
+    if rng.integers(0, 2) and min(layers[-1].out_shape[:2]) >= 2:
+        layers.append(EConvSpec("pool", layers[-1].out_shape,
+                                layers[-1].out_shape[2], kernel=2, stride=2,
+                                lif=lif()))
+    n_classes = int([4, 7][rng.integers(0, 2)])
+    layers.append(EConvSpec("fc", layers[-1].out_shape, n_classes,
+                            lif=lif()))
+    return SNNSpec(layers=tuple(layers), n_timesteps=int(rng.integers(4, 9)),
+                   n_classes=n_classes)
+
+
+def _rand_window(rng, spec, E0, N, W):
+    """One random packed window schedule: events, gates, liveness."""
+    H, Wd, C = spec.in_shape
+    xyc = jnp.asarray(np.stack([rng.integers(0, H, (W, N, E0)),
+                                rng.integers(0, Wd, (W, N, E0)),
+                                rng.integers(0, C, (W, N, E0))],
+                               -1).astype(np.int32))
+    gate = jnp.asarray((rng.random((W, N, E0)) < 0.5).astype(np.float32))
+    alive = jnp.asarray((rng.random((W, N)) < 0.9).astype(np.float32))
+    return xyc, gate, alive
+
+
+def _run_window(spec, params, caps, xyc, gate, alive, pre_dt, N,
+                dtype_policy, fusion_policy, use_pallas):
+    prog = lp.compile_program(spec, step_capacities=caps,
+                              dtype_policy=dtype_policy,
+                              fusion_policy=fusion_policy)
+    states = tuple(lp.padded_state(op, n_slots=N) for op in prog.ops)
+    cc0 = jnp.zeros((N, spec.n_classes), jnp.float32)
+    return lp.window_step(params, states, cc0, xyc, gate, alive, pre_dt,
+                          program=prog, use_pallas=use_pallas)
+
+
+def _assert_windows_equal(got, want, ops, cast_states=False):
+    """states/class_counts/counts/drops bitwise equal (interiors compared
+    when the two runs store different dtypes)."""
+    sg, ccg, cg, dg = got
+    sw, ccw, cw, dw = want
+    np.testing.assert_array_equal(np.asarray(ccg), np.asarray(ccw))
+    np.testing.assert_array_equal(np.asarray(cg), np.asarray(cw))
+    np.testing.assert_array_equal(np.asarray(dg), np.asarray(dw))
+    for a, b, op in zip(sg, sw, ops):
+        a, b = np.asarray(a), np.asarray(b)
+        if cast_states:
+            a = np.asarray(lp.interior(a, op.halo)).astype(np.float32)
+            b = np.asarray(lp.interior(b, op.halo)).astype(np.float32)
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# single-layer fused launch vs iterated per-step timesteps, every kind
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=20, deadline=None)
+def test_layer_window_parity(seed):
+    """One fused `layer_window` launch == T iterated `layer_timestep`s —
+    membranes AND every timestep's spike frame, both kernel modes, both
+    dtype policies, random kinds/strides/prime widths/resets/leaks."""
+    rng = np.random.default_rng(seed)
+    spec = _rand_layer(rng)
+    codes = _rand_codes(rng, spec)
+    N, T, E = int(rng.integers(1, 4)), int(rng.integers(1, 5)), \
+        int(rng.integers(1, 17))
+    H, Wd, C = spec.in_shape
+    xyc = jnp.asarray(np.stack([rng.integers(0, H, (T, N, E)),
+                                rng.integers(0, Wd, (T, N, E)),
+                                rng.integers(0, C, (T, N, E))],
+                               -1).astype(np.int32))
+    gate = jnp.asarray((rng.random((T, N, E)) < 0.7).astype(np.float32))
+    alive = jnp.asarray((rng.random((T, N)) < 0.8).astype(np.float32))
+    for policy in (F32, I8):
+        op = lp.layer_op(spec, dtype_policy=policy)
+        params = (codes if policy == I8
+                  else EConvParams(w=codes.w.astype(jnp.float32)))
+        Ho, Wo, Co = spec.out_shape
+        v0 = rng.integers(-100, 101, size=(N, Ho, Wo, Co)).astype(np.int8)
+        vp = lp.write_interior(
+            lp.padded_state(op, n_slots=N),
+            jnp.asarray(v0).astype(lp.state_dtype(op)), op.halo)
+        vp_ps, frames = vp, []
+        for t in range(T):
+            vp_ps, s = lp.layer_timestep(op, params, vp_ps, xyc[t], gate[t],
+                                         alive[t], use_pallas=False)
+            frames.append(s)
+        frames = jnp.stack(frames)
+        for mode in (None, False):
+            v_f, s_f = lp.layer_window(op, params, vp, xyc, gate, alive,
+                                       use_pallas=mode)
+            np.testing.assert_array_equal(np.asarray(v_f),
+                                          np.asarray(vp_ps))
+            np.testing.assert_array_equal(np.asarray(s_f),
+                                          np.asarray(frames))
+
+
+# ---------------------------------------------------------------------------
+# whole-network window_step: fused vs per-step, both dtype policies
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=8, deadline=None)
+def test_window_step_fusion_parity(seed):
+    """`window_step` under the fused program must reproduce the per-step
+    program's states, class counts and telemetry counters bitwise, for
+    both dtype policies and both kernel modes."""
+    rng = np.random.default_rng(seed)
+    spec = _rand_net(rng)
+    codes = [_rand_codes(rng, l) for l in spec.layers]
+    caps = tuple(min(c, 64) for c in
+                 (lp.layer_step_capacity(l) for l in spec.layers))
+    N, W = 2, 3
+    xyc, gate, alive = _rand_window(rng, spec, caps[0], N, W)
+    pre_dt = jnp.zeros((N,), jnp.int32)
+    floats = [EConvParams(w=p.w.astype(jnp.float32)) for p in codes]
+    for policy, params in ((F32, floats), (I8, codes)):
+        want = _run_window(spec, params, caps, xyc, gate, alive, pre_dt, N,
+                           policy, STEP, False)
+        ops = lp.compile_program(spec, step_capacities=caps,
+                                 dtype_policy=policy).ops
+        for mode in (None, False):
+            got = _run_window(spec, params, caps, xyc, gate, alive, pre_dt,
+                              N, policy, FUSED, mode)
+            _assert_windows_equal(got, want, ops)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=5, deadline=None)
+def test_window_step_fused_cross_policy(seed):
+    """Under the fused lowering, int8-native must still equal the float
+    carrier bitwise (the dtype-policy contract survives fusion)."""
+    rng = np.random.default_rng(seed)
+    spec = _rand_net(rng)
+    codes = [_rand_codes(rng, l) for l in spec.layers]
+    caps = tuple(min(c, 64) for c in
+                 (lp.layer_step_capacity(l) for l in spec.layers))
+    N, W = 2, 3
+    xyc, gate, alive = _rand_window(rng, spec, caps[0], N, W)
+    pre_dt = jnp.zeros((N,), jnp.int32)
+    sf, ccf, cf, df = _run_window(
+        spec, [EConvParams(w=p.w.astype(jnp.float32)) for p in codes],
+        caps, xyc, gate, alive, pre_dt, N, F32, FUSED, False)
+    si, cci, ci, di = _run_window(spec, codes, caps, xyc, gate, alive,
+                                  pre_dt, N, I8, FUSED, False)
+    ops = lp.compile_program(spec, step_capacities=caps,
+                             dtype_policy=I8).ops
+    np.testing.assert_array_equal(np.asarray(ccf), np.asarray(cci))
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(ci))
+    np.testing.assert_array_equal(np.asarray(df), np.asarray(di))
+    for a, b, op in zip(sf, si, ops):
+        assert b.dtype == jnp.int8
+        np.testing.assert_array_equal(
+            np.asarray(lp.interior(b, op.halo)).astype(np.float32),
+            np.asarray(lp.interior(a, op.halo)))
+
+
+def test_full_dvs_gesture_fused_window_parity():
+    """One fused window step of the paper's full-geometry Fig. 6 network
+    (128x128x2 input, all 7 layers) must equal the per-step oracle
+    bitwise on every layer's membrane and the class counts, under both
+    dtype policies."""
+    spec = dvs_gesture_net(n_timesteps=8)
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    qn = quantize_net(params, spec)
+    caps = (64,) * len(spec.layers)
+    rng = np.random.default_rng(0)
+    N, W, E0 = 1, 2, 64
+    H, Wd, C = qn.spec.in_shape
+    xyc = jnp.asarray(np.stack([rng.integers(0, H, (W, N, E0)),
+                                rng.integers(0, Wd, (W, N, E0)),
+                                rng.integers(0, C, (W, N, E0))],
+                               -1).astype(np.int32))
+    gate = jnp.asarray(np.ones((W, N, E0), np.float32))
+    alive = jnp.ones((W, N), jnp.float32)
+    pre_dt = jnp.zeros((N,), jnp.int32)
+    for policy in (F32, I8):
+        p = qn.params_for(policy)
+        want = _run_window(qn.spec, p, caps, xyc, gate, alive, pre_dt, N,
+                           policy, STEP, False)
+        got = _run_window(qn.spec, p, caps, xyc, gate, alive, pre_dt, N,
+                          policy, FUSED, False)
+        ops = lp.compile_program(qn.spec, step_capacities=caps,
+                                 dtype_policy=policy).ops
+        _assert_windows_equal(got, want, ops)
+
+
+# ---------------------------------------------------------------------------
+# served end to end: the engine's default IS the fused lowering
+# ---------------------------------------------------------------------------
+
+def test_engine_fused_default_matches_per_step():
+    """A served cohort (idle stretches included, so the skip/compaction
+    path is exercised) must decode identically across fusion policies,
+    and the fused engine must account W-times fewer launches."""
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    rng = np.random.default_rng(2)
+    spikes = [(rng.random((spec.n_timesteps,) + spec.in_shape) < 0.08)
+              .astype(np.float32) for _ in range(3)]
+    spikes[1][4:12] = 0.0   # idle stretch: exercises skip + compaction
+    out = {}
+    for fusion in (FUSED, STEP):
+        eng = EventServeEngine(spec, params, n_slots=2, window=4,
+                               use_pallas=False, fusion_policy=fusion)
+        assert eng.program.fusion_policy == fusion
+        reqs = [EventRequest.from_dense(i, jnp.asarray(s))
+                for i, s in enumerate(spikes)]
+        eng.run(reqs)
+        out[fusion] = (np.stack([r.class_counts for r in reqs]),
+                       np.stack([np.asarray(r.telemetry.per_layer_events)
+                                 for r in reqs]),
+                       eng.stats["kernel_launches"])
+    np.testing.assert_array_equal(out[FUSED][0], out[STEP][0])
+    np.testing.assert_array_equal(out[FUSED][1], out[STEP][1])
+    assert out[STEP][2] == 4 * out[FUSED][2]
+    # fused is the default
+    eng = EventServeEngine(spec, params, n_slots=1, use_pallas=False)
+    assert eng.program.fusion_policy == FUSED
+
+
+def test_soft_reset_frozen_timesteps_fused():
+    """Soft-reset layers can sit above threshold at a boundary; a frozen
+    (alive == 0) timestep must neither fire nor leak them — the exact
+    per-step freeze semantics, inside the fused kernel."""
+    lif = LifParams(threshold=1.0, leak=1.0, reset_mode="subtract",
+                    state_clip=127.0)
+    spec = EConvSpec("fc", (2, 2, 1), 3, lif=lif)
+    params = EConvParams(w=jnp.ones((4, 3), jnp.int8) * 5)
+    op = lp.layer_op(spec)
+    fparams = EConvParams(w=params.w.astype(jnp.float32))
+    N, T, E = 1, 3, 2
+    xyc = jnp.zeros((T, N, E, 3), jnp.int32)
+    # one event at t=0 pushes the stripe above threshold; t=1 is frozen
+    # (no fire, no leak), t=2 is live again
+    gate = jnp.asarray(np.array([[[1., 0.]], [[0., 0.]], [[0., 0.]]],
+                                np.float32))
+    alive = jnp.asarray(np.array([[1.], [0.], [1.]], np.float32))
+    vp = lp.padded_state(op, n_slots=N)
+    vp_ps, frames = vp, []
+    for t in range(T):
+        vp_ps, s = lp.layer_timestep(op, fparams, vp_ps, xyc[t], gate[t],
+                                     alive[t], use_pallas=False)
+        frames.append(s)
+    for mode in (None, False):
+        v_f, s_f = lp.layer_window(op, fparams, vp, xyc, gate, alive,
+                                   use_pallas=mode)
+        np.testing.assert_array_equal(np.asarray(v_f), np.asarray(vp_ps))
+        np.testing.assert_array_equal(np.asarray(s_f),
+                                      np.asarray(jnp.stack(frames)))
+    # the frozen timestep really emitted nothing
+    assert float(jnp.sum(jnp.stack(frames)[1])) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# policy plumbing + degenerate schedules
+# ---------------------------------------------------------------------------
+
+def test_unknown_fusion_policy_rejected():
+    with pytest.raises(ValueError, match="unknown fusion policy"):
+        lp.compile_program(tiny_net(), fusion_policy="per-galaxy")
+
+
+def test_fusion_policy_in_program_cache_key():
+    spec = tiny_net()
+    a = lp.compile_program(spec, fusion_policy=STEP)
+    b = lp.compile_program(spec, fusion_policy=FUSED)
+    assert a is not b and a.fusion_policy == STEP \
+        and b.fusion_policy == FUSED
+
+
+def test_zero_event_axis_still_advances_window():
+    """A window whose schedule has a zero-length event axis still leaks
+    and fires (unlike the scatter-only kernels, where empty == identity):
+    the padded gated-off schedule must equal per-step on zero events."""
+    spec = EConvSpec("fc", (2, 2, 1), 2,
+                     lif=LifParams(threshold=100.0, leak=1.0,
+                                   state_clip=127.0))
+    op = lp.layer_op(spec)
+    params = EConvParams(w=jnp.ones((4, 2), jnp.float32))
+    N, T = 2, 3
+    vp = lp.write_interior(lp.padded_state(op, n_slots=N),
+                           jnp.full((N, 1, 1, 2), 40.0, jnp.float32),
+                           op.halo)
+    xyc0 = jnp.zeros((T, N, 0, 3), jnp.int32)
+    gate0 = jnp.zeros((T, N, 0), jnp.float32)
+    alive = jnp.ones((T, N), jnp.float32)
+    vp_ps = vp
+    for t in range(T):
+        vp_ps, _ = lp.layer_timestep(
+            op, params, vp_ps, jnp.zeros((N, 1, 3), jnp.int32),
+            jnp.zeros((N, 1), jnp.float32), alive[t], use_pallas=False)
+    for mode in (None, False):
+        v_f, _ = lp.layer_window(op, params, vp, xyc0, gate0, alive,
+                                 use_pallas=mode)
+        np.testing.assert_array_equal(np.asarray(v_f), np.asarray(vp_ps))
+    # the leak really ran: 3 steps of leak=1 from 40
+    assert float(np.asarray(v_f)[0, 0, 0, 0]) == 37.0
+
+
+def test_quantized_tiny_net_fused_engine_round_trip():
+    """The quantized tiny_net through the *fused* engine, both dtype
+    policies, bitwise-equal decode (the policy-matrix corner the golden
+    replay pins on real data, here on synthetic)."""
+    spec = tiny_net()
+    qn = quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec)
+    rng = np.random.default_rng(4)
+    spikes = jnp.asarray(
+        (rng.random((qn.spec.n_timesteps,) + qn.spec.in_shape) < 0.1)
+        .astype(np.float32))
+    counts = {}
+    for pol in (F32, I8):
+        eng = EventServeEngine(qn.spec, qn.params_for(pol), n_slots=1,
+                               window=4, use_pallas=False,
+                               dtype_policy=pol)
+        req = EventRequest.from_dense(0, spikes)
+        eng.run([req])
+        counts[pol] = req.class_counts
+    np.testing.assert_array_equal(counts[F32], counts[I8])

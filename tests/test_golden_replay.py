@@ -2,12 +2,14 @@
 
 `samples/tiny_gesture.npz` is segmented exactly as `examples/serve_events
 --source file` does and served through `EventServeEngine` on the quantized
-`tiny_net` under BOTH dtype policies.  Spike rasters (per-request
-class-count vectors — the engine's rate-decode output) and telemetry
-counters (per-layer consumed events, inter-layer drops, predictions) are
-compared against a committed golden file, so an end-to-end serving
-regression is caught without a live sensor — and the two policies are
-pinned bitwise-identical on real data, not just synthetic streams.
+`tiny_net` under BOTH dtype policies and BOTH fusion policies (the
+fused-window default — one launch per layer per window — and the per-step
+oracle).  Spike rasters (per-request class-count vectors — the engine's
+rate-decode output) and telemetry counters (per-layer consumed events,
+inter-layer drops, predictions) are compared against a committed golden
+file, so an end-to-end serving regression is caught without a live sensor
+— and every policy combination is pinned bitwise-identical on real data,
+not just synthetic streams.
 
 Everything on the path is integer arithmetic (quantized codes, binary
 spikes), so the golden values are exact across jax versions/backends.
@@ -33,7 +35,7 @@ GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
 WINDOW_US = 1000   # examples/serve_events.py --source file default
 
 
-def _serve(dtype_policy: str):
+def _serve(dtype_policy: str, fusion_policy: str = "fused-window"):
     spec = tiny_net()
     qn = quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec)
     rec = load_recording(sample_recording_path())
@@ -41,7 +43,8 @@ def _serve(dtype_policy: str):
                              WINDOW_US)
     eng = EventServeEngine(qn.spec, qn.params_for(dtype_policy), n_slots=2,
                            window=4, use_pallas=False,
-                           dtype_policy=dtype_policy)
+                           dtype_policy=dtype_policy,
+                           fusion_policy=fusion_policy)
     eng.run(reqs)
     tele = [r.telemetry for r in reqs]
     return {
@@ -60,27 +63,36 @@ def _serve(dtype_policy: str):
 
 @pytest.fixture(scope="module")
 def served():
-    return {pol: _serve(pol) for pol in ("f32-carrier", "int8-native")}
+    return {(pol, fus): _serve(pol, fus)
+            for pol in ("f32-carrier", "int8-native")
+            for fus in ("fused-window", "per-step")}
 
 
 def test_policies_agree_on_real_recording(served):
-    """int8-native == f32-carrier, bitwise, on the bundled sensor data."""
-    a, b = served["f32-carrier"], served["int8-native"]
-    for k in a:
-        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    """Every (dtype, fusion) policy combination — int8-native vs the f32
+    carrier, fused windows vs per-step — must agree bitwise on the
+    bundled sensor data."""
+    base = served[("f32-carrier", "per-step")]
+    for key, res in served.items():
+        for k in base:
+            np.testing.assert_array_equal(res[k], base[k],
+                                          err_msg=f"{key}:{k}")
 
 
 def test_golden_replay(served):
-    """Both policies must reproduce the committed golden file exactly."""
+    """Every policy combination must reproduce the committed golden file
+    exactly (the golden was recorded pre-fusion; the fused engine
+    replaying it bitwise IS the fused path's end-to-end exactness
+    proof on real data)."""
     assert os.path.exists(GOLDEN), (
         f"golden file missing: {GOLDEN} — regenerate with "
         f"PYTHONPATH=src:tests python tests/test_golden_replay.py --regen")
     gold = np.load(GOLDEN)
-    for pol, res in served.items():
+    for key, res in served.items():
         for k in res:
             np.testing.assert_array_equal(
                 res[k], gold[k],
-                err_msg=f"{pol}:{k} diverged from the golden replay — if "
+                err_msg=f"{key}:{k} diverged from the golden replay — if "
                         f"intentional, regenerate tests/golden/")
 
 

@@ -1,0 +1,106 @@
+"""Markdown link check for README + docs/ (CI `docs` job).
+
+    python tools/check_md_links.py README.md docs
+
+Validates, for every given markdown file (directories are walked for
+``*.md``):
+
+  * **relative links** ``[text](path)`` — the target file/directory must
+    exist relative to the linking file;
+  * **anchors** ``[text](#heading)`` and ``[text](file.md#heading)`` —
+    the target document must contain a heading whose GitHub slug matches;
+  * bare ``http(s)://`` links are *not* fetched (CI stays offline); they
+    are only checked for balanced syntax.
+
+Exit code 1 with a per-link report when anything is dead — a docs/ tree
+that silently rots is worse than none.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+CODE_SPAN_RE = re.compile(r"`[^`\n]*`")
+
+
+def _prose_of(text: str) -> str:
+    """Strip fenced blocks and inline code spans — code is not links."""
+    return CODE_SPAN_RE.sub("", CODE_FENCE_RE.sub("", text))
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, spaces to dashes, drop punctuation."""
+    h = re.sub(r"[*_`]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def headings_of(path: pathlib.Path) -> set:
+    """All heading slugs a document exposes (code fences stripped first)."""
+    text = CODE_FENCE_RE.sub("", path.read_text())
+    return {github_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(path: pathlib.Path) -> list:
+    """Return a list of "<file>: <link> -- <reason>" dead-link reports."""
+    errors = []
+    text = _prose_of(path.read_text())
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, anchor = target.partition("#")
+        if base:
+            dest = (path.parent / base).resolve()
+            if not dest.exists():
+                errors.append(f"{path}: ({target}) -- missing file {base}")
+                continue
+        else:
+            dest = path.resolve()
+        if anchor:
+            if dest.is_dir() or dest.suffix.lower() != ".md":
+                errors.append(f"{path}: ({target}) -- anchor into a "
+                              f"non-markdown target")
+            elif github_slug(anchor) not in headings_of(dest):
+                errors.append(f"{path}: ({target}) -- no heading for "
+                              f"anchor #{anchor}")
+    return errors
+
+
+def main(argv=None) -> int:
+    """CLI entry point: walk the given files/dirs, report dead links."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+",
+                    help="markdown files or directories to walk")
+    args = ap.parse_args(argv)
+
+    files = []
+    for p in args.paths:
+        path = pathlib.Path(p)
+        if path.is_dir():
+            files.extend(sorted(path.rglob("*.md")))
+        else:
+            files.append(path)
+    if not files:
+        print("FAIL: no markdown files found", file=sys.stderr)
+        return 1
+
+    errors = []
+    n_links = 0
+    for f in files:
+        n_links += len(LINK_RE.findall(_prose_of(f.read_text())))
+        errors.extend(check_file(f))
+    if errors:
+        print("\n".join(f"FAIL: {e}" for e in errors), file=sys.stderr)
+        return 1
+    print(f"link check: {len(files)} files, {n_links} links, all alive")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
