@@ -9,7 +9,10 @@ serving-level figure of merit).  The gate fails when any current value
 falls more than ``tolerance`` (default 20%) below its committed baseline;
 values far *above* baseline print a reminder to ratchet the baseline up.
 ``BENCH_idle_skip.json`` additionally must keep its >= 2x kernel-launch
-reduction at 90% idle.
+reduction at 90% idle.  Beyond the headline, baselines may pin arbitrary
+metrics: ``<metric>_min`` keys are floors (throughput must not sink below
+them), ``<metric>_max`` keys are ceilings (tail latency must not rise
+above them).
 
 Baselines correspond to the reduced (``--fast``, oracle-kernel)
 configuration that CI's bench-smoke job runs; the gate cross-checks the
@@ -57,6 +60,19 @@ def check_one(result: dict, base: dict, tolerance: float) -> list:
         if cur < float(need):
             errors.append(f"{name}: {metric} {cur:.3f} < required "
                           f"{float(need):.3f}")
+    # ceiling pins, the mirror image: "<metric>_max" requires the run's
+    # "<metric>" to stay at or below the pinned value (p99_window_latency_ms
+    # pins the streaming runtime's tail latency; a missing metric fails —
+    # a benchmark that stopped reporting a pinned value is not a green gate)
+    for key, cap in base.items():
+        if not key.endswith("_max"):
+            continue
+        metric = key[:-4]
+        cur = float(result.get(metric, float("inf")))
+        print(f"  {name}: {metric} {cur:.3f} (required <= {float(cap):.3f})")
+        if cur > float(cap):
+            errors.append(f"{name}: {metric} {cur:.3f} > allowed "
+                          f"{float(cap):.3f}")
     return errors
 
 

@@ -5,6 +5,8 @@
         [--dtype-policy int8-native] [--fusion-policy per-step]
     PYTHONPATH=src python examples/serve_events.py --source file \
         [--file path/to/recording.npz|.aedat] [--speedup 2000]
+    PYTHONPATH=src python examples/serve_events.py --mode streaming \
+        [--arrival-rate 200] [--queue-cap 16] [--slo-ms 500]
 
 Two sources:
 
@@ -27,8 +29,19 @@ lowering.  Each completed inference reports its measured event counts
 mapped through the analytic SNE hardware model — latency, energy, and
 activity per request.
 
-This example's flags mirror `EventServeEngine`'s constructor kwargs; CI
-runs it under both policies so the two surfaces cannot drift apart.
+``--mode streaming`` serves the same requests through the
+double-buffered `StreamingRuntime` instead of the synchronous ``run``
+loop: arrivals follow an open-loop Poisson process at ``--arrival-rate``
+requests/s (the source — synthetic batch or segmented recording — only
+decides the payloads), admission is a bounded queue (``--queue-cap``)
+with graceful rejection, and ``--slo-ms`` attaches a deadline to every
+request (expiry in queue, eviction mid-service).  The engine runs with
+donated device buffers and reports sustained events/s plus window-
+latency percentiles alongside the analytic telemetry.
+
+This example's flags mirror `EventServeEngine`'s constructor kwargs and
+the streaming runtime's; CI runs it under both policies and both modes
+so the surfaces cannot drift apart.
 """
 import argparse
 import time
@@ -44,6 +57,7 @@ from repro.data.events_ds import (TINY, ReplayClient, batch_at,
                                   load_recording, sample_recording_path,
                                   segment_recording)
 from repro.serve.event_engine import EventRequest, EventServeEngine
+from repro.serve.runtime import PoissonLoadGen, StreamingRuntime
 from repro.serve.telemetry import proportionality_r2, summarize
 
 
@@ -75,6 +89,17 @@ def main():
                     default=FUSED_WINDOW,
                     help="window lowering: fused-window (one launch per "
                     "layer per window, default) or the per-step oracle")
+    ap.add_argument("--mode", choices=("sync", "streaming"), default="sync",
+                    help="sync = EventServeEngine.run (the parity oracle); "
+                    "streaming = the double-buffered StreamingRuntime under "
+                    "open-loop Poisson load")
+    ap.add_argument("--arrival-rate", type=float, default=200.0,
+                    help="streaming: Poisson arrival rate, requests/s")
+    ap.add_argument("--queue-cap", type=int, default=16,
+                    help="streaming: bounded admission queue capacity")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="streaming: per-request SLO deadline; past it a "
+                    "queued request expires and a running one is evicted")
     args = ap.parse_args()
 
     spec = tiny_net()
@@ -87,7 +112,8 @@ def main():
                            use_pallas=False if args.oracle else None,
                            idle_skip=not args.no_idle_skip,
                            dtype_policy=args.dtype_policy,
-                           fusion_policy=args.fusion_policy)
+                           fusion_policy=args.fusion_policy,
+                           donate_buffers=(args.mode == "streaming"))
 
     labels = None
     client = None
@@ -96,12 +122,13 @@ def main():
         rec = load_recording(path)
         reqs = segment_recording(rec, spec.in_shape, spec.n_timesteps,
                                  args.window_us)
-        client = ReplayClient(reqs, spec.n_timesteps, args.window_us,
-                              speedup=args.speedup)
+        if args.mode == "sync":
+            client = ReplayClient(reqs, spec.n_timesteps, args.window_us,
+                                  speedup=args.speedup)
         print(f"=== replaying {rec.name}: {rec.n_events} events / "
               f"{rec.duration_us / 1e3:.0f} ms -> {len(reqs)} segment "
               f"requests ({args.slots} slots, window {args.window}, "
-              f"speedup {args.speedup:g}x, "
+              f"mode {args.mode}, "
               f"idle_skip={'on' if eng.idle_skip else 'off'}) ===")
     else:
         spikes, labels = batch_at(args.seed, 0, args.requests, TINY)
@@ -109,22 +136,31 @@ def main():
                 for i in range(args.requests)]
         print(f"=== serving {args.requests} event streams "
               f"({args.slots} slots, window {args.window}, "
-              f"{'oracle' if args.oracle else 'pallas'}, "
+              f"{'oracle' if args.oracle else 'pallas'}, mode {args.mode}, "
               f"idle_skip={'on' if eng.idle_skip else 'off'}) ===")
 
     t0 = time.time()
-    if client is not None:
+    rep = None
+    if args.mode == "streaming":
+        rt = StreamingRuntime(eng, queue_capacity=args.queue_cap)
+        lg = PoissonLoadGen(
+            reqs, rate_hz=args.arrival_rate, seed=args.seed,
+            slo_s=args.slo_ms / 1e3 if args.slo_ms is not None else None)
+        rep = rt.serve(lg)
+    elif client is not None:
         client.run(eng)
     else:
         eng.run(reqs)
     dt = time.time() - t0
-    assert all(r.done for r in reqs)
+    if args.mode == "sync":
+        assert all(r.done for r in reqs)
+    reqs = [r for r in reqs if r.done]   # streaming may shed load (by SLO)
 
     print(f"{'req':>4} {'pred':>4} {'label':>5} {'events':>8} {'act%':>6} "
           f"{'sne_ms':>7} {'par_ms':>7} {'uJ':>7} {'drops':>5} {'skipW':>5}")
-    labs = (np.asarray(labels) if labels is not None
-            else [None] * len(reqs))
-    for r, lab in zip(reqs, labs):
+    labels = np.asarray(labels) if labels is not None else None
+    for r in reqs:
+        lab = labels[r.uid] if labels is not None else None
         t = r.telemetry
         print(f"{r.uid:>4} {r.prediction:>4} "
               f"{'-' if lab is None else int(lab):>5} "
@@ -146,6 +182,18 @@ def main():
         print(f"replay: slept {client.stats['slept_s']:.2f}s of "
               f"{client.stats['wall_s']:.2f}s wall "
               f"({client.stats['stalled_windows']} stalled windows)")
+    if rep is not None:
+        print(f"streaming: {rep['completed']} completed | "
+              f"{rep['rejected_queue_full']} rejected | "
+              f"{rep['expired_in_queue']} expired | "
+              f"{rep['evicted_deadline']} evicted | sustained "
+              f"{rep['sustained_events_per_s']:.0f} events/s")
+        print(f"streaming: window p50/p99 "
+              f"{rep['p50_window_latency_ms']:.2f}/"
+              f"{rep['p99_window_latency_ms']:.2f} ms | e2e p99 "
+              f"{rep['p99_e2e_latency_ms']:.2f} ms | mean queue depth "
+              f"{rep['mean_queue_depth']:.2f} | padding waste "
+              f"x{rep['padding']['padding_waste_ratio']:.2f}")
     print(f"modeled: {agg['modeled_rate_hz']:.0f} inf/s | "
           f"{agg['mean_sne_energy_j'] * 1e6:.2f} uJ/inf | "
           f"energy-vs-events R^2 = "

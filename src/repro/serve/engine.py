@@ -28,6 +28,8 @@ from repro.models import transformer as T
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: prompt in, sampled tokens accumulated."""
+
     uid: int
     prompt: np.ndarray              # (P,) int32
     max_tokens: int
@@ -83,6 +85,7 @@ class ServeEngine:
     # --- host API ----------------------------------------------------------
 
     def try_admit(self, req: Request) -> bool:
+        """Prefill ``req`` into a free slot; False when all slots busy."""
         free = np.nonzero(~self.active)[0]
         if len(free) == 0:
             return False

@@ -71,7 +71,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -120,6 +120,44 @@ class EventRequest:
                             dropped_at_ingest=dropped)
 
 
+@dataclasses.dataclass
+class CollectedWindow:
+    """One window's host-side collector output, pre-launch.
+
+    The unit the streaming runtime pipelines: collecting window N+1 (pure
+    host work — numpy binning, no device sync) can overlap the device
+    computing window N, because everything here comes from host state.
+    ``part_idx`` is the participating slot set (active slots that still
+    have timesteps to serve; under the synchronous ``step()`` this equals
+    the active set, but the streaming runtime keeps finished slots
+    resident until their last window retires).
+    """
+
+    xyc: np.ndarray        # (W, N, E0, 3) int32 collector bins
+    gate: np.ndarray       # (W, N, E0) f32 validity gates
+    alive: np.ndarray      # (W, N) f32 real-timestep mask
+    n_win_ev: np.ndarray   # (N,) int64 raw events per slot this window
+    max_bucket: int        # largest (slot, timestep) bucket fill
+    part_idx: np.ndarray   # participating slot indices
+
+
+@dataclasses.dataclass
+class InflightWindow:
+    """A dispatched-but-not-retired window step (device work in flight).
+
+    ``counts``/``drops`` are device futures (JAX async dispatch); the
+    numpy conversion that forces the device sync is deferred to
+    :meth:`EventServeEngine._retire_phase`, which is what lets the
+    streaming runtime collect the next window while this one computes.
+    """
+
+    idx: np.ndarray        # dense (launched) slot indices
+    n_compact: int         # real batch rows (the rest are dummy tail)
+    full_batch: bool       # batch position == slot index (no compaction)
+    counts: jnp.ndarray    # (L, batch) per-layer consumed events — future
+    drops: jnp.ndarray     # (L, batch) inter-layer overflow — future
+
+
 def default_step_capacities(spec: SNNSpec, activity: float = 0.25,
                             slack: float = 4.0,
                             align: int = 8) -> List[int]:
@@ -144,7 +182,8 @@ class EventServeEngine:
                  n_parallel_slices: Optional[int] = None,
                  co_blk: int = 128, use_pallas: Optional[bool] = None,
                  idle_skip: bool = True, dtype_policy: str = F32_CARRIER,
-                 fusion_policy: str = FUSED_WINDOW):
+                 fusion_policy: str = FUSED_WINDOW,
+                 donate_buffers: bool = False):
         """Compile the network into the engine's jitted per-window step.
 
         ``dtype_policy`` selects the datapath dtype domain;
@@ -152,6 +191,11 @@ class EventServeEngine:
         ``"fused-window"`` runs each layer's whole window in one Pallas
         launch (L launches per window); ``"per-step"`` is the bitwise-
         identical oracle lowering (L×window launches).
+        ``donate_buffers`` donates the membrane slabs and class-count
+        accumulator to each window step (``jax.jit`` ``donate_argnums``)
+        so XLA reuses their device buffers in place — the resident slot
+        state never round-trips or reallocates between windows.  Results
+        are bitwise unchanged; the streaming runtime turns this on.
         """
         if n_slots < 1 or window < 1:
             raise ValueError("need n_slots >= 1 and window >= 1")
@@ -204,16 +248,28 @@ class EventServeEngine:
         self.dense_ts = np.zeros((n_slots,), np.int64)
         self.skipped_windows = np.zeros((n_slots,), np.int64)
         self.stats = {"windows": 0, "admitted": 0, "completed": 0,
+                      "evicted": 0,
                       "collector_dropped": 0, "out_of_range_dropped": 0,
                       "step_calls": 0, "kernel_launches": 0,
                       "dense_slot_windows": 0, "skipped_slot_windows": 0,
-                      "leak_flushes": 0}
+                      "leak_flushes": 0,
+                      # padding-waste accounting (adaptive-bucketing
+                      # baseline): real events collected vs the padded
+                      # event-slot footprint the launches actually moved
+                      "collected_events": 0, "launched_events": 0,
+                      "padded_event_slots": 0}
+        # histogram of per-(slot, timestep) bucket occupancy: bin 0 holds
+        # empty buckets, bin b>0 holds fills whose power-of-two ceiling is
+        # 2^(b-1) — the measured baseline for adaptive event-capacity
+        # bucketing (every bucket is padded to the window's Eb)
+        self.bucket_fill_hist = np.zeros((34,), np.int64)
 
         # the jitted per-window step IS the unified program executor —
         # every layer kind is one slot-batched scatter launch per timestep
-        self._step = jax.jit(partial(
-            window_step, program=self.program, co_blk=co_blk,
-            use_pallas=use_pallas))
+        step_fn = partial(window_step, program=self.program, co_blk=co_blk,
+                          use_pallas=use_pallas)
+        self._step = jax.jit(step_fn, donate_argnums=(1, 2)
+                             if donate_buffers else ())
 
     # --- helpers -----------------------------------------------------------
 
@@ -233,10 +289,12 @@ class EventServeEngine:
 
     @property
     def n_active(self) -> int:
+        """Number of slots currently holding an admitted request."""
         return int(self.active.sum())
 
     @property
     def n_free(self) -> int:
+        """Number of slots available for admission."""
         return self.N - self.n_active
 
     # --- admission (queue back-pressure) -----------------------------------
@@ -260,17 +318,25 @@ class EventServeEngine:
                 f"core.sne_net.event_apply instead")
         req._validated = True
 
-    def try_admit(self, req: EventRequest) -> bool:
+    def try_admit(self, req: EventRequest,
+                  slot: Optional[int] = None) -> bool:
         """Admit into a free slot; False when the engine is full.
 
         The free-slot check runs first so a full engine answers False
         without rescanning the head-of-queue stream every window.
+        ``slot`` pins the admission to a specific free slot (the
+        streaming runtime's slot-policy hook); by default the lowest
+        free slot is taken.
         """
         free = np.nonzero(~self.active)[0]
         if len(free) == 0:
             return False
+        if slot is None:
+            slot = int(free[0])
+        elif self.active[slot]:
+            raise ValueError(f"slot {slot} is occupied")
         self.validate_request(req)
-        slot = int(free[0])
+        slot = int(slot)
         s = req.stream
         keep = np.asarray(s.valid) & (np.asarray(s.op) == ev.OP_UPDATE)
         arr = np.stack([np.asarray(s.t)[keep], np.asarray(s.x)[keep],
@@ -308,8 +374,37 @@ class EventServeEngine:
 
     # --- the collector ------------------------------------------------------
 
-    def _collect_window(self):
-        """Bin each active slot's next ``W`` timesteps of events.
+    def _participating(self) -> np.ndarray:
+        """Active slots that still have timesteps to serve.
+
+        Under the synchronous :meth:`step` this is exactly the active
+        set (finished slots are released within the same step); the
+        streaming runtime keeps a finished slot resident — active but
+        no longer participating — until the window that completed it
+        retires.
+        """
+        return np.asarray(
+            [s for s in np.nonzero(self.active)[0]
+             if self.tau[s] < self.slot_req[s].n_timesteps], np.int64)
+
+    def _collect_phase(self) -> Optional[CollectedWindow]:
+        """Collect one window of host-side work, or None if nothing to do.
+
+        Pure host work on host state — safe to run while a previously
+        launched window is still computing on device (the streaming
+        runtime's overlap point).
+        """
+        part_idx = self._participating()
+        if len(part_idx) == 0:
+            return None
+        xyc, gate, alive, n_win_ev, max_bucket = \
+            self._collect_window(part_idx)
+        return CollectedWindow(xyc=xyc, gate=gate, alive=alive,
+                               n_win_ev=n_win_ev, max_bucket=max_bucket,
+                               part_idx=part_idx)
+
+    def _collect_window(self, part_idx: np.ndarray):
+        """Bin each participating slot's next ``W`` timesteps of events.
 
         Returns numpy ``(ev_xyc (W,N,E0,3) int32, gate (W,N,E0) f32,
         alive (W,N) f32, n_win_ev (N,) int64, max_bucket int)`` —
@@ -326,7 +421,7 @@ class EventServeEngine:
         alive = np.zeros((W, N), np.float32)
         n_win_ev = np.zeros((N,), np.int64)
         max_bucket = 0
-        for slot in np.nonzero(self.active)[0]:
+        for slot in part_idx:
             req = self.slot_req[slot]
             arr = self._ev[slot]
             t0 = self.tau[slot]
@@ -350,11 +445,16 @@ class EventServeEngine:
                     rows = rows[:E0]
                 k = len(rows)
                 max_bucket = max(max_bucket, k)
+                # padding-waste baseline: bin 0 = empty bucket, bin b>0 =
+                # occupancy whose power-of-two ceiling is 2^(b-1)
+                self.bucket_fill_hist[
+                    0 if k == 0 else (k - 1).bit_length() + 1] += 1
                 if k:
                     xyc[dt, slot, :k, 0] = rows[:, 1]
                     xyc[dt, slot, :k, 1] = rows[:, 2]
                     xyc[dt, slot, :k, 2] = rows[:, 3]
                     gate[dt, slot, :k] = 1.0
+            self.stats["collected_events"] += int(n_win_ev[slot])
         return xyc, gate, alive, n_win_ev, max_bucket
 
     # --- stepping -----------------------------------------------------------
@@ -366,47 +466,82 @@ class EventServeEngine:
         never reach the batched step: their leak is deferred (TLU) and the
         remaining slots are compacted before the kernel launch. A window
         in which *every* resident slot is idle launches nothing at all.
+
+        This is the synchronous composition of the pipeline phases the
+        streaming runtime overlaps: collect -> launch -> retire -> finish,
+        back to back.  It is the parity oracle for the streaming path.
         """
         n_active = self.n_active
         if n_active == 0:
             return 0
-        xyc, gate, alive, n_win_ev, max_bucket = self._collect_window()
-        act_idx = np.nonzero(self.active)[0]
+        col = self._collect_phase()
+        if col is None:          # cannot happen under pure-sync stepping
+            return n_active
+        inflight, finished = self._launch_phase(col)
+        if inflight is not None:
+            self._retire_phase(inflight)
+        for slot in finished:
+            self._finish(slot)
+        return n_active
+
+    def _launch_phase(self, col: CollectedWindow
+                      ) -> Tuple[Optional[InflightWindow], List[int]]:
+        """Dispatch one collected window; advance host time bookkeeping.
+
+        Idle-skip selection, compaction, and the async device dispatch —
+        everything except the blocking numpy accounting, which
+        :meth:`_retire_phase` applies.  Returns the in-flight record
+        (None when every participating slot was idle-skipped) and the
+        slots whose request completed with this window; callers must
+        :meth:`_finish` those only after the window is retired.
+        """
+        act_idx = col.part_idx
         if self.idle_skip:
-            dense_idx = act_idx[n_win_ev[act_idx] > 0]
+            dense_idx = act_idx[col.n_win_ev[act_idx] > 0]
         else:
             dense_idx = act_idx
+        inflight = None
         if len(dense_idx):
-            self._step_dense(dense_idx, xyc, gate, alive, max_bucket)
+            inflight = self._launch_window(dense_idx, col.xyc, col.gate,
+                                           col.alive, col.max_bucket)
         for slot in act_idx:
             if slot not in dense_idx:
                 # provably-idle window: defer its leak steps analytically
-                self.pending_dt[slot] += int(alive[:, slot].sum())
+                self.pending_dt[slot] += int(col.alive[:, slot].sum())
                 self.skipped_windows[slot] += 1
         self.stats["dense_slot_windows"] += len(dense_idx)
         self.stats["skipped_slot_windows"] += len(act_idx) - len(dense_idx)
         self.stats["windows"] += 1
+        finished = []
         for slot in act_idx:
             self.tau[slot] += min(self.W,
                                   self.slot_req[slot].n_timesteps
                                   - self.tau[slot])
             self.windows[slot] += 1
             if self.tau[slot] >= self.slot_req[slot].n_timesteps:
-                self._finish(int(slot))
-        return n_active
+                finished.append(int(slot))
+        return inflight, finished
 
     @staticmethod
     def _bucket(n: int, cap: int) -> int:
         """Round up to a power of two (capped) — bounds jit retraces."""
         return min(1 << max(n - 1, 0).bit_length(), cap)
 
-    def _step_dense(self, idx: np.ndarray, xyc: np.ndarray, gate: np.ndarray,
-                    alive: np.ndarray, max_bucket: int) -> None:
-        """Compact the active slots, run the batched window step, scatter back.
+    def _launch_window(self, idx: np.ndarray, xyc: np.ndarray,
+                       gate: np.ndarray, alive: np.ndarray,
+                       max_bucket: int) -> InflightWindow:
+        """Compact the active slots and dispatch the batched window step.
 
         Without ``idle_skip`` this degenerates to the original full-batch
         step (all N slots, full event axis) — the dense reference path the
         skip path is tested bit-for-bit against.
+
+        The dispatch is asynchronous: the returned record carries the
+        per-window count/drop futures, and the membrane slabs /
+        class-count accumulators are replaced by their post-window
+        futures immediately (with ``donate_buffers`` the old buffers are
+        donated to the step, so slab state never round-trips).  Nothing
+        here blocks on the device; :meth:`_retire_phase` does.
         """
         A = len(idx)
         if self.idle_skip:
@@ -452,30 +587,91 @@ class EventServeEngine:
         states_c, cc_c, counts, drops = self._step(
             self.params, states_c, cc_c, jnp.asarray(xyc_w),
             jnp.asarray(gate_w), jnp.asarray(alive_w), jnp.asarray(pre))
-        counts_np = np.asarray(counts, np.float64)
-        drops_np = np.asarray(drops, np.float64)
         if full_batch:
             # batch position == slot index
             self.states = states_c
             self.class_counts = cc_c
-            self.acc_counts[:, idx] += counts_np[:, idx]
-            self.acc_drops[:, idx] += drops_np[:, idx]
         else:
             # batch position i holds slot idx[i]
             real = jnp.asarray(idx)
             self.states = tuple(v.at[real].set(sc[:A])
                                 for v, sc in zip(self.states, states_c))
             self.class_counts = self.class_counts.at[real].set(cc_c[:A])
-            self.acc_counts[:, idx] += counts_np[:, :A]
-            self.acc_drops[:, idx] += drops_np[:, :A]
         self.dense_ts[idx] += alive[:, idx].sum(axis=0).astype(np.int64)
         self.stats["step_calls"] += 1
+        self.stats["launched_events"] += int(
+            np.sum(gate_w[:, :A] if not full_batch else gate_w[:, idx]))
+        self.stats["padded_event_slots"] += self.W * len(gidx) * Eb
         # fused-window: ONE launch per layer per window; per-step: one
         # slot-batched scatter launch per layer per timestep
         if self.program.fusion_policy == FUSED_WINDOW:
             self.stats["kernel_launches"] += len(self.program.ops)
         else:
             self.stats["kernel_launches"] += self.W * len(self.program.ops)
+        return InflightWindow(idx=idx, n_compact=A, full_batch=full_batch,
+                              counts=counts, drops=drops)
+
+    def _retire_phase(self, w: InflightWindow) -> None:
+        """Block on one in-flight window and apply its numpy accounting.
+
+        The only phase that synchronises with the device.  Per-request
+        event/drop accumulators become valid for ``w.idx`` slots here —
+        which is why a finished slot may only be released
+        (:meth:`_finish`) after its last window retires.
+        """
+        counts_np = np.asarray(w.counts, np.float64)
+        drops_np = np.asarray(w.drops, np.float64)
+        idx, A = w.idx, w.n_compact
+        if w.full_batch:
+            self.acc_counts[:, idx] += counts_np[:, idx]
+            self.acc_drops[:, idx] += drops_np[:, idx]
+        else:
+            self.acc_counts[:, idx] += counts_np[:, :A]
+            self.acc_drops[:, idx] += drops_np[:, :A]
+
+    def padding_waste(self) -> dict:
+        """Padded-vs-real event accounting for the capacity buckets.
+
+        The measured baseline for adaptive event-capacity bucketing:
+        ``padded_event_slots`` is the event-axis footprint the launches
+        actually moved (every (slot, timestep) bucket padded to the
+        window's power-of-two ``Eb``), ``launched_events`` the gated
+        real events inside it, and ``bucket_fill_hist`` the occupancy
+        histogram (bin 0 = empty bucket; bin b>0 = fills with
+        power-of-two ceiling ``2**(b-1)``).
+        """
+        padded = self.stats["padded_event_slots"]
+        real = self.stats["launched_events"]
+        hist = self.bucket_fill_hist
+        last = int(np.nonzero(hist)[0].max()) + 1 if hist.any() else 0
+        return {
+            "collected_events": self.stats["collected_events"],
+            "launched_events": real,
+            "padded_event_slots": padded,
+            "padding_waste_ratio": padded / real if real else float("inf"),
+            "bucket_fill_hist": [int(h) for h in hist[:last]],
+        }
+
+    def evict_slot(self, slot: int) -> Optional[EventRequest]:
+        """Release a slot without completing its request (SLO eviction).
+
+        The deadline-miss path of the streaming runtime's admission
+        layer: the slot's request is abandoned mid-stream, the slot state
+        is re-zeroed (a chained device op — safe while a window that
+        included this slot is still in flight, because the reset orders
+        after that window's writes), and the slot immediately becomes
+        admissible again.  Returns the evicted request, or None if the
+        slot was free.
+        """
+        req = self.slot_req[slot]
+        if req is None:
+            return None
+        self.slot_req[slot] = None
+        self.active[slot] = False
+        self._ev[slot] = None
+        self._reset_slot_state(slot)
+        self.stats["evicted"] += 1
+        return req
 
     def _finish(self, slot: int) -> None:
         req = self.slot_req[slot]

@@ -1,0 +1,38 @@
+"""Streaming runtime: continuous-batching async serving for the engine.
+
+Public surface:
+
+  * :class:`~repro.serve.runtime.pipeline.StreamingRuntime` — the
+    double-buffered serve loop (admission, SLO enforcement, telemetry)
+    around one `EventServeEngine`;
+  * :class:`~repro.serve.runtime.loadgen.PoissonLoadGen` plus the
+    payload builders — open-loop Poisson load over the bundled
+    recording or synthetic gestures;
+  * :class:`~repro.serve.runtime.clock.WallClock` /
+    :class:`~repro.serve.runtime.clock.ManualClock` — injected time;
+  * the admission vocabulary (lifecycle states, slot policies,
+    :class:`~repro.serve.runtime.admission.StreamRequest`).
+"""
+from repro.serve.runtime.admission import (DONE, EVICTED, EXPIRED, QUEUED,
+                                           REJECTED, RUNNING, SLOT_FIFO,
+                                           SLOT_LEAST_LOADED, SLOT_POLICIES,
+                                           AdmissionQueue, StreamRequest,
+                                           choose_slot)
+from repro.serve.runtime.clock import ManualClock, WallClock
+from repro.serve.runtime.loadgen import (PoissonLoadGen,
+                                         poisson_arrival_times,
+                                         requests_from_recording,
+                                         requests_synthetic)
+from repro.serve.runtime.metrics import StreamingMetrics, percentile
+from repro.serve.runtime.pipeline import StreamingRuntime
+
+__all__ = [
+    "QUEUED", "RUNNING", "DONE", "REJECTED", "EXPIRED", "EVICTED",
+    "SLOT_FIFO", "SLOT_LEAST_LOADED", "SLOT_POLICIES",
+    "AdmissionQueue", "StreamRequest", "choose_slot",
+    "ManualClock", "WallClock",
+    "PoissonLoadGen", "poisson_arrival_times", "requests_from_recording",
+    "requests_synthetic",
+    "StreamingMetrics", "percentile",
+    "StreamingRuntime",
+]

@@ -49,14 +49,17 @@ class RequestTelemetry:
 
     @property
     def total_events(self) -> float:
+        """Events consumed across all layers of this inference."""
         return float(sum(self.per_layer_events))
 
     @property
     def total_sops(self) -> float:
+        """Synaptic operations across all layers of this inference."""
         return float(sum(self.per_layer_sops))
 
     @property
     def sne_rate_hz(self) -> float:
+        """Analytic inference rate on the modelled SNE (1 / time)."""
         return 1.0 / self.sne_time_s if self.sne_time_s > 0 else float("inf")
 
 

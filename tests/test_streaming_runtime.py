@@ -1,0 +1,334 @@
+"""Streaming runtime: admission, SLO enforcement, pipeline parity.
+
+The tentpole contract is at the bottom: per-request outputs of the
+double-buffered streaming pipeline are bitwise identical to the
+synchronous ``EventServeEngine.run`` oracle across the full
+dtype-policy x fusion-policy matrix.  Above it, the admission layer's
+overload behaviours (queue-full rejection, queued expiry, mid-window
+eviction), the zero-event edge, the slot-placement policies, the
+padding-waste accounting, and loadgen/clock determinism.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policies import (F32_CARRIER, FUSED_WINDOW, INT8_NATIVE,
+                                 PER_STEP)
+from repro.core.quant import quantize_net
+from repro.core.sne_net import init_snn, tiny_net
+from repro.serve.event_engine import EventRequest, EventServeEngine
+from repro.serve.runtime import (DONE, EVICTED, EXPIRED, REJECTED,
+                                 SLOT_FIFO, SLOT_LEAST_LOADED,
+                                 AdmissionQueue, ManualClock, PoissonLoadGen,
+                                 StreamingRuntime, StreamRequest, WallClock,
+                                 choose_slot, percentile,
+                                 poisson_arrival_times, requests_synthetic)
+
+
+def _tiny(n_slots=2, window=4, **kw):
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    return spec, params, EventServeEngine(
+        spec, params, n_slots=n_slots, window=window, use_pallas=False, **kw)
+
+
+def _clone(reqs):
+    return [dataclasses.replace(r) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# clock / loadgen determinism
+# ---------------------------------------------------------------------------
+
+def test_manual_clock_semantics():
+    c = ManualClock()
+    assert c.now() == 0.0
+    c.advance(1.5)
+    assert c.now() == 1.5
+    c.wait_until(3.0)
+    assert c.now() == 3.0
+    c.wait_until(1.0)                     # no-op when already past
+    assert c.now() == 3.0
+    with pytest.raises(ValueError):
+        c.advance(-0.1)
+
+
+def test_wall_clock_monotone():
+    c = WallClock()
+    a, b = c.now(), c.now()
+    assert 0.0 <= a <= b
+
+
+def test_poisson_arrivals_deterministic_and_monotone():
+    a = poisson_arrival_times(100.0, 50, seed=7)
+    b = poisson_arrival_times(100.0, 50, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(np.diff(a) > 0) and a[0] > 0
+    assert not np.array_equal(a, poisson_arrival_times(100.0, 50, seed=8))
+    # mean gap within a loose factor of 1/rate
+    assert 0.25 / 100.0 < np.diff(a).mean() < 4.0 / 100.0
+    with pytest.raises(ValueError):
+        poisson_arrival_times(0.0, 3)
+
+
+def test_loadgen_due_hands_over_in_order_and_stamps_deadlines():
+    reqs = requests_synthetic(4, seed=0)
+    lg = PoissonLoadGen(reqs, rate_hz=10.0, seed=3, slo_s=0.5)
+    assert len(lg) == 4 and not lg.exhausted
+    t_all = lg.arrivals[-1]
+    out = lg.due(float(t_all))
+    assert [s.uid for s in out] == [0, 1, 2, 3]
+    assert lg.exhausted and lg.next_arrival_s() is None
+    for s in out:
+        assert s.deadline_s == pytest.approx(s.arrival_s + 0.5)
+
+
+def test_percentile_edges():
+    assert np.isnan(percentile([], 50))
+    assert percentile([3.0], 99) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == 2.5
+
+
+# ---------------------------------------------------------------------------
+# admission queue + slot policies
+# ---------------------------------------------------------------------------
+
+def _sreq(uid, arrival=0.0, deadline=None):
+    return StreamRequest(req=requests_synthetic(1, seed=uid)[0],
+                         arrival_s=arrival, deadline_s=deadline)
+
+
+def test_admission_queue_rejects_when_full():
+    q = AdmissionQueue(2)
+    a, b, c = _sreq(0), _sreq(1), _sreq(2)
+    assert q.offer(a, 0.0) and q.offer(b, 0.0)
+    assert not q.offer(c, 1.0)
+    assert c.status == REJECTED and c.finish_s == 1.0
+    assert len(q) == 2 and q.pop() is a
+    with pytest.raises(ValueError):
+        AdmissionQueue(0)
+
+
+def test_admission_queue_expires_past_deadline():
+    q = AdmissionQueue(4)
+    a = _sreq(0, deadline=1.0)
+    b = _sreq(1, deadline=5.0)
+    q.offer(a, 0.0)
+    q.offer(b, 0.0)
+    dropped = q.expire(2.0)
+    assert dropped == [a] and a.status == EXPIRED
+    assert len(q) == 1 and q.pop() is b
+
+
+def test_choose_slot_policies():
+    free = np.array([1, 3, 4])
+    load = np.array([9.0, 5.0, 9.0, 2.0, 2.0])
+    assert choose_slot(SLOT_FIFO, free, load) == 1
+    # least-loaded: slots 3 and 4 tie at 2.0 -> lowest index wins
+    assert choose_slot(SLOT_LEAST_LOADED, free, load) == 3
+    with pytest.raises(ValueError, match="unknown slot policy"):
+        choose_slot("round-robin", free, load)
+    with pytest.raises(ValueError, match="no free slot"):
+        choose_slot(SLOT_FIFO, np.array([], np.int64), load)
+
+
+# ---------------------------------------------------------------------------
+# runtime: overload / SLO behaviours (deterministic ManualClock)
+# ---------------------------------------------------------------------------
+
+def test_queue_full_rejection_under_burst():
+    """A burst beyond queue+slots sheds load gracefully; the rest serve."""
+    _, _, eng = _tiny(n_slots=1)
+    rt = StreamingRuntime(eng, queue_capacity=2, clock=ManualClock())
+    reqs = requests_synthetic(5, seed=2)
+    sub = rt.submit(reqs)                  # all arrive at t=0: 2 queue slots
+    rej = [s for s in sub if s.status == REJECTED]
+    assert len(rej) == 3                   # capacity 2 absorbed, rest shed
+    rep = rt.serve()
+    assert rep["rejected_queue_full"] == 3
+    assert rep["completed"] == 2 == rep["admitted"]
+    for s in sub:
+        if s.status == DONE:
+            assert s.req.done and s.req.prediction is not None
+        else:
+            assert not s.req.done          # rejected work never touched
+
+
+def test_deadline_eviction_mid_window_and_slot_reuse():
+    """A request whose SLO lapses mid-service is evicted while its window
+    is in flight, and the freed slot serves the next request with results
+    bitwise equal to a fresh engine — the state reset chained correctly
+    behind the in-flight step."""
+    spec, params, eng = _tiny(n_slots=1)
+    clock = ManualClock()
+    rt = StreamingRuntime(eng, queue_capacity=4, clock=clock)
+    victim = requests_synthetic(1, seed=3)[0]
+    [sv] = rt.submit([victim], slo_s=0.25)
+    assert rt.tick()                       # admit + launch window 1
+    assert rt._inflight is not None        # mid-window now
+    clock.advance(1.0)                     # ... SLO lapses
+    rt.tick()                              # evict, then retire the orphan
+    assert sv.status == EVICTED
+    assert rt.metrics.evicted_deadline == 1
+    assert eng.stats["evicted"] == 1 and eng.n_free == 1
+    assert not victim.done
+    # drain whatever bookkeeping remains, then reuse the slot
+    rt.serve()
+    follow = requests_synthetic(1, seed=9)[0]
+    [sf] = rt.submit([follow])             # no SLO
+    rt.serve()
+    assert sf.status == DONE and follow.done
+    # oracle: same request on a fresh synchronous engine
+    _, _, eng2 = _tiny(n_slots=1)
+    oracle = dataclasses.replace(follow, done=False, class_counts=None,
+                                 prediction=None, telemetry=None)
+    eng2.run([oracle])
+    np.testing.assert_array_equal(follow.class_counts, oracle.class_counts)
+    assert follow.prediction == oracle.prediction
+
+
+def test_expired_in_queue_never_occupies_a_slot():
+    _, _, eng = _tiny(n_slots=1)
+    clock = ManualClock()
+    rt = StreamingRuntime(eng, queue_capacity=4, clock=clock)
+    a, b = requests_synthetic(2, seed=4)
+    [sa] = rt.submit([a])                  # occupies the only slot
+    [sb] = rt.submit([b], slo_s=0.1)       # waits behind it
+    rt.tick()
+    clock.advance(1.0)                     # b's deadline passes in queue
+    rep = rt.serve()
+    assert sb.status == EXPIRED and not b.done
+    assert rep["expired_in_queue"] == 1
+    assert sa.status == DONE and a.done
+
+
+def test_zero_event_request_streams_to_completion():
+    """An all-silent stream completes under streaming with the same
+    (zero) counts as the synchronous oracle — the idle-skip path must
+    not strand it."""
+    spec, params, eng = _tiny(n_slots=2)
+    T, (H, W, C) = spec.n_timesteps, spec.in_shape
+    zero = EventRequest.from_dense(0, jnp.zeros((T, H, W, C)))
+    busy = requests_synthetic(1, seed=5)[0]
+    busy = dataclasses.replace(busy, uid=1)
+    rt = StreamingRuntime(eng, clock=ManualClock())
+    rt.submit([zero, busy])
+    rep = rt.serve()
+    assert rep["completed"] == 2
+    assert zero.done and np.all(np.asarray(zero.class_counts) == 0.0)
+    # oracle agreement for the zero request
+    _, _, eng2 = _tiny(n_slots=2)
+    z2 = EventRequest.from_dense(0, jnp.zeros((T, H, W, C)))
+    eng2.run([z2])
+    np.testing.assert_array_equal(zero.class_counts, z2.class_counts)
+    assert zero.prediction == z2.prediction
+
+
+def test_least_loaded_spreads_across_slots():
+    """After slot 0 has served work, least-loaded placement prefers the
+    colder slot 1; FIFO would always restart at slot 0."""
+    _, _, eng = _tiny(n_slots=2)
+    rt = StreamingRuntime(eng, slot_policy=SLOT_LEAST_LOADED,
+                          clock=ManualClock())
+    first = requests_synthetic(1, seed=6)[0]
+    rt.submit([first])
+    rt.serve()                             # served in slot 0 -> load[0] > 0
+    assert rt.slot_load[0] > 0 == rt.slot_load[1]
+    second = dataclasses.replace(requests_synthetic(1, seed=7)[0], uid=1)
+    [s2] = rt.submit([second])
+    rt.serve()
+    assert s2.slot == 1                    # the cold slot
+    # and the fifo policy picks slot 0 again in the same situation
+    _, _, eng_f = _tiny(n_slots=2)
+    rt_f = StreamingRuntime(eng_f, slot_policy=SLOT_FIFO, clock=ManualClock())
+    rt_f.submit([dataclasses.replace(first, done=False, class_counts=None,
+                                     prediction=None, telemetry=None)])
+    rt_f.serve()
+    [s2f] = rt_f.submit([dataclasses.replace(second, done=False,
+                                             class_counts=None,
+                                             prediction=None,
+                                             telemetry=None)])
+    rt_f.serve()
+    assert s2f.slot == 0
+
+
+def test_padding_waste_accounting():
+    """launched <= padded footprint; histogram counts every bucket the
+    collector filled; ratio >= 1 whenever anything launched."""
+    _, _, eng = _tiny(n_slots=2)
+    rt = StreamingRuntime(eng, clock=ManualClock())
+    rt.submit(requests_synthetic(3, seed=8))
+    rep = rt.serve()
+    pad = rep["padding"]
+    assert pad["launched_events"] > 0
+    assert pad["padded_event_slots"] >= pad["launched_events"]
+    assert pad["padding_waste_ratio"] >= 1.0
+    assert sum(pad["bucket_fill_hist"]) > 0
+    # histogram bins beyond bin 0 carry real occupancies only
+    assert all(h >= 0 for h in pad["bucket_fill_hist"])
+
+
+def test_runtime_refuses_shared_engine_mid_flight():
+    _, _, eng = _tiny(n_slots=1)
+    eng.try_admit(requests_synthetic(1, seed=0)[0])
+    with pytest.raises(ValueError, match="already has requests"):
+        StreamingRuntime(eng)
+
+
+def test_report_latency_fields_populated():
+    _, _, eng = _tiny(n_slots=2)
+    rt = StreamingRuntime(eng, clock=ManualClock())
+    rt.submit(requests_synthetic(2, seed=1))
+    rep = rt.serve()
+    assert rep["completed"] == 2
+    assert np.isfinite(rep["p50_window_latency_ms"])
+    assert rep["p99_window_latency_ms"] >= rep["p50_window_latency_ms"] >= 0
+    assert np.isfinite(rep["p99_e2e_latency_ms"])
+    assert rep["max_queue_depth"] >= 0
+    assert rep["events_served"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the tentpole contract: streaming == sync, bitwise, full policy matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype_policy", [F32_CARRIER, INT8_NATIVE])
+@pytest.mark.parametrize("fusion_policy", [PER_STEP, FUSED_WINDOW])
+def test_streaming_bitwise_matches_sync_policy_matrix(dtype_policy,
+                                                      fusion_policy):
+    """Per-request class counts from the double-buffered streaming
+    pipeline (donated buffers, Poisson arrival staggering, 2 slots) are
+    bitwise identical to the synchronous engine, for every dtype x
+    fusion policy combination."""
+    spec = tiny_net()
+    qn = quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec)
+    params = qn.params_for(dtype_policy)
+    reqs = requests_synthetic(5, seed=11)
+
+    sync_reqs = _clone(reqs)
+    eng_sync = EventServeEngine(qn.spec, params, n_slots=2, window=4,
+                                use_pallas=False, dtype_policy=dtype_policy,
+                                fusion_policy=fusion_policy)
+    eng_sync.run(sync_reqs)
+
+    stream_reqs = _clone(reqs)
+    eng = EventServeEngine(qn.spec, params, n_slots=2, window=4,
+                           use_pallas=False, dtype_policy=dtype_policy,
+                           fusion_policy=fusion_policy, donate_buffers=True)
+    rt = StreamingRuntime(eng, queue_capacity=8, clock=ManualClock())
+    # staggered Poisson arrivals so batch composition differs from sync
+    lg = PoissonLoadGen(stream_reqs, rate_hz=400.0, seed=2)
+    rep = rt.serve(lg)
+    assert rep["completed"] == len(reqs)
+
+    for a, b in zip(sync_reqs, stream_reqs):
+        assert b.done
+        np.testing.assert_array_equal(np.asarray(a.class_counts),
+                                      np.asarray(b.class_counts),
+                                      err_msg=f"uid={a.uid} {dtype_policy}/"
+                                              f"{fusion_policy}")
+        assert a.prediction == b.prediction
+        assert a.telemetry.n_windows == b.telemetry.n_windows
