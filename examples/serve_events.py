@@ -171,8 +171,8 @@ def main():
               f"{t.n_skipped_windows:>5}")
 
     agg = summarize([r.telemetry for r in reqs])
-    occ = sum(r.n_timesteps for r in reqs) / (
-        eng.stats["windows"] * args.window * args.slots)
+    slot_ts = eng.stats["windows"] * args.window * args.slots
+    occ = (sum(r.n_timesteps for r in reqs) / slot_ts) if slot_ts else 0.0
     skipped = eng.stats["skipped_slot_windows"]
     total_sw = skipped + eng.stats["dense_slot_windows"]
     print(f"done in {dt:.2f}s wall | {eng.stats['windows']} windows | "
@@ -194,10 +194,14 @@ def main():
               f"{rep['p99_e2e_latency_ms']:.2f} ms | mean queue depth "
               f"{rep['mean_queue_depth']:.2f} | padding waste "
               f"x{rep['padding']['padding_waste_ratio']:.2f}")
-    print(f"modeled: {agg['modeled_rate_hz']:.0f} inf/s | "
-          f"{agg['mean_sne_energy_j'] * 1e6:.2f} uJ/inf | "
-          f"energy-vs-events R^2 = "
-          f"{proportionality_r2([r.telemetry for r in reqs]):.5f}")
+    if reqs:
+        print(f"modeled: {agg['modeled_rate_hz']:.0f} inf/s | "
+              f"{agg['mean_sne_energy_j'] * 1e6:.2f} uJ/inf | "
+              f"energy-vs-events R^2 = "
+              f"{proportionality_r2([r.telemetry for r in reqs]):.5f}")
+    else:
+        # streaming under a tight SLO can shed every request
+        print("modeled: no completed requests (all load shed)")
 
 
 if __name__ == "__main__":

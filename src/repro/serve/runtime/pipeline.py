@@ -44,8 +44,9 @@ import numpy as np
 from repro.serve.event_engine import (EventRequest, EventServeEngine,
                                       InflightWindow)
 from repro.serve.runtime.admission import (DONE, EVICTED, REJECTED, RUNNING,
-                                           SLOT_FIFO, AdmissionQueue,
-                                           StreamRequest, choose_slot)
+                                           SLOT_FIFO, SLOT_POLICIES,
+                                           AdmissionQueue, StreamRequest,
+                                           choose_slot)
 from repro.serve.runtime.clock import WallClock
 from repro.serve.runtime.loadgen import PoissonLoadGen
 from repro.serve.runtime.metrics import StreamingMetrics
@@ -53,11 +54,24 @@ from repro.serve.runtime.metrics import StreamingMetrics
 
 @dataclasses.dataclass
 class _Pending:
-    """One dispatched window the pipeline has not yet retired."""
+    """One dispatched window the pipeline has not yet retired.
 
-    win: InflightWindow
+    ``slot_reqs`` snapshots slot -> request at launch time, so retire-time
+    accounting (window latency, completion) always reaches the requests
+    the window actually served — never a later occupant of the slot.
+    """
+
+    win: Optional[InflightWindow]
     finished: List[int]          # slots whose request completed this window
     t_launch: float              # clock time at dispatch
+    slot_reqs: Dict[int, StreamRequest]
+
+    def slots(self) -> set:
+        """Every slot this window references (launched or finishing)."""
+        out = set(self.finished)
+        if self.win is not None:
+            out.update(int(s) for s in self.win.idx)
+        return out
 
 
 class StreamingRuntime:
@@ -75,6 +89,9 @@ class StreamingRuntime:
         if engine.n_active:
             raise ValueError("engine already has requests in flight; the "
                              "runtime must own the full slot lifecycle")
+        if slot_policy not in SLOT_POLICIES:
+            raise ValueError(f"unknown slot policy {slot_policy!r} "
+                             f"(expected one of {SLOT_POLICIES})")
         self.engine = engine
         self.queue = AdmissionQueue(queue_capacity)
         self.slot_policy = slot_policy
@@ -142,8 +159,11 @@ class StreamingRuntime:
         launched = None
         if col is not None:
             win, finished = self.engine._launch_phase(col)
-            launched = _Pending(win=win, finished=finished,
-                                t_launch=self.clock.now())
+            launched = _Pending(
+                win=win, finished=finished, t_launch=self.clock.now(),
+                slot_reqs={int(s): self.running[int(s)]
+                           for s in col.part_idx
+                           if int(s) in self.running})
         self._retire_inflight()                # the only device sync
         if launched is not None:
             if launched.win is None:
@@ -195,15 +215,33 @@ class StreamingRuntime:
 
     # --- admission / SLO internals ------------------------------------------
 
+    def _reserved_slots(self) -> set:
+        """Slots the in-flight window references — off-limits until retire.
+
+        An evicted in-flight slot looks free to the engine, but admitting
+        into it before the window retires would let the retire phase fold
+        the old request's counts into the new request's accumulators (and
+        a finished in-flight slot would complete the new request with the
+        old one's results).  Admission skips these for one tick.
+        """
+        return self._inflight.slots() if self._inflight is not None else set()
+
     def _evict_deadline_missed(self, now: float) -> None:
         """Reclaim slots whose request can no longer meet its deadline.
 
         Mid-service eviction: the slot's state reset chains after any
         in-flight window's writes (see `EventServeEngine.evict_slot`),
         so eviction is safe even while the slot is part of the window
-        currently computing on device.
+        currently computing on device.  Slots whose request *completed*
+        with the in-flight window are exempt: their compute is done and
+        only the retire bookkeeping is pending, so a deadline lapsing in
+        that one-tick gap must not discard a finished result.
         """
+        finished_inflight = (set(self._inflight.finished)
+                             if self._inflight is not None else set())
         for slot, sreq in list(self.running.items()):
+            if slot in finished_inflight:
+                continue
             if sreq.deadline_s is not None and now > sreq.deadline_s:
                 self.engine.evict_slot(slot)
                 sreq.status = EVICTED
@@ -213,8 +251,12 @@ class StreamingRuntime:
 
     def _admit(self, now: float) -> None:
         """Move queue heads into free slots (FIFO order, policy placement)."""
-        while len(self.queue) > 0 and self.engine.n_free > 0:
-            free = np.nonzero(~self.engine.active)[0]
+        reserved = self._reserved_slots()
+        while len(self.queue) > 0:
+            free = np.asarray([s for s in np.nonzero(~self.engine.active)[0]
+                               if int(s) not in reserved], np.int64)
+            if len(free) == 0:
+                break
             slot = choose_slot(self.slot_policy, free, self.slot_load)
             sreq = self.queue.pop()
             try:
@@ -243,7 +285,9 @@ class StreamingRuntime:
         lat = now - p.t_launch
         self.metrics.window_latencies_s.append(lat)
         for slot in p.win.idx:
-            sreq = self.running.get(int(slot))
+            # launch-time attribution: the requests this window actually
+            # served, not whatever occupies the slot at retire time
+            sreq = p.slot_reqs.get(int(slot))
             if sreq is not None:
                 sreq.window_latencies_s.append(lat)
         self._finish_slots(p.finished)

@@ -190,6 +190,67 @@ def test_deadline_eviction_mid_window_and_slot_reuse():
     assert follow.prediction == oracle.prediction
 
 
+def test_evicted_inflight_slot_not_readmitted_until_retire():
+    """Evicting a mid-flight slot must not hand it to a queued request in
+    the same tick: the orphan window's retire would fold the victim's
+    event counts into the follower's just-zeroed accumulators.  The slot
+    stays reserved until the window retires, and the follower's result
+    AND telemetry match a fresh-engine oracle exactly."""
+    _, _, eng = _tiny(n_slots=1)
+    clock = ManualClock()
+    rt = StreamingRuntime(eng, queue_capacity=4, clock=clock)
+    victim = requests_synthetic(1, seed=3)[0]
+    follower = dataclasses.replace(requests_synthetic(1, seed=9)[0], uid=1)
+    [sv] = rt.submit([victim], slo_s=0.25)
+    [sf] = rt.submit([follower])           # queued behind the victim
+    assert rt.tick() and rt._inflight is not None
+    clock.advance(1.0)                     # victim's SLO lapses mid-window
+    rt.tick()                              # evicts, but must NOT re-admit
+    assert sv.status == EVICTED
+    assert sf.admit_s is None or sf.admit_s > sv.finish_s
+    rt.serve()
+    assert sf.status == DONE and follower.done
+    # oracle: the follower alone on a fresh engine — bitwise outputs and
+    # uncontaminated per-layer event accounting
+    _, _, eng2 = _tiny(n_slots=1)
+    oracle = dataclasses.replace(follower, done=False, class_counts=None,
+                                 prediction=None, telemetry=None)
+    eng2.run([oracle])
+    np.testing.assert_array_equal(follower.class_counts, oracle.class_counts)
+    assert follower.prediction == oracle.prediction
+    np.testing.assert_array_equal(follower.telemetry.per_layer_events,
+                                  oracle.telemetry.per_layer_events)
+    np.testing.assert_array_equal(follower.telemetry.inter_layer_dropped,
+                                  oracle.telemetry.inter_layer_dropped)
+    assert follower.telemetry.n_windows == oracle.telemetry.n_windows
+
+
+def test_finished_inflight_slot_survives_deadline_lapse():
+    """A request whose final window is in flight has already done its
+    compute; a deadline lapsing in the one-tick retire gap completes it
+    instead of discarding the finished result as an eviction."""
+    spec, _, eng = _tiny(n_slots=1, window=4)
+    (H, W, C) = spec.in_shape
+    spikes = jnp.zeros((4, H, W, C)).at[0, 0, 0, 0].set(1.0)
+    req = EventRequest.from_dense(0, spikes)   # T=4: one window finishes it
+    clock = ManualClock()
+    rt = StreamingRuntime(eng, queue_capacity=2, clock=clock)
+    [sr] = rt.submit([req], slo_s=0.25)
+    assert rt.tick()
+    assert rt._inflight is not None and rt._inflight.finished == [0]
+    clock.advance(1.0)                     # deadline lapses pre-retire
+    rt.serve()
+    assert sr.status == DONE and req.done
+    assert rt.metrics.evicted_deadline == 0
+    assert eng.stats["completed"] == 1 and eng.stats["evicted"] == 0
+
+
+def test_slot_policy_validated_at_construction():
+    _, _, eng = _tiny(n_slots=1)
+    with pytest.raises(ValueError, match="unknown slot policy"):
+        StreamingRuntime(eng, slot_policy="round-robin")
+
+
 def test_expired_in_queue_never_occupies_a_slot():
     _, _, eng = _tiny(n_slots=1)
     clock = ManualClock()
