@@ -12,7 +12,8 @@ values far *above* baseline print a reminder to ratchet the baseline up.
 reduction at 90% idle.  Beyond the headline, baselines may pin arbitrary
 metrics: ``<metric>_min`` keys are floors (throughput must not sink below
 them), ``<metric>_max`` keys are ceilings (tail latency must not rise
-above them).
+above them), and ``<metric>_monotone_up`` keys require a list-valued
+metric to be strictly increasing (the mesh device-scaling curve).
 
 Baselines correspond to the reduced (``--fast``, oracle-kernel)
 configuration that CI's bench-smoke job runs; the gate cross-checks the
@@ -73,6 +74,22 @@ def check_one(result: dict, base: dict, tolerance: float) -> list:
         if cur > float(cap):
             errors.append(f"{name}: {metric} {cur:.3f} > allowed "
                           f"{float(cap):.3f}")
+    # shape pins: a baseline key "<metric>_monotone_up" requires the run's
+    # "<metric>" to be a strictly increasing list (the mesh scaling curve:
+    # sustained events/s must rise with every added device at fixed
+    # slots-per-device, so a flat or inverted curve fails the gate)
+    for key, want in base.items():
+        if not key.endswith("_monotone_up") or not want:
+            continue
+        metric = key[: -len("_monotone_up")]
+        vals = [float(v) for v in result.get(metric, [])]
+        ok = len(vals) >= 2 and all(b > a for a, b in zip(vals, vals[1:]))
+        print(f"  {name}: {metric} {['%.0f' % v for v in vals]} "
+              f"(required strictly increasing) -> "
+              f"{'OK' if ok else 'REGRESSION'}")
+        if not ok:
+            errors.append(f"{name}: {metric} {vals} is not a strictly "
+                          f"increasing curve")
     return errors
 
 

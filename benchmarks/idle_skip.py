@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import SneConfig
+from repro.core.policies import ExecutionPolicy
 from repro.core.sne_net import init_snn, tiny_net
 from repro.serve.event_engine import EventRequest, EventServeEngine
 from repro.serve.telemetry import summarize
@@ -102,7 +103,8 @@ def sweep(idle_fracs=(0.0, 0.5, 0.75, 0.9), n_requests: int = 4,
     def mk(skip):
         return EventServeEngine(spec, params, n_slots=n_requests,
                                 window=window, sne_cfg=CFG,
-                                use_pallas=use_pallas, idle_skip=skip)
+                                use_pallas=use_pallas,
+                                policy=ExecutionPolicy(idle_skip=skip))
 
     eng = mk(True)
     eng_dense = mk(False)

@@ -151,7 +151,8 @@ def window_launches(spec, params, fusion_policy, use_pallas=None):
     from L x W to L.
     """
     from functools import partial
-    prog = lp.compile_program(spec, fusion_policy=fusion_policy)
+    prog = lp.compile_program(spec, policy=lp.ExecutionPolicy(
+        fusion_policy=fusion_policy))
     states = tuple(lp.padded_state(op, n_slots=SLOTS) for op in prog.ops)
     cc = jnp.zeros((SLOTS, spec.n_classes), jnp.float32)
     E0 = prog.ops[0].step_capacity
@@ -177,8 +178,10 @@ def serve_cohort(spec, params, n_timesteps, seed=0,
         reqs.append(EventRequest.from_dense(
             uid, jnp.asarray(spikes.astype(np.float32))))
     eng = EventServeEngine(spec, params, n_slots=SLOTS, window=WINDOW,
-                           use_pallas=False, dtype_policy=dtype_policy,
-                           fusion_policy=fusion_policy)
+                           use_pallas=False,
+                           policy=lp.ExecutionPolicy(
+                               dtype_policy=dtype_policy,
+                               fusion_policy=fusion_policy))
     t0 = time.time()
     eng.run(reqs)
     wall = time.time() - t0

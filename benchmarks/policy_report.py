@@ -29,7 +29,8 @@ def policy_accounting(qspec, n_slots: int):
     per-policy ``{bytes_per_window_launches, bytes_per_sop,
     pj_per_sop_effective}`` map, and the total f32/int8 bytes ratio.
     """
-    progs = {pol: lp.compile_program(qspec, dtype_policy=pol)
+    progs = {pol: lp.compile_program(
+                 qspec, policy=lp.ExecutionPolicy(dtype_policy=pol))
              for pol in (lp.F32_CARRIER, lp.INT8_NATIVE)}
     rows = []
     totals = {pol: 0 for pol in progs}

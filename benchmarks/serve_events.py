@@ -25,11 +25,27 @@ plus launch-before-retire device overlap — and the report's
 ``sustained_events_per_s`` / ``p99_window_latency_ms`` feed the gate's
 floor and ceiling pins in ``benchmarks/baselines.json``.
 
-    PYTHONPATH=src python -m benchmarks.serve_events [--fast] [--pallas]
+Part 5 — mesh scaling: the slots x devices curve.  At fixed
+slots-per-device, a busy cohort is served on ``backend="mesh"`` engines
+over 1, 2 and 4 devices; sustained events/s must rise strictly with
+every added device (one fused shard_map dispatch covers all D x n slots,
+so the per-window fixed cost amortises over D times the slots — the same
+driver as part 2's sublinear per-window wall time), and every mesh run
+is checked request-for-request bitwise against the local oracle.  The
+curve lands in ``BENCH_serve_events.json`` under ``mesh_events_per_s``
+and is pinned strictly-increasing by the gate
+(``mesh_events_per_s_monotone_up``).  Simulated devices come from
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — the recorded
+config carries the device list, so the gate refuses a run made without
+the flag.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m benchmarks.serve_events [--fast] [--pallas]
 """
 from __future__ import annotations
 
 import dataclasses
+import gc
 import json
 import sys
 import time
@@ -140,23 +156,113 @@ def main(fast: bool = False, use_pallas: bool = False) -> None:
 
     policy_report = dtype_policy_serving(n_req, use_pallas)
     streaming = streaming_vs_sync(n_req, use_pallas)
+    mesh = mesh_scaling(use_pallas=use_pallas)
     out = {
         "bench": "serve_events",
-        "config": {"n_requests": n_req, "use_pallas": bool(use_pallas)},
+        "config": {"n_requests": n_req, "use_pallas": bool(use_pallas),
+                   # device list makes a flag-less run (1 device) a config
+                   # mismatch, so the gate refuses it instead of comparing
+                   # a degenerate curve
+                   "mesh_devices": mesh["device_counts"],
+                   "mesh_slots_per_device": mesh["slots_per_device"]},
         "rows": rows,
         "events_per_joule": ev_per_j,
         "time_vs_events_r2": r2_t,
         "energy_vs_events_r2": r2_e,
         "dtype_policies": policy_report,
         "streaming": streaming,
-        # gate-pinned headline metrics (floor / ceiling in baselines.json)
+        "mesh": mesh,
+        # gate-pinned headline metrics (floor / ceiling / shape pins in
+        # baselines.json)
         "sustained_events_per_s": streaming["sustained_events_per_s"],
         "p99_window_latency_ms": streaming["p99_window_latency_ms"],
         "streaming_vs_sync_ratio": streaming["streaming_vs_sync_ratio"],
+        "mesh_events_per_s": mesh["events_per_s"],
+        "mesh_speedup_maxdev": mesh["speedup_maxdev"],
     }
     with open("BENCH_serve_events.json", "w") as f:
         json.dump(out, f, indent=2)
     print(f"  events/J = {ev_per_j:.3e}; wrote BENCH_serve_events.json")
+
+
+def mesh_scaling(slots_per_device: int = 2, req_factor: int = 3,
+                 use_pallas=False, seed: int = 0, trials: int = 5) -> dict:
+    """The slots x devices scaling curve for ``backend="mesh"`` serving.
+
+    At fixed ``slots_per_device``, a busy cohort (``req_factor`` requests
+    per slot, full sensor activity so every shard stays dense and the
+    fused mesh dispatch path dominates) is served synchronously on mesh
+    engines over 1, 2 and 4 devices (capped by ``jax.device_count()`` —
+    simulate with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+    Per device count: one untimed warm run compiles every shape, then
+    best-of-``trials`` timed runs.  Every mesh run is ALSO checked
+    request-for-request bitwise against the local-backend oracle at the
+    same slot count — the curve only counts if the answers are right.
+
+    Sustained events/s must rise strictly with every added device: one
+    fused shard_map dispatch covers all D x n slots per window, so the
+    per-window fixed cost (launch + collector turnaround) amortises over
+    D times the slots.
+    """
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(seed), spec)
+    dev_counts = [d for d in (1, 2, 4) if d <= jax.device_count()]
+    rates, rows = [], []
+    for D in dev_counts:
+        n_slots = slots_per_device * D
+        n = req_factor * n_slots
+        spikes, _ = batch_at(seed, 0, n, TINY)
+        payloads = [EventRequest.from_dense(i, spikes[i]) for i in range(n)]
+
+        def clone():
+            return [dataclasses.replace(r) for r in payloads]
+
+        oracle = clone()
+        EventServeEngine(spec, params, n_slots=n_slots, window=4,
+                         use_pallas=use_pallas).run(oracle)
+        eng = EventServeEngine(spec, params, n_slots=n_slots, window=4,
+                               use_pallas=use_pallas, devices=D,
+                               policy=lp.ExecutionPolicy(backend="mesh"))
+        gc.collect()   # allocator hygiene: don't charge D's timed trials
+        #                for garbage the previous device count left behind
+        best = 0.0
+        for trial in range(trials + 1):          # trial 0 warms/compiles
+            reqs = clone()
+            ev0 = eng.stats["collected_events"]
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            dt = time.perf_counter() - t0
+            for a, b in zip(oracle, reqs):
+                np.testing.assert_array_equal(
+                    np.asarray(a.class_counts), np.asarray(b.class_counts),
+                    err_msg=f"mesh D={D} diverged from local, uid={a.uid}")
+            if trial:
+                best = max(best,
+                           (eng.stats["collected_events"] - ev0) / dt)
+        rates.append(best)
+        rows.append({"devices": D, "slots": n_slots, "requests": n,
+                     "events_per_s": best,
+                     "mesh_global_windows":
+                         eng.stats["mesh_global_windows"],
+                     "mesh_shard_windows": eng.stats["mesh_shard_windows"]})
+    print(f"  mesh scaling ({slots_per_device} slots/device, bitwise == "
+          f"local at every point):")
+    for r in rows:
+        print(f"    {r['devices']} device(s) x {r['slots']:>2} slots: "
+              f"{r['events_per_s']:>12.0f} events/s "
+              f"({r['mesh_global_windows']} fused mesh windows)")
+    if len(rates) >= 2:
+        assert all(b > a for a, b in zip(rates, rates[1:])), (
+            f"mesh events/s not strictly increasing with devices: {rates}")
+        print(f"    speedup {max(dev_counts)}v1: "
+              f"x{rates[-1] / rates[0]:.2f}")
+    else:
+        print("    (single device visible — run under XLA_FLAGS="
+              "--xla_force_host_platform_device_count=4 for the curve)")
+    return {"device_counts": dev_counts,
+            "slots_per_device": slots_per_device,
+            "events_per_s": rates, "rows": rows,
+            "speedup_maxdev": rates[-1] / rates[0]}
 
 
 def _straggler_cohort(seed: int, n: int, every: int = 3, factor: int = 5):
@@ -289,7 +395,7 @@ def dtype_policy_serving(n_req: int, use_pallas, seed: int = 0) -> dict:
     for pol in (lp.F32_CARRIER, lp.INT8_NATIVE):
         eng = EventServeEngine(qn.spec, qn.params_for(pol), n_slots=2,
                                window=4, use_pallas=use_pallas,
-                               dtype_policy=pol)
+                               policy=lp.ExecutionPolicy(dtype_policy=pol))
         reqs = [EventRequest.from_dense(i, spikes[i]) for i in range(n_req)]
         eng.run(reqs)
         agg = summarize([r.telemetry for r in reqs])

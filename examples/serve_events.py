@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python examples/serve_events.py [--requests 8] \
         [--slots 4] [--window 4] [--oracle] [--no-idle-skip] \
-        [--dtype-policy int8-native] [--fusion-policy per-step]
+        [--dtype-policy int8-native] [--fusion-policy per-step] \
+        [--backend mesh]
     PYTHONPATH=src python examples/serve_events.py --source file \
         [--file path/to/recording.npz|.aedat] [--speedup 2000]
     PYTHONPATH=src python examples/serve_events.py --mode streaming \
@@ -25,7 +26,11 @@ bypass the batched Pallas launch entirely and their leak is applied
 analytically.  ``--dtype-policy int8-native`` quantizes the net
 (`core.quant.quantize_net`) and serves it on the native integer datapath;
 ``--fusion-policy per-step`` selects the launch-per-timestep oracle
-lowering.  Each completed inference reports its measured event counts
+lowering; ``--backend mesh`` shards the slot axis across the visible JAX
+devices (simulate some on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``) — the four knobs
+together form the `repro.serve.ExecutionPolicy` the engine is built
+with.  Each completed inference reports its measured event counts
 mapped through the analytic SNE hardware model — latency, energy, and
 activity per request.
 
@@ -39,9 +44,10 @@ request (expiry in queue, eviction mid-service).  The engine runs with
 donated device buffers and reports sustained events/s plus window-
 latency percentiles alongside the analytic telemetry.
 
-This example's flags mirror `EventServeEngine`'s constructor kwargs and
-the streaming runtime's; CI runs it under both policies and both modes
-so the surfaces cannot drift apart.
+This example's flags mirror `ExecutionPolicy`'s axes and the runtimes'
+constructor kwargs; CI runs it under both policies and both modes so the
+surfaces cannot drift apart.  Everything imports from the curated
+`repro.serve` public API.
 """
 import argparse
 import time
@@ -49,16 +55,17 @@ import time
 import jax
 import numpy as np
 
-from repro.core.policies import (DTYPE_POLICIES, F32_CARRIER,
-                                 FUSED_WINDOW, FUSION_POLICIES, INT8_NATIVE)
+from repro.core.policies import (BACKENDS, BACKEND_LOCAL, DTYPE_POLICIES,
+                                 F32_CARRIER, FUSED_WINDOW, FUSION_POLICIES,
+                                 INT8_NATIVE)
 from repro.core.quant import quantize_net
 from repro.core.sne_net import init_snn, tiny_net
 from repro.data.events_ds import (TINY, ReplayClient, batch_at,
                                   load_recording, sample_recording_path,
                                   segment_recording)
-from repro.serve.event_engine import EventRequest, EventServeEngine
-from repro.serve.runtime import PoissonLoadGen, StreamingRuntime
-from repro.serve.telemetry import proportionality_r2, summarize
+from repro.serve import (EventRequest, EventServeEngine, ExecutionPolicy,
+                         PoissonLoadGen, StreamingRuntime,
+                         proportionality_r2, summarize)
 
 
 def main():
@@ -89,6 +96,10 @@ def main():
                     default=FUSED_WINDOW,
                     help="window lowering: fused-window (one launch per "
                     "layer per window, default) or the per-step oracle")
+    ap.add_argument("--backend", choices=BACKENDS, default=BACKEND_LOCAL,
+                    help="local = single-device engine (the parity "
+                    "oracle); mesh = slot axis sharded across the visible "
+                    "JAX devices with per-shard idle-skip compaction")
     ap.add_argument("--mode", choices=("sync", "streaming"), default="sync",
                     help="sync = EventServeEngine.run (the parity oracle); "
                     "streaming = the double-buffered StreamingRuntime under "
@@ -107,13 +118,18 @@ def main():
     if args.dtype_policy == INT8_NATIVE:
         qn = quantize_net(params, spec)
         spec, params = qn.spec, qn.params_for(args.dtype_policy)
+    policy = ExecutionPolicy(dtype_policy=args.dtype_policy,
+                             fusion_policy=args.fusion_policy,
+                             idle_skip=not args.no_idle_skip,
+                             backend=args.backend)
     eng = EventServeEngine(spec, params, n_slots=args.slots,
                            window=args.window,
                            use_pallas=False if args.oracle else None,
-                           idle_skip=not args.no_idle_skip,
-                           dtype_policy=args.dtype_policy,
-                           fusion_policy=args.fusion_policy,
+                           policy=policy,
                            donate_buffers=(args.mode == "streaming"))
+    if args.backend != BACKEND_LOCAL:
+        print(f"=== mesh backend: {eng.D} shard(s) x {eng.spd} slot(s) "
+              f"over {jax.device_count()} visible device(s) ===")
 
     labels = None
     client = None

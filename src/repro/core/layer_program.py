@@ -65,7 +65,9 @@ from repro.core.lif import (LifParams, apply_leak, fire_and_reset,
 # the policy names live in the leaf module `core.policies` (see its
 # docstring); re-exported here for every executor caller
 from repro.core.policies import (DTYPE_POLICIES, F32_CARRIER, FUSED_WINDOW,
-                                 FUSION_POLICIES, INT8_NATIVE, PER_STEP)
+                                 FUSION_POLICIES, INT8_NATIVE, PER_STEP,
+                                 ExecutionPolicy, resolve_policy)
+from repro.core.policies import all_policies as all_policies  # noqa: F401
 from repro.core.quant import INT8_MAX, INT8_MIN
 from repro.kernels.event_conv.ops import (event_conv_batched,
                                           event_conv_window)
@@ -243,22 +245,42 @@ def layer_op(spec: EConvSpec, index: int = 0,
                    dtype_policy=dtype_policy)
 
 
-@functools.lru_cache(maxsize=64)
 def compile_program(spec: "SNNSpec",
                     step_capacities: Optional[Tuple[int, ...]] = None,
                     step_activity: float = 0.25, step_slack: float = 4.0,
                     step_align: int = 8,
-                    dtype_policy: str = F32_CARRIER,
-                    fusion_policy: str = PER_STEP) -> LayerProgram:
+                    dtype_policy: Optional[str] = None,
+                    fusion_policy: Optional[str] = None,
+                    policy: Optional[ExecutionPolicy] = None) -> LayerProgram:
     """Compile ``SNNSpec`` into the typed op sequence the executors run.
 
     ``step_capacities`` overrides the per-layer per-timestep event buckets
     (one per layer); by default :func:`layer_step_capacity` sizes them.
-    ``dtype_policy`` selects the datapath dtype domain and
-    ``fusion_policy`` the window lowering (one switch each for every
-    entry point); int8-native specs are validated here, at compile time.
-    The program is static and hashable — safe to close over in ``jax.jit``.
+    ``policy`` (an `ExecutionPolicy`) selects the datapath dtype domain
+    and the window lowering in one value; the program records only the
+    two compile-time axes (``idle_skip`` and ``backend`` are serving-time
+    concerns).  The legacy ``dtype_policy=`` / ``fusion_policy=`` kwargs
+    keep working through the deprecation shim, with their historical
+    defaults (f32 carrier, per-step).  Results are cached (LRU) on the
+    resolved policy, so equal calls share one program object — static and
+    hashable, safe to close over in ``jax.jit``.
     """
+    pol = resolve_policy(
+        "core.layer_program.compile_program", policy,
+        default=ExecutionPolicy(fusion_policy=PER_STEP),
+        dtype_policy=dtype_policy, fusion_policy=fusion_policy)
+    return _compile_program_cached(spec, step_capacities, step_activity,
+                                   step_slack, step_align,
+                                   pol.dtype_policy, pol.fusion_policy)
+
+
+@functools.lru_cache(maxsize=64)
+def _compile_program_cached(spec: "SNNSpec",
+                            step_capacities: Optional[Tuple[int, ...]],
+                            step_activity: float, step_slack: float,
+                            step_align: int, dtype_policy: str,
+                            fusion_policy: str) -> LayerProgram:
+    """Cached compile body keyed on the resolved policy axes."""
     if step_capacities is not None and len(step_capacities) != len(spec.layers):
         raise ValueError("need one per-timestep capacity per layer")
     if dtype_policy not in DTYPE_POLICIES:   # layer_op re-checks per layer,

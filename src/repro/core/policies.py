@@ -1,4 +1,4 @@
-"""Execution-policy names for the layer-program executor (single source).
+"""Execution policies for the layer-program executor (single source).
 
 A leaf module so every layer of the stack — `core.quant` (lowering),
 `core.econv` / `core.sne_net` (entry points), `core.layer_program`
@@ -7,7 +7,7 @@ place without import cycles (econv cannot import layer_program, which
 imports it).  `core.layer_program` re-exports these for callers that
 already import it.
 
-Two orthogonal axes (see ``docs/policies.md`` for the full matrix):
+Three orthogonal axes (see ``docs/policies.md`` for the full matrix):
 
 * **dtype policy** — which dtype domain the datapath computes in:
   ``"f32-carrier"`` (the exactness oracle; integers held in float32) or
@@ -19,7 +19,25 @@ Two orthogonal axes (see ``docs/policies.md`` for the full matrix):
   ``leak -> scatter -> clip -> fire -> reset`` chain over all T timesteps
   of a window in ONE launch per layer, membrane resident in VMEM scratch
   — L launches per window instead of L×T).
+* **backend** — where the serving engine runs the window step:
+  ``"local"`` (one device, the bitwise parity oracle) or ``"mesh"``
+  (the slot axis sharded across a JAX device mesh — replicated weights,
+  per-shard membrane slabs, a host-side least-loaded router; see
+  `repro.serve.mesh_engine`).  Backends must agree bitwise per request.
+
+The whole configuration travels as one frozen :class:`ExecutionPolicy`
+value, validated at construction — an unknown policy name fails where the
+policy is *written*, not windows later inside a serve loop.  The engine
+and compiler kwargs it replaced (``dtype_policy=`` / ``fusion_policy=`` /
+``idle_skip=`` / ``backend=``) keep working through the deprecation shim
+(:func:`resolve_policy`), which warns once per API surface.
 """
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Tuple
+
 F32_CARRIER = "f32-carrier"
 INT8_NATIVE = "int8-native"
 DTYPE_POLICIES = (F32_CARRIER, INT8_NATIVE)
@@ -27,3 +45,110 @@ DTYPE_POLICIES = (F32_CARRIER, INT8_NATIVE)
 PER_STEP = "per-step"
 FUSED_WINDOW = "fused-window"
 FUSION_POLICIES = (PER_STEP, FUSED_WINDOW)
+
+BACKEND_LOCAL = "local"
+BACKEND_MESH = "mesh"
+BACKENDS = (BACKEND_LOCAL, BACKEND_MESH)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """One frozen value naming every execution-policy axis.
+
+    Replaces the kwarg sprawl (``dtype_policy=``, ``fusion_policy=``,
+    ``idle_skip=``, ``backend=``) on `core.layer_program.compile_program`,
+    `serve.event_engine.EventServeEngine` and
+    `serve.runtime.pipeline.StreamingRuntime` — construct once, pass as
+    ``policy=``.  Hashable and frozen, so it is safe as a jit-cache /
+    ``lru_cache`` key, and every name is validated here at construction.
+
+    Defaults are the production serving configuration: the float32
+    carrier, fused windows, idle skip on, local backend.  Note
+    `compile_program`'s *legacy* kwargs defaulted to ``"per-step"``;
+    callers porting to ``policy=`` select the fusion explicitly.
+    """
+
+    dtype_policy: str = F32_CARRIER
+    fusion_policy: str = FUSED_WINDOW
+    idle_skip: bool = True
+    backend: str = BACKEND_LOCAL
+
+    def __post_init__(self):
+        """Validate every axis name — fail where the policy is written."""
+        if self.dtype_policy not in DTYPE_POLICIES:
+            raise ValueError(f"unknown dtype policy {self.dtype_policy!r} "
+                             f"(expected one of {DTYPE_POLICIES})")
+        if self.fusion_policy not in FUSION_POLICIES:
+            raise ValueError(f"unknown fusion policy {self.fusion_policy!r} "
+                             f"(expected one of {FUSION_POLICIES})")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             f"(expected one of {BACKENDS})")
+        if not isinstance(self.idle_skip, bool):
+            raise ValueError(f"idle_skip must be a bool, "
+                             f"got {self.idle_skip!r}")
+
+    def __str__(self):
+        """Compact ``dtype/fusion/backend`` label (stable pytest ids)."""
+        tag = "" if self.idle_skip else "/no-idle-skip"
+        return (f"{self.dtype_policy}/{self.fusion_policy}/"
+                f"{self.backend}{tag}")
+
+
+def all_policies(backends: Tuple[str, ...] = BACKENDS,
+                 idle_skip: bool = True) -> Tuple[ExecutionPolicy, ...]:
+    """Enumerate the full dtype × fusion × backend policy matrix.
+
+    The single source for matrix-parametrized tests: a new policy axis
+    (like ``backend``) joins every matrix test automatically instead of
+    each suite growing its own hand-rolled combo loop.  Order is stable
+    (backend-major, then dtype, then fusion) so pytest ids don't churn.
+    """
+    return tuple(ExecutionPolicy(dtype_policy=d, fusion_policy=f,
+                                 idle_skip=idle_skip, backend=b)
+                 for b in backends
+                 for d in DTYPE_POLICIES
+                 for f in FUSION_POLICIES)
+
+
+# one DeprecationWarning per API surface per process — enough to notice,
+# not enough to drown a serve loop.  Tests clear it between asserts.
+_LEGACY_WARNED: set = set()
+
+
+def resolve_policy(api: str, policy: Optional[ExecutionPolicy] = None,
+                   default: Optional[ExecutionPolicy] = None,
+                   **legacy) -> ExecutionPolicy:
+    """Fold a ``policy=`` value or legacy kwargs into one ExecutionPolicy.
+
+    The deprecation shim every redesigned surface funnels through:
+
+    * ``policy`` given — returned as-is (legacy kwargs must all be None;
+      mixing the two surfaces is ambiguous and raises).
+    * only legacy kwargs given (``dtype_policy=`` / ``fusion_policy=`` /
+      ``idle_skip=`` / ``backend=`` values that are not None) — they
+      override ``default`` and a DeprecationWarning fires once per
+      ``api`` name.
+    * neither — ``default`` (the surface's historical defaults).
+    """
+    given = {k: v for k, v in legacy.items() if v is not None}
+    if policy is not None:
+        if not isinstance(policy, ExecutionPolicy):
+            raise TypeError(f"{api}: policy must be an ExecutionPolicy, "
+                            f"got {type(policy).__name__}")
+        if given:
+            raise ValueError(
+                f"{api}: pass either policy= or the legacy kwargs "
+                f"({', '.join(sorted(given))}), not both")
+        return policy
+    base = default if default is not None else ExecutionPolicy()
+    if not given:
+        return base
+    if api not in _LEGACY_WARNED:
+        _LEGACY_WARNED.add(api)
+        warnings.warn(
+            f"{api}: the {', '.join(k + '=' for k in sorted(given))} "
+            f"kwargs are deprecated; pass "
+            f"policy=ExecutionPolicy(...) instead (repro.core.policies)",
+            DeprecationWarning, stacklevel=3)
+    return dataclasses.replace(base, **given)

@@ -166,7 +166,9 @@ def event_apply(params: Sequence[EConvParams], spec: SNNSpec,
     across policies on the same integer-domain net.
     """
     from repro.core.layer_program import compile_program, run_stream
-    program = compile_program(spec, dtype_policy=dtype_policy)
+    from repro.core.policies import PER_STEP, ExecutionPolicy
+    program = compile_program(spec, policy=ExecutionPolicy(
+        dtype_policy=dtype_policy, fusion_policy=PER_STEP))
     s, stats_all = run_stream(program, params, stream, capacities,
                               spec.n_timesteps)
     total_ev = sum(st.n_update_events for st in stats_all)

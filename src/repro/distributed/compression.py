@@ -28,11 +28,13 @@ INT8_MAX = 127.0
 
 
 def quantize_int8(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Round ``x / scale`` into the clipped int8 grid."""
     return jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX) \
         .astype(jnp.int8)
 
 
 def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Map int8 codes back to float32: ``q * scale``."""
     return q.astype(jnp.float32) * scale
 
 
@@ -51,10 +53,13 @@ def int8_psum(x: jnp.ndarray, axis_name) -> jnp.ndarray:
 
 
 class ErrorFeedback(NamedTuple):
+    """Per-leaf residual state for error-feedback compression."""
+
     residual: Any      # pytree matching grads
 
 
 def ef_init(grads: Any) -> ErrorFeedback:
+    """Zero residuals shaped like ``grads`` (float32 accumulators)."""
     return ErrorFeedback(residual=jax.tree.map(
         lambda g: jnp.zeros(g.shape, jnp.float32), grads))
 
@@ -66,6 +71,7 @@ def ef_compress(grads: Any, ef: ErrorFeedback) -> Tuple[Any, Any, ErrorFeedback]
     and dequantises with ``scales``; the residual carries what int8 lost.
     """
     def one(g, r):
+        """Quantise one leaf with its residual folded in."""
         corrected = g.astype(jnp.float32) + r
         amax = jnp.max(jnp.abs(corrected))
         scale = amax / INT8_MAX + 1e-12
@@ -84,6 +90,7 @@ def ef_compress(grads: Any, ef: ErrorFeedback) -> Tuple[Any, Any, ErrorFeedback]
 
 
 def ef_decompress(q8: Any, scales: Any) -> Any:
+    """Dequantise a compressed pytree leaf-by-leaf."""
     return jax.tree.map(dequantize_int8, q8, scales)
 
 

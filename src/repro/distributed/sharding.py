@@ -1,15 +1,25 @@
-"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+"""Device-mesh sharding: the serving slot axis + LM logical-axis rules.
 
-Every parameter and activation in the model stack is annotated with
-*logical* axis names ("embed", "mlp", "heads", "vocab", "experts", "batch",
-"seq", ...). A :class:`MeshRules` table maps logical names to physical mesh
-axes; resolution automatically drops a mapping when the dimension size does
-not divide the mesh-axis size (e.g. 40 attention heads on a 16-way model
-axis fall back to replication while the 14336-wide FFN still shards) — the
-same policy MaxText applies, which keeps one rule table valid across all
-ten assigned architectures.
+Two deliberate public surfaces, nothing else:
 
-Parallelism encoding on the production mesh ``(pod, data, model)``:
+**Slot-axis helpers (mesh serving).**  The event-serving mesh backend
+(`repro.serve.mesh_engine`) shards exactly one axis — the engine's slot
+axis — across a 1-D device mesh named :data:`SLOT_AXIS`: per-shard
+membrane slabs, replicated weights.  :func:`slot_mesh` builds the mesh,
+:func:`slot_spec` / :func:`slot_sharding` place the slot-sharded tensors,
+:func:`replicated` places the weights, and the version-compat
+:func:`shard_map` wraps the fused window step over it.
+
+**Logical-axis rules (the LM stack).**  Every parameter and activation in
+the model stack is annotated with *logical* axis names ("embed", "mlp",
+"heads", "vocab", "experts", "batch", "seq", ...). A :class:`MeshRules`
+table maps logical names to physical mesh axes; resolution automatically
+drops a mapping when the dimension size does not divide the mesh-axis
+size (e.g. 40 attention heads on a 16-way model axis fall back to
+replication while the 14336-wide FFN still shards) — the same policy
+MaxText applies.  Parallelism encoding on the production mesh
+``(pod, data, model)``:
+
   * DP    — "batch" -> ("pod", "data")
   * FSDP  — "p_embed" (the d_model axis of every weight) -> "data";
             gathered on use, so optimizer state & grads stay sharded.
@@ -17,6 +27,11 @@ Parallelism encoding on the production mesh ``(pod, data, model)``:
   * EP    — "experts" -> "model".
   * SP    — "kv_seq" (decode KV cache length) -> "model"; long-context
             decode additionally folds "data" into the sequence shards.
+
+Model code reaches the rules through the process-global context
+(:func:`set_mesh_rules` / :func:`logical`) so annotations need no
+plumbing; the serving mesh backend deliberately does NOT use the global
+context — its mesh is engine-owned state, never ambient.
 """
 from __future__ import annotations
 
@@ -51,6 +66,61 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
               **{flag: check_vma})
 
 
+# ---------------------------------------------------------------------------
+# Slot-axis helpers — the mesh serving surface (repro.serve.mesh_engine).
+# ---------------------------------------------------------------------------
+
+SLOT_AXIS = "slots"
+
+
+def slot_mesh(devices=None) -> Mesh:
+    """Build the 1-D serving mesh over the slot axis.
+
+    ``devices`` is a device sequence or a device *count* (the first ``n``
+    of ``jax.devices()``); by default every visible device joins.  On a
+    CPU-only host, simulate devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    jax initialises its backend).
+    """
+    if devices is None:
+        devs = jax.devices()
+    elif isinstance(devices, int):
+        if devices < 1:
+            raise ValueError(f"need at least 1 device, got {devices}")
+        devs = jax.devices()
+        if devices > len(devs):
+            raise ValueError(f"requested {devices} devices, "
+                             f"only {len(devs)} visible")
+        devs = devs[:devices]
+    else:
+        devs = list(devices)
+    return Mesh(np.asarray(devs), (SLOT_AXIS,))
+
+
+def slot_spec(ndim: int, axis: int = 0) -> P:
+    """PartitionSpec sharding dimension ``axis`` of a rank-``ndim`` tensor.
+
+    Membrane slabs are ``(N, Hp, Wp, C)`` -> ``slot_spec(4, 0)``;
+    collector tensors are window-major ``(W, N, ...)`` ->
+    ``slot_spec(ndim, 1)``.
+    """
+    return P(*[SLOT_AXIS if i == axis else None for i in range(ndim)])
+
+
+def slot_sharding(mesh: Mesh, ndim: int, axis: int = 0) -> NamedSharding:
+    """NamedSharding for a tensor slot-sharded along ``axis``."""
+    return NamedSharding(mesh, slot_spec(ndim, axis))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """NamedSharding replicating a tensor across the whole mesh (weights)."""
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis rules — the LM model-stack surface.
+# ---------------------------------------------------------------------------
+
 @dataclasses.dataclass(frozen=True)
 class MeshRules:
     """Logical-axis -> physical mesh axis mapping."""
@@ -58,6 +128,7 @@ class MeshRules:
     rules: Tuple[Tuple[str, Axis], ...]
 
     def get(self, name: Optional[str]) -> Axis:
+        """Look up the physical axis for one logical name (None = repl)."""
         if name is None:
             return None
         for k, v in self.rules:
@@ -94,6 +165,7 @@ class MeshRules:
 
     def sharding(self, axes: Sequence[Optional[str]], shape: Sequence[int],
                  mesh: Mesh) -> NamedSharding:
+        """Resolve logical axes straight to a NamedSharding on ``mesh``."""
         return NamedSharding(mesh, self.spec(axes, shape, mesh))
 
 
@@ -158,16 +230,19 @@ _CTX: dict = {"rules": None, "mesh": None}
 
 
 def set_mesh_rules(mesh: Mesh, rules: MeshRules) -> None:
+    """Install the process-global mesh + rule table for :func:`logical`."""
     _CTX["mesh"] = mesh
     _CTX["rules"] = rules
 
 
 def clear_mesh_rules() -> None:
+    """Remove the global mesh/rules (single-device tests, teardown)."""
     _CTX["mesh"] = None
     _CTX["rules"] = None
 
 
 def current_mesh() -> Optional[Mesh]:
+    """The globally-installed mesh, or None outside a launch context."""
     return _CTX["mesh"]
 
 
@@ -182,10 +257,3 @@ def logical(x: jax.Array, *axes: Optional[str]) -> jax.Array:
         return x
     spec = rules.spec(axes, x.shape, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
-
-
-def spec_for(axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
-    mesh, rules = _CTX["mesh"], _CTX["rules"]
-    if mesh is None or rules is None:
-        return P()
-    return rules.spec(axes, shape, mesh)

@@ -1,0 +1,52 @@
+"""Event-stream serving: the public API.
+
+Everything an application needs to serve event streams imports from
+here — the engine (local or mesh backend, selected by
+`repro.core.policies.ExecutionPolicy`), the streaming runtime stack,
+and request telemetry:
+
+    from repro.serve import (EventRequest, EventServeEngine,
+                             StreamingRuntime, ExecutionPolicy)
+
+    eng = EventServeEngine(spec, params, n_slots=8,
+                           policy=ExecutionPolicy(backend="mesh"))
+
+Module layout behind the facade:
+
+  * `repro.serve.event_engine` — slot-batched engine + request type;
+  * `repro.serve.mesh_engine`  — the slot-sharded multi-device backend
+    (constructed via ``ExecutionPolicy(backend="mesh")``, re-exported
+    for isinstance checks);
+  * `repro.serve.runtime`      — streaming runtime (admission, SLOs,
+    load generation, clocks, metrics);
+  * `repro.serve.telemetry`    — per-request energy/event telemetry.
+
+The LM decode engine (`repro.serve.engine.ServeEngine`) is a separate
+subsystem and deliberately not part of this surface.
+"""
+from repro.core.policies import ExecutionPolicy, all_policies
+from repro.serve.event_engine import (EventRequest, EventServeEngine,
+                                      default_step_capacities)
+from repro.serve.mesh_engine import MeshEventServeEngine
+from repro.serve.runtime import (ManualClock, PoissonLoadGen,
+                                 StreamingMetrics, StreamingRuntime,
+                                 StreamRequest, WallClock,
+                                 requests_from_recording,
+                                 requests_synthetic)
+from repro.serve.telemetry import (RequestTelemetry, proportionality_r2,
+                                   request_telemetry, summarize)
+
+__all__ = [
+    # engine
+    "EventRequest", "EventServeEngine", "MeshEventServeEngine",
+    "default_step_capacities",
+    # execution policy (re-export: the engine's construction knob)
+    "ExecutionPolicy", "all_policies",
+    # streaming runtime
+    "StreamingRuntime", "StreamRequest", "PoissonLoadGen",
+    "StreamingMetrics", "WallClock", "ManualClock",
+    "requests_from_recording", "requests_synthetic",
+    # telemetry
+    "RequestTelemetry", "request_telemetry", "summarize",
+    "proportionality_r2",
+]

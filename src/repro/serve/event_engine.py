@@ -80,12 +80,14 @@ import numpy as np
 from repro.core import events as ev
 from repro.core.econv import EConvParams
 from repro.core.engine import SneConfig
-from repro.core.layer_program import (F32_CARRIER, FUSED_WINDOW, LayerOp,
+from repro.core.layer_program import (FUSED_WINDOW, LayerOp,
                                       check_native_weights, compile_program,
                                       state_dtype, window_step)
 from repro.core.layer_program import \
     default_step_capacities as _program_step_capacities
 from repro.core.lif import supports_idle_skip
+from repro.core.policies import (BACKEND_LOCAL, BACKEND_MESH,
+                                 ExecutionPolicy, resolve_policy)
 from repro.core.sne_net import SNNSpec
 from repro.serve.telemetry import RequestTelemetry, request_telemetry
 
@@ -175,22 +177,50 @@ def default_step_capacities(spec: SNNSpec, activity: float = 0.25,
 class EventServeEngine:
     """Continuous slot-batched inference over concurrent event streams."""
 
+    def __new__(cls, *args, **kwargs):
+        """Dispatch construction on ``policy.backend``.
+
+        The Ludwig-style zero-code-change knob: constructing an
+        `EventServeEngine` with ``policy=ExecutionPolicy(backend="mesh")``
+        (or the legacy ``backend="mesh"`` kwarg) returns a
+        `repro.serve.mesh_engine.MeshEventServeEngine` — same constructor
+        args, same serving surface, slot axis sharded across the device
+        mesh.  ``"local"`` (the default) stays this class, the bitwise
+        parity oracle.
+        """
+        if cls is EventServeEngine:
+            pol = kwargs.get("policy")
+            backend = (pol.backend if isinstance(pol, ExecutionPolicy)
+                       else kwargs.get("backend"))
+            if backend == BACKEND_MESH:
+                from repro.serve.mesh_engine import MeshEventServeEngine
+                return super().__new__(MeshEventServeEngine)
+        return super().__new__(cls)
+
     def __init__(self, spec: SNNSpec, params: Sequence[EConvParams],
                  n_slots: int, window: int = 4,
                  step_capacities: Optional[Sequence[int]] = None,
                  sne_cfg: Optional[SneConfig] = None,
                  n_parallel_slices: Optional[int] = None,
                  co_blk: int = 128, use_pallas: Optional[bool] = None,
-                 idle_skip: bool = True, dtype_policy: str = F32_CARRIER,
-                 fusion_policy: str = FUSED_WINDOW,
-                 donate_buffers: bool = False):
+                 idle_skip: Optional[bool] = None,
+                 dtype_policy: Optional[str] = None,
+                 fusion_policy: Optional[str] = None,
+                 donate_buffers: bool = False,
+                 policy: Optional[ExecutionPolicy] = None,
+                 backend: Optional[str] = None):
         """Compile the network into the engine's jitted per-window step.
 
-        ``dtype_policy`` selects the datapath dtype domain;
-        ``fusion_policy`` the window lowering — the default
-        ``"fused-window"`` runs each layer's whole window in one Pallas
-        launch (L launches per window); ``"per-step"`` is the bitwise-
-        identical oracle lowering (L×window launches).
+        ``policy`` (an `repro.core.policies.ExecutionPolicy`) selects the
+        execution configuration in one value: the datapath dtype domain,
+        the window lowering (the default ``"fused-window"`` runs each
+        layer's whole window in one Pallas launch, L per window;
+        ``"per-step"`` is the bitwise-identical oracle, L×window), the
+        window-level idle skip, and the backend (``"local"`` here;
+        ``"mesh"`` dispatches to `serve.mesh_engine.MeshEventServeEngine`
+        via ``__new__``).  The legacy ``dtype_policy=`` /
+        ``fusion_policy=`` / ``idle_skip=`` / ``backend=`` kwargs keep
+        working through the deprecation shim (warns once per process).
         ``donate_buffers`` donates the membrane slabs and class-count
         accumulator to each window step (``jax.jit`` ``donate_argnums``)
         so XLA reuses their device buffers in place — the resident slot
@@ -202,18 +232,29 @@ class EventServeEngine:
         # fail fast — not inside _finish after a request was fully served
         if n_parallel_slices is not None and n_parallel_slices < 1:
             raise ValueError(f"n_parallel_slices={n_parallel_slices} < 1")
+        pol = resolve_policy(
+            "serve.event_engine.EventServeEngine", policy,
+            default=ExecutionPolicy(), dtype_policy=dtype_policy,
+            fusion_policy=fusion_policy, idle_skip=idle_skip,
+            backend=backend)
+        if pol.backend != BACKEND_LOCAL:
+            # unreachable through EventServeEngine(...) — __new__ routes
+            # mesh policies to the subclass — but loud for direct callers
+            raise ValueError(f"EventServeEngine is the {BACKEND_LOCAL!r} "
+                             f"backend; policy selects {pol.backend!r}")
+        self.policy = pol
         self.spec = spec
         self.params = list(params)
         self.N = n_slots
         self.W = window
-        self.dtype_policy = dtype_policy
-        self.fusion_policy = fusion_policy
+        self.dtype_policy = pol.dtype_policy
+        self.fusion_policy = pol.fusion_policy
         # compile the network once; the program is the engine's datapath
         # (compile also validates the spec against both policies)
         self.program = compile_program(
             spec, step_capacities=(tuple(step_capacities)
                                    if step_capacities is not None else None),
-            dtype_policy=dtype_policy, fusion_policy=fusion_policy)
+            policy=dataclasses.replace(pol, backend=BACKEND_LOCAL))
         # fail at construction, not at first trace: the native datapath
         # executes integer codes (same single-sourced check the executor
         # applies per scatter — see layer_program.check_native_weights)
@@ -224,7 +265,7 @@ class EventServeEngine:
         self.n_parallel_slices = n_parallel_slices
         # the lazy skip is only exact for hard resets (see core.lif);
         # soft-reset networks silently fall back to dense stepping
-        self.idle_skip = idle_skip and all(
+        self.idle_skip = pol.idle_skip and all(
             supports_idle_skip(l.lif) for l in spec.layers)
         L = len(spec.layers)
 
@@ -271,6 +312,18 @@ class EventServeEngine:
         self._step = jax.jit(step_fn, donate_argnums=(1, 2)
                              if donate_buffers else ())
 
+        # slot teardown fused into one dispatch: zeroing every membrane
+        # slab row plus the class-count row and reading the finished
+        # counts back costs one launch here, vs one eager scatter per
+        # state tensor per finish (which dominates host time at high
+        # request turnover)
+        def _reset_fn(states, cc, slot):
+            row = cc[slot]
+            states = tuple(v.at[slot].set(jnp.zeros((), v.dtype))
+                           for v in states)
+            return states, cc.at[slot].set(0.0), row
+        self._reset = jax.jit(_reset_fn)
+
     # --- helpers -----------------------------------------------------------
 
     def _zero_state(self, op: LayerOp) -> jnp.ndarray:
@@ -282,10 +335,10 @@ class EventServeEngine:
         return jnp.zeros((self.N, Ho + 2 * h, Wo + 2 * h, Co),
                          state_dtype(op))
 
-    def _reset_slot_state(self, slot: int) -> None:
-        self.states = tuple(v.at[slot].set(jnp.zeros((), v.dtype))
-                            for v in self.states)
-        self.class_counts = self.class_counts.at[slot].set(0.0)
+    def _reset_slot_state(self, slot: int) -> jnp.ndarray:
+        self.states, self.class_counts, row = self._reset(
+            self.states, self.class_counts, slot)
+        return row
 
     @property
     def n_active(self) -> int:
@@ -495,15 +548,36 @@ class EventServeEngine:
         slots whose request completed with this window; callers must
         :meth:`_finish` those only after the window is retired.
         """
-        act_idx = col.part_idx
-        if self.idle_skip:
-            dense_idx = act_idx[col.n_win_ev[act_idx] > 0]
-        else:
-            dense_idx = act_idx
+        dense_idx = self._select_dense(col)
         inflight = None
         if len(dense_idx):
             inflight = self._launch_window(dense_idx, col.xyc, col.gate,
                                            col.alive, col.max_bucket)
+        return inflight, self._account_window(col, dense_idx)
+
+    def _select_dense(self, col: CollectedWindow) -> np.ndarray:
+        """Participating slots that must actually launch this window.
+
+        With ``idle_skip`` on, a slot whose window carries zero input
+        events provably does no work and is deferred instead of launched;
+        the mesh backend applies this selection per shard, so one shard's
+        dense window never forces a launch for another's idle slots.
+        """
+        act_idx = col.part_idx
+        if self.idle_skip:
+            return act_idx[col.n_win_ev[act_idx] > 0]
+        return act_idx
+
+    def _account_window(self, col: CollectedWindow,
+                        dense_idx: np.ndarray) -> List[int]:
+        """Post-dispatch host bookkeeping for one collected window.
+
+        Defers idle slots' leak analytically, advances every
+        participating slot's time cursor, and returns the slots whose
+        request completed with this window (shared verbatim by the mesh
+        backend, so local and mesh time/skip accounting cannot drift).
+        """
+        act_idx = col.part_idx
         for slot in act_idx:
             if slot not in dense_idx:
                 # provably-idle window: defer its leak steps analytically
@@ -520,7 +594,7 @@ class EventServeEngine:
             self.windows[slot] += 1
             if self.tau[slot] >= self.slot_req[slot].n_timesteps:
                 finished.append(int(slot))
-        return inflight, finished
+        return finished
 
     @staticmethod
     def _bucket(n: int, cap: int) -> int:
@@ -675,7 +749,7 @@ class EventServeEngine:
 
     def _finish(self, slot: int) -> None:
         req = self.slot_req[slot]
-        cc = np.asarray(self.class_counts[slot])
+        cc = np.asarray(self._reset_slot_state(slot))
         req.class_counts = cc
         req.prediction = int(np.argmax(cc))
         per_layer = self.acc_counts[:, slot]
@@ -699,7 +773,6 @@ class EventServeEngine:
         self.slot_req[slot] = None
         self.active[slot] = False
         self._ev[slot] = None
-        self._reset_slot_state(slot)
         self.stats["completed"] += 1
 
     def run(self, requests: Sequence[EventRequest],

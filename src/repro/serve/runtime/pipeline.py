@@ -85,7 +85,14 @@ class StreamingRuntime:
     """
 
     def __init__(self, engine: EventServeEngine, queue_capacity: int = 16,
-                 slot_policy: str = SLOT_FIFO, clock=None):
+                 slot_policy: str = SLOT_FIFO, clock=None, policy=None):
+        if policy is not None and policy != engine.policy:
+            # the engine is the single owner of execution policy; a
+            # mismatched expectation here would silently serve under the
+            # wrong dtype/fusion/backend, so refuse loudly instead
+            raise ValueError(
+                f"policy mismatch: runtime asked for {policy}, engine "
+                f"was built with {engine.policy}")
         if engine.n_active:
             raise ValueError("engine already has requests in flight; the "
                              "runtime must own the full slot lifecycle")

@@ -18,6 +18,7 @@ except ImportError:           # container has no hypothesis; see the shim
 
 from repro.core import events as ev
 from repro.core.engine import SneConfig, inference_time_s
+from repro.core.policies import ExecutionPolicy
 from repro.core.sne_net import dense_apply, init_snn, spike_counts, tiny_net
 from repro.data.events_ds import TINY, batch_at
 from repro.kernels.event_conv.ops import event_conv_batched
@@ -317,7 +318,7 @@ def _run_idle_pair(patterns, window=4, seed=0):
     for skip in (True, False):
         eng = EventServeEngine(spec, params, n_slots=len(patterns),
                                window=window, use_pallas=False,
-                               idle_skip=skip)
+                               policy=ExecutionPolicy(idle_skip=skip))
         reqs = [_pattern_request(i, spec, p, seed=seed)
                 for i, p in enumerate(patterns)]
         eng.run(reqs)
@@ -379,7 +380,8 @@ def test_idle_skip_bursty_matches_dense_apply():
     spec = tiny_net()
     params = init_snn(jax.random.PRNGKey(0), spec)
     eng = EventServeEngine(spec, params, n_slots=2, window=4,
-                           use_pallas=False, idle_skip=True)
+                           use_pallas=False,
+                           policy=ExecutionPolicy(idle_skip=True))
     reqs = [_pattern_request(i, spec, p, seed=5)
             for i, p in enumerate([[0, 1, 14, 15], [6]])]
     spikes = [np.asarray(ev.events_to_dense(
@@ -401,7 +403,7 @@ def test_idle_skip_disabled_for_soft_reset():
         for l in spec.layers))
     params = init_snn(jax.random.PRNGKey(0), soft)
     eng = EventServeEngine(soft, params, n_slots=1, use_pallas=False,
-                           idle_skip=True)
+                           policy=ExecutionPolicy(idle_skip=True))
     assert not eng.idle_skip          # silently fell back to dense stepping
     spikes = jnp.zeros((8,) + soft.in_shape).at[0, 2, 2, 0].set(1.0)
     req = EventRequest.from_dense(0, spikes)
@@ -427,13 +429,15 @@ def test_non_prefix_active_set_after_release(idle_skip):
     solo = []
     for i, s in enumerate(mk):
         e = EventServeEngine(spec, params, n_slots=1, window=4,
-                             use_pallas=False, idle_skip=idle_skip)
+                             use_pallas=False,
+                             policy=ExecutionPolicy(idle_skip=idle_skip))
         r = EventRequest.from_dense(i, s)
         e.run([r])
         solo.append(r)
 
     eng = EventServeEngine(spec, params, n_slots=3, window=4,
-                           use_pallas=False, idle_skip=idle_skip)
+                           use_pallas=False,
+                           policy=ExecutionPolicy(idle_skip=idle_skip))
     reqs = [EventRequest.from_dense(i, s) for i, s in enumerate(mk)]
     for r in reqs:
         assert eng.try_admit(r)

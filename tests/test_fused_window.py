@@ -134,8 +134,9 @@ def _rand_window(rng, spec, E0, N, W):
 def _run_window(spec, params, caps, xyc, gate, alive, pre_dt, N,
                 dtype_policy, fusion_policy, use_pallas):
     prog = lp.compile_program(spec, step_capacities=caps,
-                              dtype_policy=dtype_policy,
-                              fusion_policy=fusion_policy)
+                              policy=lp.ExecutionPolicy(
+                                  dtype_policy=dtype_policy,
+                                  fusion_policy=fusion_policy))
     states = tuple(lp.padded_state(op, n_slots=N) for op in prog.ops)
     cc0 = jnp.zeros((N, spec.n_classes), jnp.float32)
     return lp.window_step(params, states, cc0, xyc, gate, alive, pre_dt,
@@ -226,8 +227,10 @@ def test_window_step_fusion_parity(seed):
     for policy, params in ((F32, floats), (I8, codes)):
         want = _run_window(spec, params, caps, xyc, gate, alive, pre_dt, N,
                            policy, STEP, False)
-        ops = lp.compile_program(spec, step_capacities=caps,
-                                 dtype_policy=policy).ops
+        ops = lp.compile_program(
+            spec, step_capacities=caps,
+            policy=lp.ExecutionPolicy(dtype_policy=policy,
+                                      fusion_policy=STEP)).ops
         for mode in (None, False):
             got = _run_window(spec, params, caps, xyc, gate, alive, pre_dt,
                               N, policy, FUSED, mode)
@@ -252,8 +255,10 @@ def test_window_step_fused_cross_policy(seed):
         caps, xyc, gate, alive, pre_dt, N, F32, FUSED, False)
     si, cci, ci, di = _run_window(spec, codes, caps, xyc, gate, alive,
                                   pre_dt, N, I8, FUSED, False)
-    ops = lp.compile_program(spec, step_capacities=caps,
-                             dtype_policy=I8).ops
+    ops = lp.compile_program(
+        spec, step_capacities=caps,
+        policy=lp.ExecutionPolicy(dtype_policy=I8,
+                                  fusion_policy=STEP)).ops
     np.testing.assert_array_equal(np.asarray(ccf), np.asarray(cci))
     np.testing.assert_array_equal(np.asarray(cf), np.asarray(ci))
     np.testing.assert_array_equal(np.asarray(df), np.asarray(di))
@@ -290,7 +295,8 @@ def test_full_dvs_gesture_fused_window_parity():
         got = _run_window(qn.spec, p, caps, xyc, gate, alive, pre_dt, N,
                           policy, FUSED, False)
         ops = lp.compile_program(qn.spec, step_capacities=caps,
-                                 dtype_policy=policy).ops
+                                 policy=lp.ExecutionPolicy(
+                                     dtype_policy=policy)).ops
         _assert_windows_equal(got, want, ops)
 
 
@@ -311,7 +317,9 @@ def test_engine_fused_default_matches_per_step():
     out = {}
     for fusion in (FUSED, STEP):
         eng = EventServeEngine(spec, params, n_slots=2, window=4,
-                               use_pallas=False, fusion_policy=fusion)
+                               use_pallas=False,
+                               policy=lp.ExecutionPolicy(
+                                   fusion_policy=fusion))
         assert eng.program.fusion_policy == fusion
         reqs = [EventRequest.from_dense(i, jnp.asarray(s))
                 for i, s in enumerate(spikes)]
@@ -366,14 +374,20 @@ def test_soft_reset_frozen_timesteps_fused():
 # ---------------------------------------------------------------------------
 
 def test_unknown_fusion_policy_rejected():
+    """An unknown fusion policy fails at ExecutionPolicy construction —
+    before any compile — and the legacy kwarg path rejects identically."""
+    with pytest.raises(ValueError, match="unknown fusion policy"):
+        lp.ExecutionPolicy(fusion_policy="per-galaxy")
     with pytest.raises(ValueError, match="unknown fusion policy"):
         lp.compile_program(tiny_net(), fusion_policy="per-galaxy")
 
 
 def test_fusion_policy_in_program_cache_key():
     spec = tiny_net()
-    a = lp.compile_program(spec, fusion_policy=STEP)
-    b = lp.compile_program(spec, fusion_policy=FUSED)
+    a = lp.compile_program(spec, policy=lp.ExecutionPolicy(
+        fusion_policy=STEP))
+    b = lp.compile_program(spec, policy=lp.ExecutionPolicy(
+        fusion_policy=FUSED))
     assert a is not b and a.fusion_policy == STEP \
         and b.fusion_policy == FUSED
 
@@ -408,8 +422,10 @@ def test_zero_event_axis_still_advances_window():
 
 
 def test_quantized_tiny_net_fused_engine_round_trip():
-    """The quantized tiny_net through the *fused* engine, both dtype
-    policies, bitwise-equal decode (the policy-matrix corner the golden
+    """The quantized tiny_net through the engine across the FULL
+    `all_policies()` matrix — every dtype x fusion x backend cell (the
+    mesh backend degenerates to one shard on the single test device),
+    bitwise-equal decode everywhere (the policy-matrix corner the golden
     replay pins on real data, here on synthetic)."""
     spec = tiny_net()
     qn = quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec)
@@ -418,11 +434,13 @@ def test_quantized_tiny_net_fused_engine_round_trip():
         (rng.random((qn.spec.n_timesteps,) + qn.spec.in_shape) < 0.1)
         .astype(np.float32))
     counts = {}
-    for pol in (F32, I8):
-        eng = EventServeEngine(qn.spec, qn.params_for(pol), n_slots=1,
-                               window=4, use_pallas=False,
-                               dtype_policy=pol)
+    for pol in lp.all_policies():
+        eng = EventServeEngine(qn.spec, qn.params_for(pol.dtype_policy),
+                               n_slots=1, window=4, use_pallas=False,
+                               policy=pol)
         req = EventRequest.from_dense(0, spikes)
         eng.run([req])
         counts[pol] = req.class_counts
-    np.testing.assert_array_equal(counts[F32], counts[I8])
+    ref = counts[lp.ExecutionPolicy()]
+    for pol, cc in counts.items():
+        np.testing.assert_array_equal(cc, ref, err_msg=str(pol))

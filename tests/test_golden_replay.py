@@ -1,15 +1,17 @@
 """Golden replay: the bundled recording through the serving engine.
 
 `samples/tiny_gesture.npz` is segmented exactly as `examples/serve_events
---source file` does and served through `EventServeEngine` on the quantized
-`tiny_net` under BOTH dtype policies and BOTH fusion policies (the
-fused-window default — one launch per layer per window — and the per-step
-oracle).  Spike rasters (per-request class-count vectors — the engine's
-rate-decode output) and telemetry counters (per-layer consumed events,
-inter-layer drops, predictions) are compared against a committed golden
-file, so an end-to-end serving regression is caught without a live sensor
-— and every policy combination is pinned bitwise-identical on real data,
-not just synthetic streams.
+--source file` does and served through `EventServeEngine` across the FULL
+`core.policies.all_policies()` matrix — every dtype policy x fusion
+policy x backend cell (the fused-window default and the per-step oracle;
+the local backend and the slot-sharded mesh backend, which degenerates to
+one shard on the single test device but still runs the shard_map path).
+Spike rasters (per-request class-count vectors — the engine's rate-decode
+output) and telemetry counters (per-layer consumed events, inter-layer
+drops, predictions) are compared against a committed golden file, so an
+end-to-end serving regression is caught without a live sensor — and every
+policy cell is pinned bitwise-identical on real data, not just synthetic
+streams.
 
 Everything on the path is integer arithmetic (quantized codes, binary
 spikes), so the golden values are exact across jax versions/backends.
@@ -24,27 +26,27 @@ import jax
 import numpy as np
 import pytest
 
+from repro.core.policies import ExecutionPolicy, all_policies
 from repro.core.quant import quantize_net
 from repro.core.sne_net import init_snn, tiny_net
 from repro.data.events_ds import (load_recording, sample_recording_path,
                                   segment_recording)
-from repro.serve.event_engine import EventServeEngine
+from repro.serve import EventServeEngine
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
                       "tiny_gesture_serve.npz")
 WINDOW_US = 1000   # examples/serve_events.py --source file default
 
 
-def _serve(dtype_policy: str, fusion_policy: str = "fused-window"):
+def _serve(policy: ExecutionPolicy):
     spec = tiny_net()
     qn = quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec)
     rec = load_recording(sample_recording_path())
     reqs = segment_recording(rec, qn.spec.in_shape, qn.spec.n_timesteps,
                              WINDOW_US)
-    eng = EventServeEngine(qn.spec, qn.params_for(dtype_policy), n_slots=2,
-                           window=4, use_pallas=False,
-                           dtype_policy=dtype_policy,
-                           fusion_policy=fusion_policy)
+    eng = EventServeEngine(qn.spec, qn.params_for(policy.dtype_policy),
+                           n_slots=2, window=4, use_pallas=False,
+                           policy=policy)
     eng.run(reqs)
     tele = [r.telemetry for r in reqs]
     return {
@@ -63,16 +65,14 @@ def _serve(dtype_policy: str, fusion_policy: str = "fused-window"):
 
 @pytest.fixture(scope="module")
 def served():
-    return {(pol, fus): _serve(pol, fus)
-            for pol in ("f32-carrier", "int8-native")
-            for fus in ("fused-window", "per-step")}
+    return {pol: _serve(pol) for pol in all_policies()}
 
 
 def test_policies_agree_on_real_recording(served):
-    """Every (dtype, fusion) policy combination — int8-native vs the f32
-    carrier, fused windows vs per-step — must agree bitwise on the
+    """Every `all_policies()` cell — int8-native vs the f32 carrier,
+    fused windows vs per-step, mesh vs local — must agree bitwise on the
     bundled sensor data."""
-    base = served[("f32-carrier", "per-step")]
+    base = served[ExecutionPolicy(fusion_policy="per-step")]
     for key, res in served.items():
         for k in base:
             np.testing.assert_array_equal(res[k], base[k],
@@ -80,10 +80,10 @@ def test_policies_agree_on_real_recording(served):
 
 
 def test_golden_replay(served):
-    """Every policy combination must reproduce the committed golden file
-    exactly (the golden was recorded pre-fusion; the fused engine
-    replaying it bitwise IS the fused path's end-to-end exactness
-    proof on real data)."""
+    """Every policy cell must reproduce the committed golden file exactly
+    (the golden was recorded pre-fusion, pre-mesh; the fused engine and
+    the mesh backend replaying it bitwise ARE their end-to-end exactness
+    proofs on real data)."""
     assert os.path.exists(GOLDEN), (
         f"golden file missing: {GOLDEN} — regenerate with "
         f"PYTHONPATH=src:tests python tests/test_golden_replay.py --regen")
@@ -100,8 +100,8 @@ if __name__ == "__main__":
     import sys
     if "--regen" in sys.argv:
         os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
-        res = _serve("f32-carrier")
-        chk = _serve("int8-native")
+        res = _serve(ExecutionPolicy())
+        chk = _serve(ExecutionPolicy(dtype_policy="int8-native"))
         for k in res:
             np.testing.assert_array_equal(res[k], chk[k])
         np.savez_compressed(GOLDEN, **res)

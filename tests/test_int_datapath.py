@@ -232,8 +232,10 @@ def test_window_step_parity(seed):
     params = [_rand_codes(rng, l) for l in spec.layers]
     caps = tuple(min(c, 64) for c in
                  (lp.layer_step_capacity(l) for l in spec.layers))
-    prog_f = lp.compile_program(spec, step_capacities=caps, dtype_policy=F32)
-    prog_i = lp.compile_program(spec, step_capacities=caps, dtype_policy=I8)
+    prog_f = lp.compile_program(spec, step_capacities=caps,
+                                policy=lp.ExecutionPolicy(dtype_policy=F32))
+    prog_i = lp.compile_program(spec, step_capacities=caps,
+                                policy=lp.ExecutionPolicy(dtype_policy=I8))
     N, W = 2, 3
     E0 = prog_f.ops[0].step_capacity
     H, Wd, C = spec.in_shape
@@ -282,9 +284,9 @@ def test_full_dvs_gesture_window_step_parity():
     qn = quantize_net(params, spec)
     caps = (64,) * len(spec.layers)
     prog_f = lp.compile_program(qn.spec, step_capacities=caps,
-                                dtype_policy=F32)
+                                policy=lp.ExecutionPolicy(dtype_policy=F32))
     prog_i = lp.compile_program(qn.spec, step_capacities=caps,
-                                dtype_policy=I8)
+                                policy=lp.ExecutionPolicy(dtype_policy=I8))
     rng = np.random.default_rng(0)
     N, W, E0 = 1, 2, 64
     H, Wd, C = qn.spec.in_shape
@@ -319,7 +321,8 @@ def test_full_dvs_gesture_window_step_parity():
 def test_native_policy_rejects_float_spec():
     spec = tiny_net()   # float thresholds/leaks, no state clip
     with pytest.raises(ValueError, match="quantize_net"):
-        lp.compile_program(spec, dtype_policy=lp.INT8_NATIVE)
+        lp.compile_program(spec, policy=lp.ExecutionPolicy(
+            dtype_policy=lp.INT8_NATIVE))
 
 
 def test_native_policy_rejects_float_weights():
@@ -335,6 +338,10 @@ def test_native_policy_rejects_float_weights():
 
 
 def test_unknown_policy_rejected():
+    """An unknown dtype policy fails at ExecutionPolicy construction —
+    and the legacy kwarg path rejects identically through the shim."""
+    with pytest.raises(ValueError, match="unknown dtype policy"):
+        lp.ExecutionPolicy(dtype_policy="bf16-wishful")
     with pytest.raises(ValueError, match="unknown dtype policy"):
         lp.compile_program(tiny_net(), dtype_policy="bf16-wishful")
 
@@ -345,8 +352,10 @@ def test_scatter_launch_bytes_strictly_fewer():
     than the carrier launch at identical (slots, events)."""
     spec = dvs_gesture_net(n_timesteps=8)
     qn = quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec)
-    pf = lp.compile_program(qn.spec, dtype_policy=F32)
-    pi = lp.compile_program(qn.spec, dtype_policy=I8)
+    pf = lp.compile_program(qn.spec, policy=lp.ExecutionPolicy(
+        dtype_policy=F32))
+    pi = lp.compile_program(qn.spec, policy=lp.ExecutionPolicy(
+        dtype_policy=I8))
     for opf, opi in zip(pf.ops, pi.ops):
         bf = lp.scatter_launch_bytes(opf, n_slots=4, n_events=128)
         bi = lp.scatter_launch_bytes(opi, n_slots=4, n_events=128)

@@ -1,0 +1,119 @@
+"""ExecutionPolicy: construction-time validation and the legacy shim.
+
+The policy value is the API redesign's load-bearing piece: one frozen
+`core.policies.ExecutionPolicy` names every execution axis (dtype x
+fusion x idle-skip x backend), validated where it is *written*, and the
+old kwarg sprawl survives only through `core.policies.resolve_policy`'s
+warn-once deprecation shim.  These tests pin that contract — the matrix
+enumerator's shape and order (every matrix-parametrized suite builds on
+it), the construction-time failures, and the shim's mixing/warning
+semantics — so surface drift fails here, not inside a serve loop.
+"""
+import dataclasses
+import warnings
+
+import pytest
+
+from repro.core import layer_program as lp
+from repro.core.policies import (BACKEND_LOCAL, BACKEND_MESH, BACKENDS,
+                                 DTYPE_POLICIES, FUSION_POLICIES,
+                                 ExecutionPolicy, _LEGACY_WARNED,
+                                 all_policies, resolve_policy)
+from repro.core.sne_net import tiny_net
+
+
+def test_defaults_are_production_serving():
+    pol = ExecutionPolicy()
+    assert pol.dtype_policy == "f32-carrier"
+    assert pol.fusion_policy == "fused-window"
+    assert pol.idle_skip is True
+    assert pol.backend == BACKEND_LOCAL
+
+
+@pytest.mark.parametrize("bad", [
+    dict(dtype_policy="bf16-wishful"),
+    dict(fusion_policy="per-galaxy"),
+    dict(backend="tpu-pod"),
+    dict(idle_skip="yes"),
+])
+def test_unknown_names_fail_at_construction(bad):
+    """An invalid axis name must raise when the policy is written."""
+    with pytest.raises(ValueError, match=str(next(iter(bad.values())))):
+        ExecutionPolicy(**bad)
+
+
+def test_frozen_and_hashable():
+    """Safe as a jit-cache / lru_cache key; mutation is a loud error."""
+    pol = ExecutionPolicy()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        pol.backend = BACKEND_MESH
+    assert len({pol, ExecutionPolicy(), ExecutionPolicy(idle_skip=False)}) \
+        == 2
+
+
+def test_str_is_a_stable_pytest_id():
+    assert str(ExecutionPolicy()) == "f32-carrier/fused-window/local"
+    assert str(ExecutionPolicy(idle_skip=False)).endswith("/no-idle-skip")
+
+
+def test_all_policies_is_the_full_matrix():
+    """Backend-major, then dtype, then fusion — ids must not churn."""
+    mat = all_policies()
+    assert len(mat) == len(BACKENDS) * len(DTYPE_POLICIES) \
+        * len(FUSION_POLICIES)
+    assert len(set(mat)) == len(mat)
+    assert [p.backend for p in mat[:4]] == [BACKEND_LOCAL] * 4
+    assert all(p.idle_skip for p in mat)
+    local_only = all_policies(backends=(BACKEND_LOCAL,))
+    assert local_only == mat[:4]
+
+
+def test_resolve_policy_passthrough_and_default():
+    pol = ExecutionPolicy(idle_skip=False)
+    assert resolve_policy("api.x", pol) is pol
+    assert resolve_policy("api.x") == ExecutionPolicy()
+    base = ExecutionPolicy(fusion_policy="per-step")
+    assert resolve_policy("api.x", default=base) == base
+
+
+def test_resolve_policy_rejects_mixing():
+    with pytest.raises(ValueError, match="not both"):
+        resolve_policy("api.x", ExecutionPolicy(), dtype_policy="int8-native")
+    with pytest.raises(TypeError, match="ExecutionPolicy"):
+        resolve_policy("api.x", policy="f32-carrier")
+
+
+def test_engine_rejects_mixing_policy_and_legacy(rng_key):
+    from repro.core.sne_net import init_snn
+    from repro.serve import EventServeEngine
+    spec = tiny_net()
+    params = init_snn(rng_key, spec)
+    with pytest.raises(ValueError, match="not both"):
+        EventServeEngine(spec, params, n_slots=1,
+                         policy=ExecutionPolicy(), idle_skip=False)
+
+
+def test_legacy_kwargs_warn_once_per_surface():
+    """The shim fires one DeprecationWarning per API name per process."""
+    _LEGACY_WARNED.discard("api.warn-test")
+    with pytest.warns(DeprecationWarning, match="api.warn-test"):
+        pol = resolve_policy("api.warn-test", dtype_policy="int8-native",
+                             idle_skip=False)
+    assert pol == ExecutionPolicy(dtype_policy="int8-native",
+                                  idle_skip=False)
+    with warnings.catch_warnings():    # second use: silent (warn ONCE)
+        warnings.simplefilter("error")
+        resolve_policy("api.warn-test", fusion_policy="per-step")
+
+
+def test_compile_program_legacy_shim_still_compiles():
+    """The pre-redesign kwargs keep compiling (with the deprecation
+    warning) and land on the same program as the policy= spelling."""
+    _LEGACY_WARNED.discard("core.layer_program.compile_program")
+    with pytest.warns(DeprecationWarning, match="compile_program"):
+        legacy = lp.compile_program(tiny_net(), fusion_policy="fused-window")
+    modern = lp.compile_program(
+        tiny_net(), policy=ExecutionPolicy(fusion_policy="fused-window"))
+    assert legacy.fusion_policy == modern.fusion_policy
+    assert legacy.dtype_policy == modern.dtype_policy
+    assert len(legacy.ops) == len(modern.ops)

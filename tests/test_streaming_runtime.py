@@ -15,8 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.policies import (F32_CARRIER, FUSED_WINDOW, INT8_NATIVE,
-                                 PER_STEP)
+from repro.core.policies import BACKEND_LOCAL, all_policies
 from repro.core.quant import quantize_net
 from repro.core.sne_net import init_snn, tiny_net
 from repro.serve.event_engine import EventRequest, EventServeEngine
@@ -356,30 +355,32 @@ def test_report_latency_fields_populated():
 # the tentpole contract: streaming == sync, bitwise, full policy matrix
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("dtype_policy", [F32_CARRIER, INT8_NATIVE])
-@pytest.mark.parametrize("fusion_policy", [PER_STEP, FUSED_WINDOW])
-def test_streaming_bitwise_matches_sync_policy_matrix(dtype_policy,
-                                                      fusion_policy):
+@pytest.mark.parametrize("policy", all_policies(), ids=str)
+def test_streaming_bitwise_matches_sync_policy_matrix(policy):
     """Per-request class counts from the double-buffered streaming
     pipeline (donated buffers, Poisson arrival staggering, 2 slots) are
-    bitwise identical to the synchronous engine, for every dtype x
-    fusion policy combination."""
+    bitwise identical to the synchronous LOCAL-backend engine, for every
+    `all_policies()` cell — the mesh backend joins the matrix
+    automatically and is held to the same local-sync oracle (one shard
+    per test device; the multi-device sweep lives in
+    tests/test_mesh_serving.py under forced device counts)."""
     spec = tiny_net()
     qn = quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec)
-    params = qn.params_for(dtype_policy)
+    params = qn.params_for(policy.dtype_policy)
     reqs = requests_synthetic(5, seed=11)
 
     sync_reqs = _clone(reqs)
-    eng_sync = EventServeEngine(qn.spec, params, n_slots=2, window=4,
-                                use_pallas=False, dtype_policy=dtype_policy,
-                                fusion_policy=fusion_policy)
+    eng_sync = EventServeEngine(
+        qn.spec, params, n_slots=2, window=4, use_pallas=False,
+        policy=dataclasses.replace(policy, backend=BACKEND_LOCAL))
     eng_sync.run(sync_reqs)
 
     stream_reqs = _clone(reqs)
     eng = EventServeEngine(qn.spec, params, n_slots=2, window=4,
-                           use_pallas=False, dtype_policy=dtype_policy,
-                           fusion_policy=fusion_policy, donate_buffers=True)
-    rt = StreamingRuntime(eng, queue_capacity=8, clock=ManualClock())
+                           use_pallas=False, donate_buffers=True,
+                           policy=policy)
+    rt = StreamingRuntime(eng, queue_capacity=8, clock=ManualClock(),
+                          policy=policy)
     # staggered Poisson arrivals so batch composition differs from sync
     lg = PoissonLoadGen(stream_reqs, rate_hz=400.0, seed=2)
     rep = rt.serve(lg)
@@ -389,7 +390,6 @@ def test_streaming_bitwise_matches_sync_policy_matrix(dtype_policy,
         assert b.done
         np.testing.assert_array_equal(np.asarray(a.class_counts),
                                       np.asarray(b.class_counts),
-                                      err_msg=f"uid={a.uid} {dtype_policy}/"
-                                              f"{fusion_policy}")
+                                      err_msg=f"uid={a.uid} {policy}")
         assert a.prediction == b.prediction
         assert a.telemetry.n_windows == b.telemetry.n_windows
