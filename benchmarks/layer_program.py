@@ -14,12 +14,17 @@ that claim the way `benchmarks/idle_skip.py` measures the TLU skip:
   * assert the unified path dispatches strictly fewer device ops per
     window on `tiny_net` — each layer's scatter collapses into exactly
     one launch;
-  * trace the WHOLE `window_step` under both **fusion policies** and
+  * trace the WHOLE `window_step` under every **fusion policy** and
     count Pallas launches: the fused-window lowering must be exactly L
     launches per window (one fused kernel per layer, time loop inside)
     vs L x W for the per-step oracle — the launch-overhead delta the
-    regression gate pins (``fused_launch_ratio_min``) — and a cohort
-    served under each fusion policy must decode bitwise identically;
+    regression gate pins (``fused_launch_ratio_min``) — and the
+    fused-network megakernel exactly ONE launch per window (the whole
+    layer chain + ring-buffer routing in one kernel,
+    ``network_fused_launches_max``), with every lowering decoding a
+    served cohort bitwise identically; report each policy's resident
+    membrane/scratch bytes and the megakernel's VMEM plan + ring-overflow
+    drop totals per layer boundary;
   * serve a small cohort through `EventServeEngine` (which jits exactly
     this executor, fused windows by default) and record the
     serving-level events/J headline;
@@ -193,8 +198,28 @@ def serve_cohort(spec, params, n_timesteps, seed=0,
         / max(eng.stats["step_calls"], 1),
         "events": agg["total_events"],
         "events_per_joule": agg["events_per_joule"],
+        "inter_layer_drops": eng.inter_layer_drops(),
         "class_counts": np.stack([r.class_counts for r in reqs]),
     }
+
+
+def fusion_memory_rows(spec, n_timesteps):
+    """Per-fusion-policy peak membrane + VMEM scratch bytes (satellite of
+    the megakernel PR: the state/scratch footprint each lowering keeps
+    resident, the figure the fused-network budget fallback guards)."""
+    rows = []
+    for fusion in (lp.PER_STEP, lp.FUSED_WINDOW, lp.FUSED_NETWORK):
+        prog = lp.compile_program(spec, policy=lp.ExecutionPolicy(
+            fusion_policy=fusion))
+        rows.append({
+            "fusion_policy": fusion,
+            "membrane_bytes": lp.state_bytes(prog, SLOTS),
+            "scratch_bytes": lp.window_scratch_bytes(prog, WINDOW),
+        })
+    plan = lp.network_window_plan(
+        lp.compile_program(spec, policy=lp.ExecutionPolicy(
+            fusion_policy=lp.FUSED_NETWORK)), WINDOW)
+    return rows, plan
 
 
 def dtype_policy_accounting(spec, params):
@@ -246,21 +271,54 @@ def main(fast: bool = False) -> None:
           f"per-step -> x{fused_ratio:.1f} fewer launches "
           f"({ops_fused} vs {ops_step} device ops per window)")
 
+    # --- fused-network megakernel: the WHOLE window in ONE launch -------
+    ops_net, launches_net = window_launches(spec, params, lp.FUSED_NETWORK)
+    # the megakernel contract: exactly ONE launch per WINDOW (vs L fused,
+    # L x W per-step)
+    assert launches_net == 1, launches_net
+    net_ratio = launches_fused / launches_net
+    print(f"  network window launches: {launches_net} megakernel vs "
+          f"{launches_fused} fused-window -> x{net_ratio:.1f} fewer "
+          f"launches ({ops_net} device ops per window)")
+
+    mem_rows, plan = fusion_memory_rows(spec, WINDOW)
+    print(f"  {'fusion':>13} {'membrane B':>10} {'scratch B':>10}")
+    for r in mem_rows:
+        print(f"  {r['fusion_policy']:>13} {r['membrane_bytes']:>10} "
+              f"{r['scratch_bytes']:>10}")
+    print(f"  megakernel VMEM plan: {plan.membrane_bytes} membrane + "
+          f"{plan.ring_bytes} rings + {plan.io_bytes} I/O = "
+          f"{plan.total_bytes} B (budget {lp.DEFAULT_VMEM_BUDGET})")
+
     served = serve_cohort(spec, params, n_ts)
     served_step = serve_cohort(spec, params, n_ts,
                                fusion_policy=lp.PER_STEP)
-    # the engine accounts one launch per layer per window when fused,
-    # one per layer per timestep on the per-step oracle lowering
+    served_net = serve_cohort(spec, params, n_ts,
+                              fusion_policy=lp.FUSED_NETWORK)
+    # the engine accounts one launch per window under the megakernel, one
+    # per layer per window when fused, one per layer per timestep on the
+    # per-step oracle lowering
     assert served["launches_per_window"] == L
     assert served_step["launches_per_window"] == WINDOW * L
-    # and the two lowerings must decode bitwise identically
+    assert served_net["launches_per_window"] == 1
+    # and the three lowerings must decode bitwise identically
     np.testing.assert_array_equal(served["class_counts"],
                                   served_step["class_counts"])
+    np.testing.assert_array_equal(served["class_counts"],
+                                  served_net["class_counts"])
+    # wall-time: interpret-mode CPU timing, so report a loose ratio (> 1
+    # means the megakernel window is cheaper end to end)
+    net_wall_ratio = served["wall_s"] / max(served_net["wall_s"], 1e-9)
+    drops = served_net["inter_layer_drops"]
     print(f"  served {served['events']:.0f} events, "
-          f"{served['launches_per_window']:.0f} launches/window fused "
-          f"(vs {served_step['launches_per_window']:.0f} per-step, "
-          f"bitwise-equal decode), "
+          f"{served_net['launches_per_window']:.0f} launch/window "
+          f"megakernel (vs {served['launches_per_window']:.0f} fused, "
+          f"{served_step['launches_per_window']:.0f} per-step, "
+          f"bitwise-equal decode), wall x{net_wall_ratio:.2f} vs fused, "
           f"{served['events_per_joule']:.3e} events/J")
+    print(f"  inter-layer ring drops per boundary: "
+          f"{drops['inter_layer_dropped']} "
+          f"(total {drops['inter_layer_dropped_total']:.0f})")
 
     # --- dtype policies: bytes per launch + effective pJ/SOP + parity ----
     qn, byte_rows, policies, bytes_ratio = dtype_policy_accounting(spec,
@@ -302,6 +360,20 @@ def main(fast: bool = False) -> None:
         "perstep_launches_per_window": launches_step,
         "fused_launch_ratio": fused_ratio,
         "fused_parity": True,
+        "network_fused_launches": launches_net,
+        "network_launch_ratio": net_ratio,
+        "network_wall_ratio": net_wall_ratio,
+        "network_parity": True,
+        "network_vmem_plan": {
+            "membrane_bytes": plan.membrane_bytes,
+            "ring_bytes": plan.ring_bytes,
+            "io_bytes": plan.io_bytes,
+            "total_bytes": plan.total_bytes,
+            "budget_bytes": lp.DEFAULT_VMEM_BUDGET,
+        },
+        "fusion_memory": mem_rows,
+        "inter_layer_dropped": drops["inter_layer_dropped"],
+        "inter_layer_dropped_total": drops["inter_layer_dropped_total"],
         "launches_per_window": served["launches_per_window"],
         "events_per_joule": served["events_per_joule"],
         "per_layer_launch_bytes": byte_rows,

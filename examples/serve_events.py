@@ -26,7 +26,9 @@ bypass the batched Pallas launch entirely and their leak is applied
 analytically.  ``--dtype-policy int8-native`` quantizes the net
 (`core.quant.quantize_net`) and serves it on the native integer datapath;
 ``--fusion-policy per-step`` selects the launch-per-timestep oracle
-lowering; ``--backend mesh`` shards the slot axis across the visible JAX
+lowering and ``--fusion-policy fused-network`` the whole-network
+megakernel (ONE launch per window); ``--backend mesh`` shards the slot
+axis across the visible JAX
 devices (simulate some on CPU with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4``) — the four knobs
 together form the `repro.serve.ExecutionPolicy` the engine is built
@@ -95,7 +97,9 @@ def main():
     ap.add_argument("--fusion-policy", choices=FUSION_POLICIES,
                     default=FUSED_WINDOW,
                     help="window lowering: fused-window (one launch per "
-                    "layer per window, default) or the per-step oracle")
+                    "layer per window, default), the per-step oracle, or "
+                    "fused-network (the whole network in ONE megakernel "
+                    "launch per window, VMEM budget permitting)")
     ap.add_argument("--backend", choices=BACKENDS, default=BACKEND_LOCAL,
                     help="local = single-device engine (the parity "
                     "oracle); mesh = slot axis sharded across the visible "

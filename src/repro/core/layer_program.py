@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
 import jax
@@ -64,9 +65,9 @@ from repro.core.lif import (LifParams, apply_leak, fire_and_reset,
                             idle_decay, supports_idle_skip)
 # the policy names live in the leaf module `core.policies` (see its
 # docstring); re-exported here for every executor caller
-from repro.core.policies import (DTYPE_POLICIES, F32_CARRIER, FUSED_WINDOW,
-                                 FUSION_POLICIES, INT8_NATIVE, PER_STEP,
-                                 ExecutionPolicy, resolve_policy)
+from repro.core.policies import (DTYPE_POLICIES, F32_CARRIER, FUSED_NETWORK,
+                                 FUSED_WINDOW, FUSION_POLICIES, INT8_NATIVE,
+                                 PER_STEP, ExecutionPolicy, resolve_policy)
 from repro.core.policies import all_policies as all_policies  # noqa: F401
 from repro.core.quant import INT8_MAX, INT8_MIN
 from repro.kernels.event_conv.ops import (event_conv_batched,
@@ -74,6 +75,7 @@ from repro.kernels.event_conv.ops import (event_conv_batched,
 from repro.kernels.event_fc.ops import event_fc_batched, event_fc_window
 from repro.kernels.event_pool.ops import (event_pool_batched,
                                           event_pool_window)
+from repro.kernels.network_window import NetLayer, network_window
 
 if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids an import cycle)
     from repro.core.sne_net import SNNSpec
@@ -683,9 +685,224 @@ def _window_step_fused(params: Sequence[EConvParams], states, class_counts,
     return tuple(states), class_counts, counts, drops
 
 
+# ---------------------------------------------------------------------------
+# The fused-network driver: the whole program in ONE launch per window.
+# ---------------------------------------------------------------------------
+
+# Per-core VMEM on current TPUs is ~16 MiB; the megakernel must fit every
+# layer's accumulator slab + the boundary ring buffers + its I/O blocks in
+# one grid step's budget, or the driver falls back to fused-window.
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def _slab_elems(op: LayerOp) -> int:
+    """Elements of one slot's halo-padded membrane slab."""
+    Ho, Wo, Co = op.spec.out_shape
+    h = op.halo
+    return (Ho + 2 * h) * (Wo + 2 * h) * Co
+
+
+def _ring_capacity(program: LayerProgram, index: int) -> int:
+    """Ring-buffer width of the boundary feeding layer ``index`` (>= 1).
+
+    The consumer's compiled per-timestep capacity, clamped to the
+    producer's frame size — the same clamp :func:`frame_to_events`
+    applies, so the in-kernel buffers are sized exactly like the
+    off-kernel event lists they replace.
+    """
+    h, w, c = program.ops[index - 1].spec.out_shape
+    return min(program.ops[index].step_capacity, h * w * c)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkWindowPlan:
+    """VMEM accounting of one fused-network grid step (one slot).
+
+    ``membrane_bytes`` is the resident accumulator scratch (every layer's
+    slab at once), ``ring_bytes`` the inter-layer event ring buffers,
+    ``io_bytes`` the input/output blocks pallas stages for the step
+    (schedule, weights, storage slabs in and out, last-layer spike
+    frames, counters).  ``total_bytes`` is what must fit the scratch
+    budget for the megakernel to launch.
+    """
+
+    membrane_bytes: int
+    ring_bytes: int
+    io_bytes: int
+
+    @property
+    def total_bytes(self) -> int:
+        """Whole per-grid-step VMEM footprint (scratch + staged blocks)."""
+        return self.membrane_bytes + self.ring_bytes + self.io_bytes
+
+
+def network_window_plan(program: LayerProgram,
+                        n_timesteps: int) -> NetworkWindowPlan:
+    """Size the fused-network megakernel's per-grid-step VMEM footprint.
+
+    Deterministic per ``(program, n_timesteps)``: the layer-0 event width
+    is the program's compiled collector capacity (``step_capacities[0]``,
+    the worst case the engine can launch), NOT the traced axis — so the
+    serving engine's launch accounting and the driver's budget decision
+    can never diverge across idle-skip compaction buckets.
+    """
+    acc_isz = 4                                   # int32 / float32
+    sto_isz = 1 if program.dtype_policy == INT8_NATIVE else 4
+    ops = program.ops
+    membrane = sum(_slab_elems(op) for op in ops) * acc_isz
+    ring = sum(_ring_capacity(program, i) * (3 * 4 + acc_isz)
+               for i in range(1, len(ops)))
+    e0 = ops[0].step_capacity
+    Ho, Wo, Co = ops[-1].spec.out_shape
+    io = (n_timesteps * e0 * 3 * 4                # layer-0 schedule
+          + n_timesteps * e0 * acc_isz            # layer-0 gates
+          + n_timesteps * 4)                      # alive row
+    for op in ops:
+        w_isz = jnp.dtype(scatter_dtypes(op)[2]).itemsize
+        spec = op.spec
+        if spec.kind == "conv":
+            w_elems = spec.kernel ** 2 * spec.in_shape[2] * spec.out_channels
+        elif spec.kind == "pool":
+            w_elems = spec.in_shape[2]
+        else:
+            h, w, c = spec.in_shape
+            w_elems = h * w * c * spec.out_channels
+        io += w_elems * w_isz                     # shared weight block
+        io += 2 * _slab_elems(op) * sto_isz       # storage slab in + out
+    io += n_timesteps * Ho * Wo * Co * acc_isz    # last layer's frames
+    io += 2 * len(ops) * 4                        # counts + drops rows
+    return NetworkWindowPlan(membrane_bytes=membrane, ring_bytes=ring,
+                             io_bytes=io)
+
+
+def effective_fusion(program: LayerProgram, n_timesteps: int,
+                     vmem_budget: Optional[int] = None) -> str:
+    """The fusion the window step will actually execute.
+
+    ``"fused-network"`` downgrades to ``"fused-window"`` when the
+    megakernel's :func:`network_window_plan` exceeds the VMEM scratch
+    budget — the single source both :func:`window_step` and the serving
+    engines' launch accounting consult, so the counted launches always
+    match the executed lowering.
+    """
+    if program.fusion_policy != FUSED_NETWORK:
+        return program.fusion_policy
+    budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    plan = network_window_plan(program, n_timesteps)
+    return FUSED_NETWORK if plan.total_bytes <= budget else FUSED_WINDOW
+
+
+def state_bytes(program: LayerProgram, n_slots: int) -> int:
+    """Total membrane storage the serving engine holds resident (bytes)."""
+    sto_isz = 1 if program.dtype_policy == INT8_NATIVE else 4
+    return sum(_slab_elems(op) for op in program.ops) * n_slots * sto_isz
+
+
+def window_scratch_bytes(program: LayerProgram, n_timesteps: int,
+                         co_blk: int = 128) -> int:
+    """Peak per-launch VMEM *scratch* bytes of one window step.
+
+    Per-step kernels carry no scratch (the slab rides as an I/O block);
+    a fused-window launch holds one layer's accumulator slab (channel-
+    blocked for conv/fc); the fused-network megakernel holds every
+    layer's slab plus the boundary ring buffers at once.  This is the
+    figure `benchmarks/layer_program.py` reports per policy — the VMEM
+    residency each lowering buys.
+    """
+    fusion = effective_fusion(program, n_timesteps)
+    if fusion == PER_STEP:
+        return 0
+    if fusion == FUSED_NETWORK:
+        plan = network_window_plan(program, n_timesteps)
+        return plan.membrane_bytes + plan.ring_bytes
+    peak = 0
+    for op in program.ops:
+        Ho, Wo, Co = op.spec.out_shape
+        h = op.halo
+        cb = Co if op.kind == "pool" else _channel_block(Co, co_blk)
+        peak = max(peak, (Ho + 2 * h) * (Wo + 2 * h) * cb * 4)
+    return peak
+
+
+@functools.lru_cache(maxsize=64)
+def _net_layers(program: LayerProgram) -> Tuple[NetLayer, ...]:
+    """Lower the program's ops into the megakernel's static layer plans."""
+    out = []
+    for op in program.ops:
+        spec = op.spec
+        out.append(NetLayer(
+            kind=spec.kind, lif=op.lif, halo=op.halo,
+            cap=(op.step_capacity if op.index == 0
+                 else _ring_capacity(program, op.index)),
+            padding=spec.padding if spec.kind == "conv" else 0,
+            stride=spec.stride if spec.kind == "pool" else 1,
+            in_shape=spec.in_shape))
+    return tuple(out)
+
+
+def _window_step_network(params: Sequence[EConvParams], states, class_counts,
+                         ev_xyc, ev_gate, alive, pre_dt, *,
+                         program: LayerProgram, co_blk: int = 128,
+                         use_pallas: Optional[bool] = None,
+                         vmem_budget: Optional[int] = None):
+    """The fused-network driver behind :func:`window_step` (ONE launch).
+
+    The whole compiled program — every layer, all T timesteps — runs
+    inside a single Pallas launch (`kernels/network_window`): all
+    membrane slabs resident in VMEM scratch, inter-layer spikes routed
+    through in-kernel event ring buffers, only the last layer's frames
+    (the rate-decode input) and the per-layer counters leaving the
+    kernel.  Outputs are bitwise equal to the fused-window driver's (the
+    retained oracle): the in-kernel routing is `window_common.route_frame`
+    — line-for-line :func:`frame_to_events` — and the per-layer chains
+    are the per-layer window kernels' exact sequences.
+
+    When :func:`network_window_plan` exceeds the VMEM scratch budget the
+    driver warns with the sizing diagnostic and executes the fused-window
+    lowering instead (L launches) — same bitwise results, the engines'
+    launch accounting follows via :func:`effective_fusion`.
+    """
+    T = ev_xyc.shape[0]
+    if effective_fusion(program, T, vmem_budget) != FUSED_NETWORK:
+        plan = network_window_plan(program, T)
+        budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+        warnings.warn(
+            f"fused-network window needs {plan.total_bytes} bytes of VMEM "
+            f"per grid step (membrane {plan.membrane_bytes} + rings "
+            f"{plan.ring_bytes} + I/O {plan.io_bytes}) > budget {budget}; "
+            f"falling back to the fused-window lowering "
+            f"({len(program.ops)} launches per window)")
+        return _window_step_fused(params, states, class_counts, ev_xyc,
+                                  ev_gate, alive, pre_dt, program=program,
+                                  co_blk=co_blk, use_pallas=use_pallas)
+    for op, p in zip(program.ops, params):
+        check_native_weights(op, p)
+    N = class_counts.shape[0]
+    states = list(apply_idle_decay(states, pre_dt, program=program))
+    xyc = jnp.transpose(ev_xyc, (1, 0, 2, 3))    # slot-major for the kernel
+    gate = jnp.transpose(ev_gate, (1, 0, 2))
+    al = jnp.transpose(alive, (1, 0))
+    op0 = program.ops[0]
+    if op0.kind == "conv":
+        xyc = xyc + jnp.asarray([op0.spec.padding, op0.spec.padding, 0],
+                                jnp.int32)
+    native = program.dtype_policy == INT8_NATIVE
+    v_out, s_last, counts_nl, drops_nl = network_window(
+        tuple(states), tuple(p.w for p in params), xyc, gate, al,
+        layers=_net_layers(program), native=native, use_pallas=use_pallas)
+    # counters leave the kernel as exact int32; the (L, N) float32 counts
+    # contract is an exact cast (values < 2^24), bitwise the fused path's
+    counts = counts_nl.astype(jnp.float32).T
+    drops = drops_nl.T
+    class_counts = class_counts + jnp.sum(
+        s_last, axis=(1, 2, 3)).astype(class_counts.dtype)
+    return tuple(v_out), class_counts, counts, drops
+
+
 def window_step(params: Sequence[EConvParams], states, class_counts,
                 ev_xyc, ev_gate, alive, pre_dt, *, program: LayerProgram,
-                co_blk: int = 128, use_pallas: Optional[bool] = None):
+                co_blk: int = 128, use_pallas: Optional[bool] = None,
+                vmem_budget: Optional[int] = None):
     """Advance every slot through one window of timesteps (jit this).
 
     The whole-network step the serving engine executes.  The program's
@@ -701,6 +918,13 @@ def window_step(params: Sequence[EConvParams], states, class_counts,
         Pallas launch (:func:`layer_window`; L launches per window), the
         time loop inside the kernel and the membrane resident in VMEM
         scratch.  Bitwise identical outputs.
+      * ``"fused-network"`` — the WHOLE program runs in ONE Pallas launch
+        per window (:func:`_window_step_network`): every layer's membrane
+        in VMEM scratch at once, inter-layer spikes through in-kernel
+        event ring buffers.  Bitwise identical outputs; falls back to
+        fused-window (with a warning) when the geometry exceeds
+        ``vmem_budget`` (default :data:`DEFAULT_VMEM_BUDGET`) — see
+        :func:`effective_fusion`.
 
     Args:
       states:       tuple of per-layer membrane slabs, each (N, Hp, Wp, C).
@@ -717,6 +941,11 @@ def window_step(params: Sequence[EConvParams], states, class_counts,
     Returns new states, class_counts, per-layer per-slot consumed-event
     counts (L, N) and inter-layer overflow drops (L, N) for this window.
     """
+    if program.fusion_policy == FUSED_NETWORK:
+        return _window_step_network(params, states, class_counts, ev_xyc,
+                                    ev_gate, alive, pre_dt, program=program,
+                                    co_blk=co_blk, use_pallas=use_pallas,
+                                    vmem_budget=vmem_budget)
     if program.fusion_policy == FUSED_WINDOW:
         return _window_step_fused(params, states, class_counts, ev_xyc,
                                   ev_gate, alive, pre_dt, program=program,

@@ -15,10 +15,15 @@ Three orthogonal axes (see ``docs/policies.md`` for the full matrix):
   accumulation).
 * **fusion policy** — how the slot-batched window step lowers onto Pallas
   launches: ``"per-step"`` (one scatter launch per layer per timestep —
-  the bit-exactness oracle) or ``"fused-window"`` (the whole
+  the bit-exactness oracle), ``"fused-window"`` (the whole
   ``leak -> scatter -> clip -> fire -> reset`` chain over all T timesteps
   of a window in ONE launch per layer, membrane resident in VMEM scratch
-  — L launches per window instead of L×T).
+  — L launches per window instead of L×T), or ``"fused-network"`` (the
+  entire layer program in ONE launch per window: every layer's membrane
+  slab resident in VMEM scratch at once, inter-layer spikes routed
+  through fixed-capacity in-kernel event ring buffers instead of
+  round-tripping frames through XLA; falls back to fused-window, with a
+  warning, when a geometry exceeds the VMEM scratch budget).
 * **backend** — where the serving engine runs the window step:
   ``"local"`` (one device, the bitwise parity oracle) or ``"mesh"``
   (the slot axis sharded across a JAX device mesh — replicated weights,
@@ -44,7 +49,8 @@ DTYPE_POLICIES = (F32_CARRIER, INT8_NATIVE)
 
 PER_STEP = "per-step"
 FUSED_WINDOW = "fused-window"
-FUSION_POLICIES = (PER_STEP, FUSED_WINDOW)
+FUSED_NETWORK = "fused-network"
+FUSION_POLICIES = (PER_STEP, FUSED_WINDOW, FUSED_NETWORK)
 
 BACKEND_LOCAL = "local"
 BACKEND_MESH = "mesh"
@@ -144,11 +150,17 @@ def resolve_policy(api: str, policy: Optional[ExecutionPolicy] = None,
     base = default if default is not None else ExecutionPolicy()
     if not given:
         return base
+    resolved = dataclasses.replace(base, **given)
     if api not in _LEGACY_WARNED:
         _LEGACY_WARNED.add(api)
+        # Spell out the exact replacement: only the axes the caller set,
+        # rendered over the surface's own defaults, paste-ready.
+        repl = ", ".join(f"{k}={getattr(resolved, k)!r}"
+                         for k in sorted(given))
         warnings.warn(
             f"{api}: the {', '.join(k + '=' for k in sorted(given))} "
             f"kwargs are deprecated; pass "
-            f"policy=ExecutionPolicy(...) instead (repro.core.policies)",
+            f"policy=ExecutionPolicy({repl}) instead "
+            f"(repro.core.policies)",
             DeprecationWarning, stacklevel=3)
-    return dataclasses.replace(base, **given)
+    return resolved

@@ -1,0 +1,13 @@
+"""Fused-network window megakernel: the whole program in ONE launch.
+
+The ``fusion_policy="fused-network"`` lowering — every layer's
+``leak -> scatter -> clip -> fire -> reset`` chain over all T timesteps of
+a serving window inside a single Pallas launch, all membranes resident in
+VMEM scratch, inter-layer spikes routed through fixed-capacity event ring
+buffers (see `kernel` for the dataflow and `core.layer_program` for the
+driver + VMEM budget fallback).
+"""
+from repro.kernels.network_window.ops import network_window
+from repro.kernels.network_window.spec import NetLayer
+
+__all__ = ["NetLayer", "network_window"]

@@ -1,0 +1,273 @@
+"""Pallas TPU megakernel: the whole network's window in ONE launch.
+
+The fused-network lowering (``fusion_policy="fused-network"``) of the
+layer-program executor: every layer's ``leak -> scatter -> clip -> fire ->
+reset`` chain, over all T timesteps of a serving window, runs inside a
+single ``pallas_call`` — the last step of the launch-count ladder
+L×T (per-step) -> L (fused-window) -> **1**.
+
+The structure is the SNE/composable-dataflow residency argument taken to
+its limit on TPU:
+
+  * **every layer's membrane slab lives in VMEM scratch at once** — the
+    multi-engine state memory analogue; HBM sees each slab exactly twice
+    per window (in and out), never between layers or timesteps;
+  * **inter-layer spikes ride fixed-capacity event ring buffers in VMEM
+    scratch** — the on-chip FIFOs of the layer-pipelined dataflow.  Layer
+    *l*'s FIRE frame at timestep *t* is routed by an in-kernel port of
+    ``frame_to_events`` (`kernels.window_common.route_frame`, bitwise the
+    executor's) into layer *l+1*'s buffer and consumed in the same
+    iteration, so no spike frame is ever materialized to HBM except the
+    last layer's (the rate-decode output);
+  * **overflow stays observable** — each boundary's routing drop count is
+    accumulated and returned per slot, exactly the counters the unfused
+    drivers surface, so the serving telemetry cannot go blind inside the
+    megakernel.
+
+The grid is the slot axis alone: channel blocking is impossible across a
+layer boundary (layer *l+1*'s scatter may read *any* of layer *l*'s
+channels), so each grid step owns one slot's entire network.  The VMEM
+cost of that choice is what `core.layer_program.network_window_plan`
+accounts for — the driver falls back to fused-window when a geometry
+exceeds the scratch budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.network_window.spec import NetLayer
+from repro.kernels.window_common import (clip_fire_reset, leak_boundary,
+                                         route_frame, saturate_int8,
+                                         window_acc_dtype)
+
+
+def _scatter_loop(nl: NetLayer, w_ref, acc_ref, read_ev, n_ev: int, lanes):
+    """Run one layer's per-timestep event loop against its VMEM slab.
+
+    ``read_ev(i) -> (x, y, c, g)`` abstracts the event source — the
+    layer-0 window schedule or a boundary ring buffer — so the scatter
+    bodies are literally the per-layer window kernels' inner loops.
+    """
+    if nl.kind == "conv":
+        K = w_ref.shape[0]
+
+        def body(i, _):
+            x, y, c, g = read_ev(i)
+            patch = (w_ref[:, :, c, :] * g).astype(acc_ref.dtype)
+            cur = acc_ref[0, pl.dslice(x, K), pl.dslice(y, K), :]
+            acc_ref[0, pl.dslice(x, K), pl.dslice(y, K), :] = cur + patch
+            return ()
+    elif nl.kind == "pool":
+        Ho, Wo = acc_ref.shape[1], acc_ref.shape[2]
+
+        def body(i, _):
+            x, y, c, g = read_ev(i)
+            xo = x // nl.stride
+            yo = y // nl.stride
+            ok = ((xo < Ho) & (yo < Wo)).astype(acc_ref.dtype)
+            sel = (lanes == c).astype(acc_ref.dtype)
+            contrib = (sel * w_ref[...] * (g * ok)).astype(acc_ref.dtype)
+            xo = jnp.minimum(xo, Ho - 1)
+            yo = jnp.minimum(yo, Wo - 1)
+            cur = acc_ref[0, pl.dslice(xo, 1), pl.dslice(yo, 1), :]
+            acc_ref[0, pl.dslice(xo, 1), pl.dslice(yo, 1), :] = cur + contrib
+            return ()
+    else:
+        _, W, C = nl.in_shape
+
+        def body(i, _):
+            x, y, c, g = read_ev(i)
+            flat = (x * W + y) * C + c
+            row = (w_ref[flat, :] * g).astype(acc_ref.dtype)
+            acc_ref[0, 0, 0, :] = acc_ref[0, 0, 0, :] + row
+            return ()
+
+    jax.lax.fori_loop(0, n_ev, body, ())
+
+
+def _network_window_kernel(*refs, layers: Tuple[NetLayer, ...],
+                           n_events0: int, native: bool):
+    """One grid step: one slot's WHOLE window through the WHOLE network.
+
+    Ref layout (inputs, outputs, scratch — pallas positional order), with
+    L = len(layers):
+
+      ev_ref:     (1, T, E0, 3) int32 — layer-0 window schedule (conv
+                  already in halo coords).
+      gate_ref:   (1, T, E0, 1) — layer-0 gates, accumulator dtype.
+      alive_ref:  (1, T) float32 — per-timestep liveness (shared by all
+                  layers: a frozen timestep freezes the whole network).
+      w_refs:     L weight blocks (conv flipped (K,K,Ci,Co), pool
+                  (1,1,C), fc (Din,Dout)), shared across slots.
+      v_refs:     L membrane slabs (1, Hp, Wp, C), storage dtype.
+      vout_refs:  L final membranes, storage dtype.
+      s_last_ref: (1, T, Ho, Wo, C_last) — the LAST layer's spike frames
+                  (accumulator dtype), the only frames leaving the kernel.
+      counts_ref: (1, L) int32 — consumed events per layer.
+      drops_ref:  (1, L) int32 — ring-buffer overflow per boundary.
+      acc_refs:   L VMEM scratch slabs (1, Hp, Wp, C), accumulator dtype —
+                  the resident membranes.
+      rb_refs:    L-1 ring-buffer pairs, per boundary l -> l+1:
+                  xyc (1, cap, 3) int32 + gate (1, cap, 1) accumulator
+                  dtype.  Written by layer l's routing, consumed by layer
+                  l+1's scatter in the same timestep iteration.
+    """
+    L = len(layers)
+    ev_ref, gate_ref, alive_ref = refs[0], refs[1], refs[2]
+    w_refs = refs[3:3 + L]
+    vout_refs = refs[3 + 2 * L:3 + 3 * L]
+    s_last_ref = refs[3 + 3 * L]
+    counts_ref = refs[3 + 3 * L + 1]
+    drops_ref = refs[3 + 3 * L + 2]
+    acc_refs = refs[3 + 3 * L + 3:3 + 4 * L + 3]
+    rb_refs = refs[3 + 4 * L + 3:]
+
+    T = s_last_ref.shape[1]
+    for l in range(L):
+        acc_refs[l][...] = refs[3 + L + l][...].astype(acc_refs[l].dtype)
+    lanes = [jax.lax.broadcasted_iota(jnp.int32, (1, 1, acc.shape[3]), 2)
+             if nl.kind == "pool" else None
+             for nl, acc in zip(layers, acc_refs)]
+    cnt = [jnp.int32(0)] * L
+    drp = [jnp.int32(0)] * L
+
+    for t in range(T):
+        a = alive_ref[0, t] > 0
+        cnt[0] = cnt[0] + jnp.sum(
+            gate_ref[0, t, :, 0].astype(jnp.int32))
+        for l, nl in enumerate(layers):
+            acc = acc_refs[l]
+            prev = acc[...]
+            h = nl.halo
+            Hp, Wp = acc.shape[1], acc.shape[2]
+            acc[0, h:Hp - h, h:Wp - h, :] = leak_boundary(
+                acc[0, h:Hp - h, h:Wp - h, :], nl.lif)
+            if l == 0:
+                def read_ev(i, t=t):
+                    return (ev_ref[0, t, i, 0], ev_ref[0, t, i, 1],
+                            ev_ref[0, t, i, 2], gate_ref[0, t, i, 0])
+                n_ev = n_events0
+            else:
+                rb_x, rb_g = rb_refs[2 * (l - 1)], rb_refs[2 * (l - 1) + 1]
+
+                def read_ev(i, rb_x=rb_x, rb_g=rb_g):
+                    return (rb_x[0, i, 0], rb_x[0, i, 1], rb_x[0, i, 2],
+                            rb_g[0, i, 0])
+                n_ev = nl.cap
+            _scatter_loop(nl, w_refs[l], acc, read_ev, n_ev, lanes[l])
+            v_new, s = clip_fire_reset(acc[0, h:Hp - h, h:Wp - h, :],
+                                       nl.lif)
+            acc[0, h:Hp - h, h:Wp - h, :] = v_new
+            if native:
+                acc[...] = saturate_int8(acc[...])
+            acc[...] = jnp.where(a, acc[...], prev)
+            s_t = jnp.where(a, s, jnp.zeros_like(s))
+            if l < L - 1:
+                nxt = layers[l + 1]
+                xyc, g2, nd = route_frame(s_t, nxt.cap)
+                if nxt.kind == "conv":
+                    # halo offset on x/y only; built from an iota so the
+                    # kernel captures no constant arrays (pallas rejects
+                    # closed-over device buffers)
+                    col = jax.lax.broadcasted_iota(jnp.int32, xyc.shape, 1)
+                    xyc = xyc + jnp.where(col < 2, nxt.padding, 0).astype(
+                        jnp.int32)
+                rb_refs[2 * l][0] = xyc
+                rb_refs[2 * l + 1][0] = g2.reshape(-1, 1)
+                cnt[l + 1] = cnt[l + 1] + jnp.sum(g2.astype(jnp.int32))
+                drp[l + 1] = drp[l + 1] + nd
+            else:
+                s_last_ref[0, t] = s_t
+    for l in range(L):
+        vout_refs[l][...] = acc_refs[l][...].astype(vout_refs[l].dtype)
+    counts_ref[0] = jnp.stack(cnt)
+    drops_ref[0] = jnp.stack(drp)
+
+
+@functools.partial(jax.jit, static_argnames=("layers", "native",
+                                             "interpret"))
+def network_window_pallas(states: Sequence[jnp.ndarray],
+                          weights: Sequence[jnp.ndarray],
+                          ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                          alive: jnp.ndarray, *,
+                          layers: Tuple[NetLayer, ...],
+                          native: bool = False, interpret: bool = False):
+    """Advance N slots through a whole window, all layers, in ONE launch.
+
+    Args:
+      states:  per-layer membrane slabs, each (N, Hp, Wp, C) in storage
+               dtype (float32 carrier / int8 native).
+      weights: per-layer weight arrays (conv unflipped — flipped here
+               once; pool per-channel vector; fc matrix).
+      ev_xyc:  (N, T, E0, 3) int32 layer-0 window schedule (halo coords
+               for a conv first layer).
+      ev_gate: (N, T, E0) validity gates (cast to the accumulator dtype).
+      alive:   (N, T) 1.0 where the slot has a real timestep.
+      layers:  static per-layer plans (hashable — jit/kernel key).
+      native:  int8-native policy — int32 accumulators, int8 saturation
+               at every boundary, int8 storage out.
+
+    Returns ``(v_out tuple (storage dtype), s_last (N, T, Ho, Wo, C_last)
+    accumulator dtype, counts (N, L) int32, drops (N, L) int32)``.
+    """
+    L = len(layers)
+    N, T, E0 = ev_xyc.shape[0], ev_xyc.shape[1], ev_xyc.shape[2]
+    acc_dt = window_acc_dtype(states[0].dtype, native)
+    gate4 = ev_gate.astype(acc_dt).reshape(N, T, E0, 1)
+    alive2 = alive.astype(jnp.float32)
+
+    w_in, w_specs = [], []
+    for nl, w in zip(layers, weights):
+        if nl.kind == "conv":
+            w_in.append(jnp.flip(jnp.flip(w, 0), 1))
+            w_specs.append(pl.BlockSpec(w.shape, lambda n: (0, 0, 0, 0)))
+        elif nl.kind == "pool":
+            w3 = (w if jnp.issubdtype(w.dtype, jnp.integer)
+                  else w.astype(states[0].dtype)).reshape(1, 1, -1)
+            w_in.append(w3)
+            w_specs.append(pl.BlockSpec(w3.shape, lambda n: (0, 0, 0)))
+        else:
+            w_in.append(w)
+            w_specs.append(pl.BlockSpec(w.shape, lambda n: (0, 0)))
+
+    slab_spec = [pl.BlockSpec((1,) + v.shape[1:], lambda n: (n, 0, 0, 0))
+                 for v in states]
+    Ho, Wo, C_last = (states[-1].shape[1] - 2 * layers[-1].halo,
+                      states[-1].shape[2] - 2 * layers[-1].halo,
+                      states[-1].shape[3])
+    scratch = [pltpu.VMEM((1,) + v.shape[1:], acc_dt) for v in states]
+    for nl in layers[1:]:
+        scratch.append(pltpu.VMEM((1, nl.cap, 3), jnp.int32))
+        scratch.append(pltpu.VMEM((1, nl.cap, 1), acc_dt))
+
+    out = pl.pallas_call(
+        functools.partial(_network_window_kernel, layers=layers,
+                          n_events0=E0, native=native),
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, T, E0, 3), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((1, T, E0, 1), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((1, T), lambda n: (n, 0)),
+        ] + w_specs + slab_spec,
+        out_specs=slab_spec + [
+            pl.BlockSpec((1, T, Ho, Wo, C_last),
+                         lambda n: (n, 0, 0, 0, 0)),
+            pl.BlockSpec((1, L), lambda n: (n, 0)),
+            pl.BlockSpec((1, L), lambda n: (n, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct(v.shape, v.dtype) for v in states]
+        + [
+            jax.ShapeDtypeStruct((N, T, Ho, Wo, C_last), acc_dt),
+            jax.ShapeDtypeStruct((N, L), jnp.int32),
+            jax.ShapeDtypeStruct((N, L), jnp.int32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(ev_xyc, gate4, alive2, *w_in, *states)
+    return tuple(out[:L]), out[L], out[L + 1], out[L + 2]

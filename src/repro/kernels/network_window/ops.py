@@ -1,0 +1,52 @@
+"""jit'd public wrapper for the fused-network window megakernel.
+
+Selects the Pallas TPU kernel on TPU backends and interpret mode elsewhere
+(interpret mode executes the kernel body in Python on CPU — the validation
+path mandated for this container); ``use_pallas=False`` runs the pure-jnp
+oracle (`ref.network_window_ref`), the same arithmetic per line.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.network_window.kernel import network_window_pallas
+from repro.kernels.network_window.ref import network_window_ref
+from repro.kernels.network_window.spec import NetLayer
+from repro.kernels.window_common import pad_empty_schedule
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def network_window(states: Sequence[jnp.ndarray],
+                   weights: Sequence[jnp.ndarray], ev_xyc: jnp.ndarray,
+                   ev_gate: jnp.ndarray, alive: jnp.ndarray, *,
+                   layers: Tuple[NetLayer, ...], native: bool = False,
+                   use_pallas: bool | None = None):
+    """Advance N slots through a whole window, all layers, in ONE launch.
+
+    The fused-network entry point (``fusion_policy="fused-network"``):
+    every layer's membrane stays resident in VMEM scratch for the whole
+    window and inter-layer spikes ride in-kernel event ring buffers, so a
+    window costs ONE launch for the entire network instead of L.  Same
+    auto-selection rules as the per-layer window wrappers;
+    ``use_pallas=False`` runs the pure-jnp oracle.
+
+    A zero-length layer-0 event axis still runs the window (leak/fire
+    must advance) — the schedule is padded to one gated-off event so the
+    launch geometry stays valid.
+
+    Returns ``(v_out tuple, s_last (N, T, Ho, Wo, C_last), counts
+    (N, L) int32, drops (N, L) int32)``.
+    """
+    ev_xyc, ev_gate = pad_empty_schedule(ev_xyc, ev_gate)
+    if use_pallas is False:
+        return network_window_ref(states, weights, ev_xyc, ev_gate, alive,
+                                  layers=layers, native=native)
+    return network_window_pallas(tuple(states), tuple(weights), ev_xyc,
+                                 ev_gate, alive, layers=layers,
+                                 native=native, interpret=not _on_tpu())

@@ -1,0 +1,107 @@
+"""Pure-jnp oracle for the fused-network window megakernel.
+
+Runs the whole layer chain — per timestep, per layer, the full
+``leak -> scatter -> clip -> fire -> reset`` sequence with the FIRE frame
+routed straight into the next layer's event list — in exactly the order
+the Pallas megakernel executes it.  The scatter stages are the per-kind
+single-slot oracles (`event_conv_ref` and friends, already the batched
+kernels' bit-for-bit contracts); the boundary and routing stages come
+from `kernels.window_common` (`leak_boundary`, `clip_fire_reset`,
+`route_frame`), the same helpers the megakernel calls — so oracle and
+kernel share every line of arithmetic.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.event_conv.ref import event_conv_ref
+from repro.kernels.event_fc.ref import event_fc_ref
+from repro.kernels.event_pool.ref import event_pool_ref
+from repro.kernels.network_window.spec import NetLayer
+from repro.kernels.window_common import (clip_fire_reset, crop_interior,
+                                         leak_boundary, route_frame,
+                                         saturate_int8, window_acc_dtype,
+                                         write_cropped)
+
+
+def _scatter(nl: NetLayer, w, acc, xyc, gate):
+    """One layer's per-timestep scatter via its single-slot oracle."""
+    if nl.kind == "conv":
+        return event_conv_ref(acc, w, xyc, gate)
+    if nl.kind == "pool":
+        return event_pool_ref(acc, w, xyc, gate, nl.stride)
+    return event_fc_ref(acc, w, xyc, gate, nl.in_shape)
+
+
+def network_window_ref(states: Sequence[jnp.ndarray],
+                       weights: Sequence[jnp.ndarray],
+                       ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                       alive: jnp.ndarray, *,
+                       layers: Tuple[NetLayer, ...], native: bool = False):
+    """Oracle: advance N slots through a whole window, all layers chained.
+
+    Args:
+      states:  per-layer membrane slabs, each (N, Hp, Wp, C) in storage
+               dtype.
+      weights: per-layer weight arrays (conv unflipped, pool per-channel,
+               fc matrix), shared across slots.
+      ev_xyc:  (N, T, E0, 3) int32 layer-0 window schedule (conv layers
+               expect halo coordinates, like the per-layer window refs).
+      ev_gate: (N, T, E0) validity gates.
+      alive:   (N, T) per-timestep liveness (frozen timesteps hold every
+               layer's state and emit no spikes).
+      layers:  the static per-layer plans (`NetLayer`).
+      native:  int8-native policy (int32 accumulator + boundary
+               saturation).
+
+    Returns ``(v_out tuple, s_last (N, T, Ho, Wo, C_last) accumulator
+    dtype, counts (N, L) int32, drops (N, L) int32)`` — counts are the
+    consumed (post-routing) events per layer, drops the ring-buffer
+    overflow per layer boundary (row 0 always 0, the collector counts
+    input drops).
+    """
+    L = len(layers)
+    T = ev_xyc.shape[1]
+    acc_dts = [window_acc_dtype(v.dtype, native) for v in states]
+
+    def one(vs, xyc0, gate0, al):
+        accs = [v.astype(dt) for v, dt in zip(vs, acc_dts)]
+        counts = [jnp.int32(0)] * L
+        drops = [jnp.int32(0)] * L
+        frames = []
+        for t in range(T):
+            a = al[t] > 0
+            xyc, gate = xyc0[t], gate0[t].astype(accs[0].dtype)
+            counts[0] = counts[0] + jnp.sum(gate.astype(jnp.int32))
+            for l, nl in enumerate(layers):
+                prev = accs[l]
+                acc = write_cropped(
+                    accs[l], leak_boundary(crop_interior(accs[l], nl.halo),
+                                           nl.lif), nl.halo)
+                acc = _scatter(nl, weights[l], acc, xyc, gate)
+                v_new, s = clip_fire_reset(crop_interior(acc, nl.halo),
+                                           nl.lif)
+                acc = write_cropped(acc, v_new, nl.halo)
+                if native:
+                    acc = saturate_int8(acc)
+                accs[l] = jnp.where(a, acc, prev)
+                s_t = jnp.where(a, s, jnp.zeros_like(s))
+                if l < L - 1:
+                    nxt = layers[l + 1]
+                    xyc, gate, nd = route_frame(s_t, nxt.cap)
+                    if nxt.kind == "conv":
+                        xyc = xyc + jnp.asarray(
+                            [nxt.padding, nxt.padding, 0], jnp.int32)
+                    counts[l + 1] = counts[l + 1] + jnp.sum(
+                        gate.astype(jnp.int32))
+                    drops[l + 1] = drops[l + 1] + nd
+                else:
+                    frames.append(s_t)
+        outs = tuple(acc.astype(v.dtype) for acc, v in zip(accs, vs))
+        return (outs, jnp.stack(frames), jnp.stack(counts),
+                jnp.stack(drops))
+
+    return jax.vmap(one)(tuple(states), ev_xyc, ev_gate, alive)

@@ -1,0 +1,40 @@
+"""Kernel-side layer metadata for the fused-network megakernel.
+
+The megakernel chains every layer of a compiled program inside one Pallas
+launch, so it needs the full per-layer static plan — scatter kind, LIF
+dynamics, geometry, and the *input*-event capacity that sizes each layer
+boundary's ring buffer — without importing `core.layer_program` (the
+kernels-never-import-the-executor layering rule).  :class:`NetLayer` is
+that plan: a frozen, hashable value the executor lowers each `LayerOp`
+into and the kernel wrapper takes as a static argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.core.lif import LifParams
+
+
+@dataclasses.dataclass(frozen=True)
+class NetLayer:
+    """One layer's static plan inside the fused-network megakernel.
+
+    ``cap`` is the layer's per-timestep *input*-event capacity: for layer
+    0 it documents the collector bucket (the actual width comes from the
+    traced schedule); for every later layer it is the width of the event
+    ring buffer its producer boundary routes into — already clamped to
+    the producer's frame size, like ``frame_to_events`` clamps its
+    capacity.  ``padding`` shifts a conv layer's input events into halo
+    coordinates (the same offset the unfused drivers apply in XLA);
+    ``stride`` and ``in_shape`` parameterize the pool and FC scatter
+    rules.
+    """
+
+    kind: str                            # "conv" | "pool" | "fc"
+    lif: LifParams
+    halo: int
+    cap: int
+    padding: int = 0                     # conv: input-coords -> halo coords
+    stride: int = 1                      # pool
+    in_shape: Tuple[int, int, int] = (1, 1, 1)   # fc flattening rule

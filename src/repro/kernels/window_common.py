@@ -30,7 +30,8 @@ from repro.core.quant import INT8_MAX, INT8_MIN
 
 __all__ = ["INT8_MAX", "INT8_MIN", "clip_fire_reset", "crop_interior",
            "fused_window_ref", "leak_boundary", "pad_empty_schedule",
-           "saturate_int8", "window_acc_dtype", "write_cropped"]
+           "route_frame", "saturate_int8", "window_acc_dtype",
+           "write_cropped"]
 
 
 def pad_empty_schedule(ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray):
@@ -92,6 +93,44 @@ def saturate_int8(v: jnp.ndarray) -> jnp.ndarray:
     round trip's.
     """
     return jnp.clip(v, INT8_MIN, INT8_MAX)
+
+
+def route_frame(s: jnp.ndarray, cap: int):
+    """One dense spike frame -> a padded event list (in-kernel routing).
+
+    The single-frame port of `core.layer_program.frame_to_events`, used by
+    the fused-network megakernel (`kernels/network_window`) to route one
+    timestep's FIRE frame into the next layer's event ring buffer without
+    leaving the kernel — and restated here (not imported) because of the
+    kernels-never-import-the-executor layering rule.  The arithmetic is
+    kept line-for-line identical (iota sort keys, ``top_k`` of the negated
+    keys, sentinel clamp, row-major decomposition), so the event order,
+    gates and drop counts are bitwise the executor's.
+
+    Args:
+      s:   (H, W, C) one spike frame (accumulator dtype, exact 0/1).
+      cap: the consumer layer's per-timestep event capacity.
+
+    Returns ``(xyc (cap', 3) int32, gate (cap',) s.dtype,
+    n_drop () int32)`` with ``cap' = min(cap, H*W*C)``.
+    """
+    H, W, C = s.shape
+    S = H * W * C
+    cap = min(cap, S)
+    flat = s.reshape(1, S)
+    nz = flat != 0
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
+    key = jnp.where(nz, idx, S)
+    order = -jax.lax.top_k(-key, cap)[0]                     # (1, cap)
+    gate = (order < S).astype(s.dtype)[0]
+    order = jnp.minimum(order, S - 1)[0]                     # clamp pads
+    x = order // (W * C)
+    y = (order // C) % W
+    c = order % C
+    xyc = jnp.stack([x, y, c], axis=-1)
+    n = jnp.sum(nz.astype(jnp.int32))
+    n_drop = jnp.maximum(n - cap, 0)
+    return xyc, gate, n_drop
 
 
 def crop_interior(vp: jnp.ndarray, h: int) -> jnp.ndarray:

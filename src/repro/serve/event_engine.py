@@ -80,9 +80,10 @@ import numpy as np
 from repro.core import events as ev
 from repro.core.econv import EConvParams
 from repro.core.engine import SneConfig
-from repro.core.layer_program import (FUSED_WINDOW, LayerOp,
+from repro.core.layer_program import (FUSED_NETWORK, FUSED_WINDOW, LayerOp,
                                       check_native_weights, compile_program,
-                                      state_dtype, window_step)
+                                      effective_fusion, state_dtype,
+                                      window_step)
 from repro.core.layer_program import \
     default_step_capacities as _program_step_capacities
 from repro.core.lif import supports_idle_skip
@@ -280,6 +281,11 @@ class EventServeEngine:
         self._ev: List[Optional[np.ndarray]] = [None] * n_slots  # (M,4) t,x,y,c
         self.acc_counts = np.zeros((L, n_slots), np.float64)
         self.acc_drops = np.zeros((L, n_slots), np.float64)
+        # engine-lifetime inter-layer drop totals per layer boundary (row l
+        # = events dropped routing INTO layer l; row 0 is always 0 — the
+        # collector counts input drops).  Unlike ``acc_drops`` this is
+        # never reset on slot reuse, so it feeds engine-level telemetry.
+        self.total_drops = np.zeros((L,), np.float64)
         self.collector_drops = np.zeros((n_slots,), np.int64)  # capacity
         self.oor_drops = np.zeros((n_slots,), np.int64)        # out-of-range
         self.windows = np.zeros((n_slots,), np.int64)
@@ -676,9 +682,15 @@ class EventServeEngine:
         self.stats["launched_events"] += int(
             np.sum(gate_w[:, :A] if not full_batch else gate_w[:, idx]))
         self.stats["padded_event_slots"] += self.W * len(gidx) * Eb
+        # fused-network: ONE launch for the whole window (or per-layer
+        # fused-window launches when the VMEM budget forced a fallback —
+        # effective_fusion is the same predicate the driver uses);
         # fused-window: ONE launch per layer per window; per-step: one
         # slot-batched scatter launch per layer per timestep
-        if self.program.fusion_policy == FUSED_WINDOW:
+        fusion = effective_fusion(self.program, self.W)
+        if fusion == FUSED_NETWORK:
+            self.stats["kernel_launches"] += 1
+        elif fusion == FUSED_WINDOW:
             self.stats["kernel_launches"] += len(self.program.ops)
         else:
             self.stats["kernel_launches"] += self.W * len(self.program.ops)
@@ -699,9 +711,27 @@ class EventServeEngine:
         if w.full_batch:
             self.acc_counts[:, idx] += counts_np[:, idx]
             self.acc_drops[:, idx] += drops_np[:, idx]
+            self.total_drops += drops_np[:, idx].sum(axis=1)
         else:
             self.acc_counts[:, idx] += counts_np[:, :A]
             self.acc_drops[:, idx] += drops_np[:, :A]
+            self.total_drops += drops_np[:, :A].sum(axis=1)
+
+    def inter_layer_drops(self) -> dict:
+        """Engine-lifetime ring/capacity drop totals per layer boundary.
+
+        Row ``l`` counts events dropped while routing INTO layer ``l``
+        across every retired window of every request (unlike the
+        per-request ``inter_layer_dropped`` telemetry, this survives slot
+        reuse).  Row 0 is always 0 — input-side drops are counted by the
+        collector (``collector_dropped`` / ``out_of_range_dropped``).
+        """
+        return {
+            "inter_layer_dropped": [float(d) for d in self.total_drops],
+            "inter_layer_dropped_total": float(self.total_drops.sum()),
+            "collector_dropped": self.stats["collector_dropped"],
+            "out_of_range_dropped": self.stats["out_of_range_dropped"],
+        }
 
     def padding_waste(self) -> dict:
         """Padded-vs-real event accounting for the capacity buckets.

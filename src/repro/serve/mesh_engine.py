@@ -63,7 +63,8 @@ import numpy as np
 
 from repro.core.econv import EConvParams
 from repro.core.engine import SneConfig
-from repro.core.layer_program import FUSED_WINDOW, window_step
+from repro.core.layer_program import (FUSED_NETWORK, FUSED_WINDOW,
+                                      effective_fusion, window_step)
 from repro.core.policies import (BACKEND_LOCAL, BACKEND_MESH,
                                  ExecutionPolicy, resolve_policy)
 from repro.core.sne_net import SNNSpec
@@ -406,7 +407,10 @@ class MeshEventServeEngine(EventServeEngine):
             sh.states = tuple(sv[s] for sv in split_states)
             sh.class_counts = split_cc[s]
         self._extra["step_calls"] += 1
-        if self.program.fusion_policy == FUSED_WINDOW:
+        fusion = effective_fusion(self.program, W)
+        if fusion == FUSED_NETWORK:
+            self._extra["kernel_launches"] += 1
+        elif fusion == FUSED_WINDOW:
             self._extra["kernel_launches"] += len(self.program.ops)
         else:
             self._extra["kernel_launches"] += W * len(self.program.ops)
@@ -425,9 +429,23 @@ class MeshEventServeEngine(EventServeEngine):
             for s, (sh, d) in enumerate(zip(self.shards, w.dense)):
                 sh.acc_counts[:, d] += counts_np[:, self.spd * s + d]
                 sh.acc_drops[:, d] += drops_np[:, self.spd * s + d]
+                sh.total_drops += drops_np[:, self.spd * s + d].sum(axis=1)
             return
         for s, win in w.per_shard:      # per-shard dispatches
             self.shards[s]._retire_phase(win)
+
+    def inter_layer_drops(self) -> dict:
+        """Engine-lifetime drop totals per boundary, summed over shards."""
+        per_shard = [sh.inter_layer_drops() for sh in self.shards]
+        total = np.sum([d["inter_layer_dropped"] for d in per_shard], axis=0)
+        return {
+            "inter_layer_dropped": [float(d) for d in total],
+            "inter_layer_dropped_total": float(total.sum()),
+            "collector_dropped": sum(d["collector_dropped"]
+                                     for d in per_shard),
+            "out_of_range_dropped": sum(d["out_of_range_dropped"]
+                                        for d in per_shard),
+        }
 
     def _finish(self, slot: int) -> None:
         """Complete a finished request and release its global slot."""

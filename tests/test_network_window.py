@@ -1,0 +1,340 @@
+"""Fused-network megakernel: ONE launch per window vs the L-launch oracle.
+
+The tentpole contract of ``fusion_policy="fused-network"``: a
+`window_step` run under the whole-network megakernel — every layer's
+``leak -> scatter -> clip -> fire -> reset`` chain over all T timesteps
+in ONE Pallas launch, membranes resident in VMEM scratch, inter-layer
+spikes routed through fixed-capacity event ring buffers — computes
+*exactly* what the retained fused-window oracle (one launch per layer
+per window) computes: states, class counts, per-layer event counts and
+ring-overflow drops, bit for bit, under BOTH dtype policies and both
+kernel modes.
+
+Also here: the VMEM scratch-budget fallback (undersized budget ->
+fused-window lowering + a sizing diagnostic, bitwise-identical outputs),
+engine-level launch accounting (1 per window), and the
+capacity-saturation edges of the routing path (`frame_to_events` /
+`route_frame` / `layer_step_capacity`): exactly-full, overfull and
+prime-capacity schedules per layer kind.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:           # container has no hypothesis; see the shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import layer_program as lp
+from repro.core.econv import EConvParams, EConvSpec
+from repro.core.lif import LifParams
+from repro.core.quant import quantize_net
+from repro.core.sne_net import SNNSpec, dvs_gesture_net, init_snn, tiny_net
+from repro.kernels.window_common import route_frame
+from repro.serve.event_engine import EventRequest, EventServeEngine
+from test_fused_window import (_assert_windows_equal, _rand_codes, _rand_net,
+                               _rand_window, _run_window)
+
+F32, I8 = lp.F32_CARRIER, lp.INT8_NATIVE
+FUSED, NET, STEP = lp.FUSED_WINDOW, lp.FUSED_NETWORK, lp.PER_STEP
+
+
+# ---------------------------------------------------------------------------
+# whole-network megakernel vs the fused-window oracle, bitwise
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=8, deadline=None)
+def test_network_window_parity(seed):
+    """`window_step` under fused-network must reproduce the fused-window
+    oracle's states, class counts, per-layer event counts and ring drops
+    bitwise, for both dtype policies and both kernel modes, on random
+    nets with random liveness and deferred idle decay."""
+    rng = np.random.default_rng(seed)
+    spec = _rand_net(rng)
+    codes = [_rand_codes(rng, l) for l in spec.layers]
+    caps = tuple(min(c, 64) for c in
+                 (lp.layer_step_capacity(l) for l in spec.layers))
+    N, W = 2, 3
+    xyc, gate, alive = _rand_window(rng, spec, caps[0], N, W)
+    pre_dt = jnp.asarray(rng.integers(0, 3, (N,)).astype(np.int32))
+    floats = [EConvParams(w=p.w.astype(jnp.float32)) for p in codes]
+    for policy, params in ((F32, floats), (I8, codes)):
+        want = _run_window(spec, params, caps, xyc, gate, alive, pre_dt, N,
+                           policy, FUSED, False)
+        ops = lp.compile_program(
+            spec, step_capacities=caps,
+            policy=lp.ExecutionPolicy(dtype_policy=policy,
+                                      fusion_policy=FUSED)).ops
+        for mode in (None, False):
+            got = _run_window(spec, params, caps, xyc, gate, alive, pre_dt,
+                              N, policy, NET, mode)
+            _assert_windows_equal(got, want, ops)
+
+
+def test_full_dvs_gesture_network_parity():
+    """One megakernel window of the paper's full-geometry Fig. 6 network
+    (128x128x2 input, all 7 layers in ONE launch) must equal the
+    fused-window oracle bitwise under both dtype policies — and the plan
+    must fit the default VMEM budget (no silent fallback)."""
+    spec = dvs_gesture_net(n_timesteps=8)
+    qn = quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec)
+    caps = (64,) * len(spec.layers)
+    rng = np.random.default_rng(0)
+    N, W, E0 = 1, 2, 64
+    H, Wd, C = qn.spec.in_shape
+    xyc = jnp.asarray(np.stack([rng.integers(0, H, (W, N, E0)),
+                                rng.integers(0, Wd, (W, N, E0)),
+                                rng.integers(0, C, (W, N, E0))],
+                               -1).astype(np.int32))
+    gate = jnp.asarray(np.ones((W, N, E0), np.float32))
+    alive = jnp.ones((W, N), jnp.float32)
+    pre_dt = jnp.zeros((N,), jnp.int32)
+    for policy in (F32, I8):
+        p = qn.params_for(policy)
+        prog = lp.compile_program(qn.spec, step_capacities=caps,
+                                  policy=lp.ExecutionPolicy(
+                                      dtype_policy=policy,
+                                      fusion_policy=NET))
+        assert lp.effective_fusion(prog, W) == NET
+        want = _run_window(qn.spec, p, caps, xyc, gate, alive, pre_dt, N,
+                           policy, FUSED, False)
+        got = _run_window(qn.spec, p, caps, xyc, gate, alive, pre_dt, N,
+                          policy, NET, False)
+        _assert_windows_equal(got, want, prog.ops)
+
+
+def test_vmem_budget_fallback():
+    """A geometry that exceeds the scratch budget falls back to the
+    fused-window lowering with a sizing diagnostic — and stays bitwise
+    identical.  `effective_fusion` is the single predicate both the
+    driver and the engines' launch accounting consult."""
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    caps = tuple(lp.layer_step_capacity(l) for l in spec.layers)
+    rng = np.random.default_rng(7)
+    N, W = 2, 4
+    xyc, gate, alive = _rand_window(rng, spec, caps[0], N, W)
+    pre_dt = jnp.zeros((N,), jnp.int32)
+    prog = lp.compile_program(spec, step_capacities=caps,
+                              policy=lp.ExecutionPolicy(fusion_policy=NET))
+    states = tuple(lp.padded_state(op, n_slots=N) for op in prog.ops)
+    cc0 = jnp.zeros((N, spec.n_classes), jnp.float32)
+    plan = lp.network_window_plan(prog, W)
+    assert plan.total_bytes == (plan.membrane_bytes + plan.ring_bytes
+                                + plan.io_bytes)
+    assert lp.effective_fusion(prog, W) == NET
+    assert lp.effective_fusion(prog, W, vmem_budget=1024) == FUSED
+    with pytest.warns(UserWarning, match="falling back to the fused-window"):
+        got = lp.window_step(params, states, cc0, xyc, gate, alive, pre_dt,
+                             program=prog, use_pallas=False,
+                             vmem_budget=1024)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")    # the fitting budget must not warn
+        want = lp.window_step(params, states, cc0, xyc, gate, alive, pre_dt,
+                              program=prog, use_pallas=False)
+    _assert_windows_equal(got, want, prog.ops)
+
+
+def test_network_plan_reporting():
+    """The VMEM plan decomposes into membrane + ring + I/O bytes and the
+    scratch reporter follows the policy: 0 per-step, per-layer max for
+    fused-window, whole-plan residency for fused-network."""
+    spec = tiny_net()
+    progs = {f: lp.compile_program(spec, policy=lp.ExecutionPolicy(
+        fusion_policy=f)) for f in (STEP, FUSED, NET)}
+    W = 4
+    assert lp.window_scratch_bytes(progs[STEP], W) == 0
+    assert 0 < lp.window_scratch_bytes(progs[FUSED], W) \
+        < lp.window_scratch_bytes(progs[NET], W)
+    plan = lp.network_window_plan(progs[NET], W)
+    assert lp.window_scratch_bytes(progs[NET], W) == \
+        plan.membrane_bytes + plan.ring_bytes
+    # int8-native stores 1-byte slabs: strictly smaller state footprint
+    qspec = quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec).spec
+    prog_i8 = lp.compile_program(qspec, policy=lp.ExecutionPolicy(
+        dtype_policy=I8, fusion_policy=NET))
+    assert lp.state_bytes(prog_i8, 2) < lp.state_bytes(progs[NET], 2)
+
+
+# ---------------------------------------------------------------------------
+# served end to end: ONE launch per window, drops surfaced
+# ---------------------------------------------------------------------------
+
+def test_engine_network_fused_launch_accounting():
+    """A served cohort under fused-network must decode identically to
+    fused-window while accounting exactly ONE kernel launch per step
+    call, and surface engine-lifetime inter-layer drop totals."""
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    rng = np.random.default_rng(2)
+    spikes = [(rng.random((spec.n_timesteps,) + spec.in_shape) < 0.3)
+              .astype(np.float32) for _ in range(3)]
+    spikes[1][4:12] = 0.0   # idle stretch: exercises skip + compaction
+    out = {}
+    for fusion in (NET, FUSED):
+        eng = EventServeEngine(spec, params, n_slots=2, window=4,
+                               use_pallas=False,
+                               policy=lp.ExecutionPolicy(
+                                   fusion_policy=fusion))
+        reqs = [EventRequest.from_dense(i, jnp.asarray(s))
+                for i, s in enumerate(spikes)]
+        eng.run(reqs)
+        out[fusion] = (np.stack([r.class_counts for r in reqs]),
+                       np.stack([np.asarray(r.telemetry.per_layer_events)
+                                 for r in reqs]),
+                       np.stack([np.asarray(r.telemetry.inter_layer_dropped)
+                                 for r in reqs]),
+                       eng.stats, eng.inter_layer_drops())
+    np.testing.assert_array_equal(out[NET][0], out[FUSED][0])
+    np.testing.assert_array_equal(out[NET][1], out[FUSED][1])
+    np.testing.assert_array_equal(out[NET][2], out[FUSED][2])
+    # megakernel: exactly ONE launch per step call (vs L under the oracle)
+    stats = out[NET][3]
+    assert stats["kernel_launches"] == stats["step_calls"]
+    assert out[FUSED][3]["kernel_launches"] == \
+        len(spec.layers) * out[FUSED][3]["step_calls"]
+    # engine-lifetime drop totals: same routing, same totals; row 0 is
+    # input-side (collector-counted) so always 0
+    net_drops, ora_drops = out[NET][4], out[FUSED][4]
+    assert net_drops["inter_layer_dropped"] == ora_drops["inter_layer_dropped"]
+    assert net_drops["inter_layer_dropped"][0] == 0.0
+    assert net_drops["inter_layer_dropped_total"] == \
+        sum(net_drops["inter_layer_dropped"])
+    # per-request telemetry totals reconcile with the engine-lifetime view
+    np.testing.assert_allclose(out[NET][2].sum(axis=0),
+                               net_drops["inter_layer_dropped"])
+
+
+# ---------------------------------------------------------------------------
+# capacity saturation: the routing path's edges, per layer kind
+# ---------------------------------------------------------------------------
+
+def _frame_with_n_spikes(rng, shape, n):
+    """A binary frame with exactly n nonzero sites."""
+    S = int(np.prod(shape))
+    flat = np.zeros((S,), np.float32)
+    flat[rng.choice(S, size=n, replace=False)] = 1.0
+    return flat.reshape(shape)
+
+
+@pytest.mark.parametrize("cap", [8, 13])     # aligned and prime capacities
+@pytest.mark.parametrize("rel", [-1, 0, 3])  # under-, exactly-, over-full
+def test_frame_to_events_saturation(cap, rel):
+    """`frame_to_events` at the bucket edge: exactly-full keeps every
+    event with zero drops; overfull keeps the first `cap` in row-major
+    order and counts the excess; `route_frame` (the in-kernel port)
+    agrees event for event."""
+    rng = np.random.default_rng(cap * 10 + rel)
+    shape = (5, 5, 3)
+    n = cap + rel
+    s = jnp.asarray(_frame_with_n_spikes(rng, shape, n))[None]
+    xyc, gate, n_drop = lp.frame_to_events(s, cap)
+    assert xyc.shape == (1, cap, 3) and gate.shape == (1, cap)
+    assert int(n_drop[0]) == max(n - cap, 0)
+    assert int(jnp.sum(gate)) == min(n, cap)
+    # kept events are the row-major-first nonzero sites, in order
+    H, W, C = shape
+    want = np.flatnonzero(np.asarray(s[0]).reshape(-1))[:cap]
+    got = np.asarray(xyc[0, : len(want)])
+    flat = got[:, 0] * W * C + got[:, 1] * C + got[:, 2]
+    np.testing.assert_array_equal(flat, want)
+    # the in-kernel single-frame port is the same function, bit for bit
+    rxyc, rgate, rnd = route_frame(s[0], cap)
+    np.testing.assert_array_equal(np.asarray(rxyc), np.asarray(xyc[0]))
+    np.testing.assert_array_equal(np.asarray(rgate), np.asarray(gate[0]))
+    assert int(rnd) == int(n_drop[0])
+
+
+def test_frame_to_events_cap_above_sites():
+    """A capacity larger than the site count clamps to it — every spike
+    routes, nothing drops, padding stays gated off."""
+    s = jnp.ones((1, 2, 2, 1), jnp.float32)
+    xyc, gate, n_drop = lp.frame_to_events(s, 64)
+    assert xyc.shape[1] == 4 and int(jnp.sum(gate)) == 4
+    assert int(n_drop[0]) == 0
+
+
+@pytest.mark.parametrize("kind", ["conv", "pool", "fc"])
+@pytest.mark.parametrize("policy", [F32, I8])
+def test_ring_saturation_per_layer_kind(kind, policy):
+    """A two-layer net whose first layer fires EVERY site, routed into a
+    deliberately undersized ring feeding each consumer kind: the
+    megakernel's overflow drops must equal the fused-window oracle's
+    `frame_to_events` drops bitwise — saturation does not break parity —
+    and the drop row must be exactly (sites - cap) per live timestep."""
+    lif_lo = LifParams(threshold=1.0, leak=0.0, state_clip=127.0)
+    lif_hi = LifParams(threshold=100.0, leak=0.0, state_clip=127.0)
+    l0 = EConvSpec("conv", (6, 6, 2), 3, kernel=1, padding=0, lif=lif_lo)
+    if kind == "conv":
+        l1 = EConvSpec("conv", l0.out_shape, 2, kernel=3, padding=1,
+                       lif=lif_hi)
+    elif kind == "pool":
+        l1 = EConvSpec("pool", l0.out_shape, l0.out_shape[2], kernel=2,
+                       stride=2, lif=lif_hi)
+    else:
+        l1 = EConvSpec("fc", l0.out_shape, 4, lif=lif_hi)
+    spec = SNNSpec(layers=(l0, l1), n_timesteps=4,
+                   n_classes=l1.out_shape[2])
+    sites0 = int(np.prod(l0.out_shape))
+    cap1 = 7                                 # prime, far below sites0=108
+    in_sites = int(np.prod(l0.in_shape))
+    caps = (in_sites, cap1)
+    # big positive weights so EVERY output site of layer 0 fires each step
+    w0 = np.full((1, 1, 2, 3), 5, np.int8)
+    if kind == "conv":
+        w1 = np.full((3, 3, 3, 2), 1, np.int8)
+    elif kind == "pool":
+        w1 = np.full((3,), 1, np.int8)
+    else:
+        w1 = np.full((sites0, 4), 1, np.int8)
+    codes = [EConvParams(w=jnp.asarray(w0)), EConvParams(w=jnp.asarray(w1))]
+    floats = [EConvParams(w=p.w.astype(jnp.float32)) for p in codes]
+    N, W = 2, 3
+    # the schedule enumerates EVERY input site each timestep, so layer 0's
+    # whole output frame fires every step and floods the boundary ring
+    H0, W0, C0 = l0.in_shape
+    sites = np.stack(np.unravel_index(np.arange(in_sites), (H0, W0, C0)),
+                     -1).astype(np.int32)
+    xyc = jnp.asarray(np.broadcast_to(sites, (W, N, in_sites, 3)))
+    gate = jnp.ones((W, N, in_sites), jnp.float32)
+    alive = jnp.ones((W, N), jnp.float32)
+    pre_dt = jnp.zeros((N,), jnp.int32)
+    params = codes if policy == I8 else floats
+    want = _run_window(spec, params, caps, xyc, gate, alive, pre_dt, N,
+                       policy, FUSED, False)
+    ops = lp.compile_program(
+        spec, step_capacities=caps,
+        policy=lp.ExecutionPolicy(dtype_policy=policy,
+                                  fusion_policy=FUSED)).ops
+    for mode in (None, False):
+        got = _run_window(spec, params, caps, xyc, gate, alive, pre_dt, N,
+                          policy, NET, mode)
+        _assert_windows_equal(got, want, ops)
+    # every live timestep drops exactly (sites - cap) boundary events
+    drops = np.asarray(want[3])
+    np.testing.assert_array_equal(
+        drops[1], np.full((N,), W * (sites0 - cap1), np.float32))
+    np.testing.assert_array_equal(drops[0], np.zeros((N,)))
+
+
+def test_layer_step_capacity_alignment():
+    """`layer_step_capacity` rounds to the event-bucket alignment and
+    never returns less than one aligned bucket — prime input geometries
+    included (the ring-capacity sizing reuses these buckets)."""
+    lif = LifParams(threshold=1.0, leak=0.0, state_clip=127.0)
+    for shape in [(1, 1, 1), (7, 11, 3), (13, 13, 5)]:
+        for kind in ("conv", "pool", "fc"):
+            if kind == "conv":
+                s = EConvSpec("conv", shape, 2, kernel=1, padding=0, lif=lif)
+            elif kind == "pool":
+                s = EConvSpec("pool", shape, shape[2], kernel=1, stride=1,
+                              lif=lif)
+            else:
+                s = EConvSpec("fc", shape, 2, lif=lif)
+            cap = lp.layer_step_capacity(s, align=8)
+            assert cap % 8 == 0 and cap >= 8
