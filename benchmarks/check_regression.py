@@ -12,8 +12,10 @@ values far *above* baseline print a reminder to ratchet the baseline up.
 reduction at 90% idle.  Beyond the headline, baselines may pin arbitrary
 metrics: ``<metric>_min`` keys are floors (throughput must not sink below
 them), ``<metric>_max`` keys are ceilings (tail latency must not rise
-above them), and ``<metric>_monotone_up`` keys require a list-valued
-metric to be strictly increasing (the mesh device-scaling curve).
+above them), ``<metric>_monotone_up`` keys require a list-valued metric
+to be strictly increasing (the mesh device-scaling curve), and
+``<metric>_monotone_down`` keys the mirror image (the spatial-sparsity
+launch-bytes curve).
 
 Baselines correspond to the reduced (``--fast``, oracle-kernel)
 configuration that CI's bench-smoke job runs; the gate cross-checks the
@@ -90,6 +92,22 @@ def check_one(result: dict, base: dict, tolerance: float) -> list:
         if not ok:
             errors.append(f"{name}: {metric} {vals} is not a strictly "
                           f"increasing curve")
+    # the mirror shape pin: "<metric>_monotone_down" requires a strictly
+    # decreasing list (the spatial-sparsity launch-bytes curve: the
+    # collector must ship fewer bytes as the active region shrinks, so a
+    # flat curve means adaptive bucketing quietly stopped adapting)
+    for key, want in base.items():
+        if not key.endswith("_monotone_down") or not want:
+            continue
+        metric = key[: -len("_monotone_down")]
+        vals = [float(v) for v in result.get(metric, [])]
+        ok = len(vals) >= 2 and all(b < a for a, b in zip(vals, vals[1:]))
+        print(f"  {name}: {metric} {['%.0f' % v for v in vals]} "
+              f"(required strictly decreasing) -> "
+              f"{'OK' if ok else 'REGRESSION'}")
+        if not ok:
+            errors.append(f"{name}: {metric} {vals} is not a strictly "
+                          f"decreasing curve")
     return errors
 
 

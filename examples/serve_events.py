@@ -90,6 +90,11 @@ def main():
                     "Pallas kernel (interpret mode on CPU)")
     ap.add_argument("--no-idle-skip", action="store_true",
                     help="step every window densely (the pre-skip engine)")
+    ap.add_argument("--tile-sparsity", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="skip cold spatial tiles inside the window kernels "
+                    "(bitwise invisible; --no-tile-sparsity runs every tile "
+                    "densely, the pre-bitmap kernels)")
     ap.add_argument("--dtype-policy", choices=DTYPE_POLICIES,
                     default=F32_CARRIER,
                     help="datapath dtype domain; int8-native quantizes the "
@@ -125,6 +130,7 @@ def main():
     policy = ExecutionPolicy(dtype_policy=args.dtype_policy,
                              fusion_policy=args.fusion_policy,
                              idle_skip=not args.no_idle_skip,
+                             tile_sparsity=args.tile_sparsity,
                              backend=args.backend)
     eng = EventServeEngine(spec, params, n_slots=args.slots,
                            window=args.window,

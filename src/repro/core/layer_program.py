@@ -76,6 +76,9 @@ from repro.kernels.event_fc.ops import event_fc_batched, event_fc_window
 from repro.kernels.event_pool.ops import (event_pool_batched,
                                           event_pool_window)
 from repro.kernels.network_window import NetLayer, network_window
+from repro.kernels.window_common import (dilate_conv, dilate_pool,
+                                         seed_site_map, sites_to_tiles,
+                                         tile_grid, tiles_to_sites)
 
 if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids an import cycle)
     from repro.core.sne_net import SNNSpec
@@ -157,6 +160,7 @@ class LayerProgram:
     ops: Tuple[LayerOp, ...]
     dtype_policy: str = F32_CARRIER
     fusion_policy: str = PER_STEP
+    tile_sparsity: bool = True
 
     def __len__(self) -> int:
         return len(self.ops)
@@ -273,7 +277,8 @@ def compile_program(spec: "SNNSpec",
         dtype_policy=dtype_policy, fusion_policy=fusion_policy)
     return _compile_program_cached(spec, step_capacities, step_activity,
                                    step_slack, step_align,
-                                   pol.dtype_policy, pol.fusion_policy)
+                                   pol.dtype_policy, pol.fusion_policy,
+                                   pol.tile_sparsity)
 
 
 @functools.lru_cache(maxsize=64)
@@ -281,7 +286,8 @@ def _compile_program_cached(spec: "SNNSpec",
                             step_capacities: Optional[Tuple[int, ...]],
                             step_activity: float, step_slack: float,
                             step_align: int, dtype_policy: str,
-                            fusion_policy: str) -> LayerProgram:
+                            fusion_policy: str,
+                            tile_sparsity: bool = True) -> LayerProgram:
     """Cached compile body keyed on the resolved policy axes."""
     if step_capacities is not None and len(step_capacities) != len(spec.layers):
         raise ValueError("need one per-timestep capacity per layer")
@@ -300,7 +306,8 @@ def _compile_program_cached(spec: "SNNSpec",
         ops.append(layer_op(l, index=i, step_capacity=cap,
                             dtype_policy=dtype_policy))
     return LayerProgram(spec=spec, ops=tuple(ops), dtype_policy=dtype_policy,
-                        fusion_policy=fusion_policy)
+                        fusion_policy=fusion_policy,
+                        tile_sparsity=tile_sparsity)
 
 
 def default_stream_capacities(spec: "SNNSpec", activity: float = 0.05,
@@ -598,9 +605,62 @@ def apply_idle_decay(states, dt, *, program: LayerProgram):
     return tuple(out)
 
 
+def effective_tile_sparsity(program: LayerProgram) -> bool:
+    """Whether the fused drivers will thread tile activity bitmaps.
+
+    Tile sparsity needs every layer hard-reset (``reset_mode == "zero"``):
+    a cold tile settles with ONE analytic decay (`core.lif.idle_decay`),
+    which has no closed form under soft reset.  Soft-reset programs run
+    dense — silently, like ``idle_skip`` — so the policy default (on)
+    never rejects a network the optimisation cannot serve exactly.  The
+    per-step driver is the bit-exactness oracle and never consults this.
+    """
+    return (program.tile_sparsity
+            and all(supports_idle_skip(op.lif) for op in program.ops))
+
+
+def window_tile_maps(program: LayerProgram, ev_xyc: jnp.ndarray,
+                     ev_gate: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """Per-layer (N, nTx, nTy) tile activity bitmaps for one window.
+
+    Seeds a layer-0 site map from the collector's event coordinates
+    (``ev_xyc`` (T, N, E0, 3) / ``ev_gate`` (T, N, E0), layer coords —
+    the driver layout BEFORE the slot-major transpose), then walks the
+    program: each layer dilates the incoming map through its receptive
+    field (conv: K×K halo; pool: stride window; fc: always-hot — one
+    output site fed by everything) and coarsens it to the layer's
+    `kernels.window_common.tile_grid`.
+
+    Propagation is tile-granular ON PURPOSE: the window kernels run the
+    leak/fire sweep on every site of a hot tile, so any such site may
+    spike (e.g. carried-in membrane at threshold) — the next layer must
+    see the *upsampled tile footprint* (``tiles_to_sites``), not the raw
+    site map, or the bitmap would undercount downstream activity and
+    break the superset contract the kernels rely on.
+    """
+    op0 = program.ops[0].spec
+    in_map = seed_site_map(ev_xyc, ev_gate, op0.in_shape[:2])
+    tiles = []
+    for op in program.ops:
+        spec = op.spec
+        Ho, Wo, _ = spec.out_shape
+        if spec.kind == "conv":
+            out_map = dilate_conv(in_map, spec.kernel, spec.padding)
+        elif spec.kind == "pool":
+            out_map = dilate_pool(in_map, spec.stride, (Ho, Wo))
+        else:
+            out_map = jnp.ones((in_map.shape[0], Ho, Wo), jnp.float32)
+        grid = tile_grid(Ho, Wo)
+        t = sites_to_tiles(out_map, grid)
+        tiles.append(t)
+        in_map = tiles_to_sites(t.astype(jnp.float32), grid, (Ho, Wo))
+    return tuple(tiles)
+
+
 def layer_window(op: LayerOp, params: EConvParams, vp: jnp.ndarray,
                  xyc: jnp.ndarray, gate: jnp.ndarray, alive: jnp.ndarray,
-                 co_blk: int = 128, use_pallas: Optional[bool] = None):
+                 co_blk: int = 128, use_pallas: Optional[bool] = None,
+                 tiles: Optional[jnp.ndarray] = None):
     """One layer × one WHOLE window for every slot: one fused launch.
 
     The fused-window counterpart of :func:`layer_timestep`: the full
@@ -621,6 +681,11 @@ def layer_window(op: LayerOp, params: EConvParams, vp: jnp.ndarray,
       alive: (T, N) 1.0 where the slot has a real timestep (frozen
              timesteps hold state and emit no spikes, exactly the
              per-step ``alive_t`` semantics).
+      tiles: optional (N, nTx, nTy) tile activity bitmap
+             (:func:`window_tile_maps` geometry) — cold tiles skip the
+             per-timestep sweep inside the kernel and settle with one
+             analytic decay.  Ignored for fc layers (a single always-hot
+             output site).
 
     Returns ``(vp_new, spikes (T, N, Ho, Wo, C))`` with spikes in the
     op's accumulator dtype (what :func:`frame_to_events` routes onward).
@@ -636,11 +701,11 @@ def layer_window(op: LayerOp, params: EConvParams, vp: jnp.ndarray,
         vp_new, s = event_conv_window(
             vp, params.w, x + off, g, a, lif=op.lif, halo=op.halo,
             co_blk=_channel_block(spec.out_channels, co_blk), native=native,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, tiles=tiles)
     elif spec.kind == "pool":
         vp_new, s = event_pool_window(vp, params.w, x, g, a, lif=op.lif,
                                       stride=spec.stride, native=native,
-                                      use_pallas=use_pallas)
+                                      use_pallas=use_pallas, tiles=tiles)
     else:
         vp_new, s = event_fc_window(
             vp, params.w, x, g, a, lif=op.lif, in_shape=spec.in_shape,
@@ -666,6 +731,8 @@ def _window_step_fused(params: Sequence[EConvParams], states, class_counts,
     L = len(program.ops)
     N = class_counts.shape[0]
     states = list(apply_idle_decay(states, pre_dt, program=program))
+    tiles = (window_tile_maps(program, ev_xyc, ev_gate)
+             if effective_tile_sparsity(program) else None)
     counts = jnp.zeros((L, N), jnp.float32)
     drops = jnp.zeros((L, N), jnp.int32)
     xyc, gate = ev_xyc, ev_gate
@@ -679,7 +746,8 @@ def _window_step_fused(params: Sequence[EConvParams], states, class_counts,
         counts = counts.at[op.index].add(
             jnp.sum(gate, axis=(0, 2)).astype(counts.dtype))
         states[op.index], s_frames = layer_window(
-            op, p, states[op.index], xyc, gate, alive, co_blk, use_pallas)
+            op, p, states[op.index], xyc, gate, alive, co_blk, use_pallas,
+            tiles=None if tiles is None else tiles[op.index])
     class_counts = class_counts + jnp.sum(
         s_frames, axis=(0, 2, 3)).astype(class_counts.dtype)
     return tuple(states), class_counts, counts, drops
@@ -752,6 +820,11 @@ def network_window_plan(program: LayerProgram,
     membrane = sum(_slab_elems(op) for op in ops) * acc_isz
     ring = sum(_ring_capacity(program, i) * (3 * 4 + acc_isz)
                for i in range(1, len(ops)))
+    # per-boundary spike-frame scratch: tile-granular fire writes cannot
+    # produce a routing *value*, so every non-last layer stages its
+    # current frame in VMEM before route_frame reads it
+    ring += sum(op.spec.out_shape[0] * op.spec.out_shape[1]
+                * op.spec.out_shape[2] for op in ops[:-1]) * acc_isz
     e0 = ops[0].step_capacity
     Ho, Wo, Co = ops[-1].spec.out_shape
     io = (n_timesteps * e0 * 3 * 4                # layer-0 schedule
@@ -771,6 +844,10 @@ def network_window_plan(program: LayerProgram,
         io += 2 * _slab_elems(op) * sto_isz       # storage slab in + out
     io += n_timesteps * Ho * Wo * Co * acc_isz    # last layer's frames
     io += 2 * len(ops) * 4                        # counts + drops rows
+    for op in ops:                                # per-layer tile bitmaps
+        nTx, nTy, _, _ = tile_grid(op.spec.out_shape[0],
+                                   op.spec.out_shape[1])
+        io += nTx * nTy * 4
     return NetworkWindowPlan(membrane_bytes=membrane, ring_bytes=ring,
                              io_bytes=io)
 
@@ -879,6 +956,10 @@ def _window_step_network(params: Sequence[EConvParams], states, class_counts,
         check_native_weights(op, p)
     N = class_counts.shape[0]
     states = list(apply_idle_decay(states, pre_dt, program=program))
+    # bitmaps come from the timestep-major collector layout (layer coords,
+    # pre-transpose, pre-halo-shift) — exactly what seed_site_map expects
+    tiles = (window_tile_maps(program, ev_xyc, ev_gate)
+             if effective_tile_sparsity(program) else None)
     xyc = jnp.transpose(ev_xyc, (1, 0, 2, 3))    # slot-major for the kernel
     gate = jnp.transpose(ev_gate, (1, 0, 2))
     al = jnp.transpose(alive, (1, 0))
@@ -889,7 +970,8 @@ def _window_step_network(params: Sequence[EConvParams], states, class_counts,
     native = program.dtype_policy == INT8_NATIVE
     v_out, s_last, counts_nl, drops_nl = network_window(
         tuple(states), tuple(p.w for p in params), xyc, gate, al,
-        layers=_net_layers(program), native=native, use_pallas=use_pallas)
+        layers=_net_layers(program), native=native, use_pallas=use_pallas,
+        tiles=tiles)
     # counters leave the kernel as exact int32; the (L, N) float32 counts
     # contract is an exact cast (values < 2^24), bitwise the fused path's
     counts = counts_nl.astype(jnp.float32).T

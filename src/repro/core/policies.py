@@ -30,6 +30,14 @@ Three orthogonal axes (see ``docs/policies.md`` for the full matrix):
   per-shard membrane slabs, a host-side least-loaded router; see
   `repro.serve.mesh_engine`).  Backends must agree bitwise per request.
 
+Plus two serving-time toggles: ``idle_skip`` (windows with no input for a
+slot defer to one analytic decay) and ``tile_sparsity`` (the fused window
+kernels skip the per-timestep leak/fire sweep on spatial tiles no event
+can reach — see `core.layer_program.effective_tile_sparsity`; silently
+inert for per-step fusion and for soft-reset networks, where the cold
+decay has no closed form).  Both default on and both are bitwise-exact
+transformations, so they do not expand the test matrix.
+
 The whole configuration travels as one frozen :class:`ExecutionPolicy`
 value, validated at construction — an unknown policy name fails where the
 policy is *written*, not windows later inside a serve loop.  The engine
@@ -78,6 +86,7 @@ class ExecutionPolicy:
     fusion_policy: str = FUSED_WINDOW
     idle_skip: bool = True
     backend: str = BACKEND_LOCAL
+    tile_sparsity: bool = True
 
     def __post_init__(self):
         """Validate every axis name — fail where the policy is written."""
@@ -93,10 +102,14 @@ class ExecutionPolicy:
         if not isinstance(self.idle_skip, bool):
             raise ValueError(f"idle_skip must be a bool, "
                              f"got {self.idle_skip!r}")
+        if not isinstance(self.tile_sparsity, bool):
+            raise ValueError(f"tile_sparsity must be a bool, "
+                             f"got {self.tile_sparsity!r}")
 
     def __str__(self):
         """Compact ``dtype/fusion/backend`` label (stable pytest ids)."""
         tag = "" if self.idle_skip else "/no-idle-skip"
+        tag += "" if self.tile_sparsity else "/no-tile-sparsity"
         return (f"{self.dtype_policy}/{self.fusion_policy}/"
                 f"{self.backend}{tag}")
 

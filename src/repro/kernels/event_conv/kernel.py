@@ -37,9 +37,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.lif import LifParams
-from repro.kernels.window_common import (clip_fire_reset, leak_boundary,
-                                         saturate_int8, window_acc_dtype)
+from repro.core.lif import LifParams, supports_idle_skip
+from repro.kernels.window_common import (clip_fire_reset, cold_tile_decay,
+                                         leak_boundary, saturate_int8,
+                                         tile_grid, window_acc_dtype)
 
 
 def _event_conv_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
@@ -170,10 +171,10 @@ def event_conv_batched_pallas(v: jnp.ndarray, weights: jnp.ndarray,
     )(ev_xyc, gate3, w_f, v)
 
 
-def _event_conv_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
-                              v_out_ref, s_out_ref, acc_ref, *, K: int,
-                              halo: int, n_events: int, lif: LifParams,
-                              native: bool):
+def _event_conv_window_kernel(ev_ref, gate_ref, alive_ref, tiles_ref, w_ref,
+                              v_ref, v_out_ref, s_out_ref, acc_ref, *,
+                              K: int, halo: int, n_events: int,
+                              lif: LifParams, native: bool):
     """One grid step: one slot's WHOLE window against one channel slab.
 
     The fused form of `_event_conv_batched_kernel`: the timestep loop runs
@@ -185,11 +186,21 @@ def _event_conv_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
     boundary arithmetic delegated to `kernels.window_common` (bitwise the
     per-step executor's).
 
+    The leak/clip/fire/reset sweeps are predicated per interior tile on
+    ``tiles_ref`` (`window_common.tile_grid` geometry): a cold tile —
+    one no event can reach this window — skips every per-timestep sweep
+    and is settled with one analytic `cold_tile_decay` after the loop
+    (hard-reset layers only; an all-ones bitmap reproduces the dense
+    schedule exactly).  The event scatter and the whole-slab native
+    saturation / freeze stay unconditional, so halo cells and the
+    superset contract are handled exactly as in the dense kernel.
+
     ev_ref:    (1, T, E, 3) int32 — this slot's packed window schedule
                (events binned by timestep, halo coords).
     gate_ref:  (1, T, E, 1) — per-timestep validity gates, accumulator
                dtype.
     alive_ref: (1, T) float32 — 1.0 where the slot has a real timestep.
+    tiles_ref: (1, nTx, nTy) int32 — interior tile activity bitmap.
     w_ref:     (K, K, Ci, CO_BLK) — flipped weights, shared by slots.
     v_ref:     (1, Hp, Wp, CO_BLK) — membrane slab in *storage* dtype
                (float32 carrier / int8 native).
@@ -200,13 +211,22 @@ def _event_conv_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
                resident membrane.
     """
     acc_ref[...] = v_ref[...].astype(acc_ref.dtype)
+    s_out_ref[...] = jnp.zeros_like(s_out_ref)   # cold tiles never fire
     T = s_out_ref.shape[1]
     Hp, Wp = acc_ref.shape[1], acc_ref.shape[2]
     h = halo
+    Ho, Wo = Hp - 2 * h, Wp - 2 * h
+    nTx, nTy, th, tw = tile_grid(Ho, Wo)
+    spans = [(ti, tj, ti * th, min((ti + 1) * th, Ho),
+              tj * tw, min((tj + 1) * tw, Wo))
+             for ti in range(nTx) for tj in range(nTy)]
     for t in range(T):          # static trip count: T is the window shape
         prev = acc_ref[...]     # value snapshot — the frozen-slot fallback
-        acc_ref[0, h:Hp - h, h:Wp - h, :] = leak_boundary(
-            acc_ref[0, h:Hp - h, h:Wp - h, :], lif)
+        for ti, tj, x0, x1, y0, y1 in spans:
+            @pl.when(tiles_ref[0, ti, tj] > 0)
+            def _leak(x0=x0, x1=x1, y0=y0, y1=y1):
+                acc_ref[0, h + x0:h + x1, h + y0:h + y1, :] = leak_boundary(
+                    acc_ref[0, h + x0:h + x1, h + y0:h + y1, :], lif)
 
         def body(i, _, t=t):
             x = ev_ref[0, t, i, 0]
@@ -219,15 +239,31 @@ def _event_conv_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
             return ()
 
         jax.lax.fori_loop(0, n_events, body, ())
-        v_new, s = clip_fire_reset(acc_ref[0, h:Hp - h, h:Wp - h, :], lif)
-        acc_ref[0, h:Hp - h, h:Wp - h, :] = v_new
+        a = alive_ref[0, t] > 0
+        for ti, tj, x0, x1, y0, y1 in spans:
+            @pl.when(tiles_ref[0, ti, tj] > 0)
+            def _fire(t=t, x0=x0, x1=x1, y0=y0, y1=y1):
+                v_new, s = clip_fire_reset(
+                    acc_ref[0, h + x0:h + x1, h + y0:h + y1, :], lif)
+                acc_ref[0, h + x0:h + x1, h + y0:h + y1, :] = v_new
+                s_out_ref[0, t, x0:x1, y0:y1, :] = jnp.where(
+                    a, s, jnp.zeros_like(s))
         if native:
             # int8 storage saturation at every boundary, halo included —
             # exactly the per-step executor's whole-slab downcast
             acc_ref[...] = saturate_int8(acc_ref[...])
-        a = alive_ref[0, t] > 0
         acc_ref[...] = jnp.where(a, acc_ref[...], prev)
-        s_out_ref[0, t] = jnp.where(a, s, jnp.zeros_like(s))
+    if supports_idle_skip(lif):
+        # settle cold tiles: dt alive boundaries of pure leak in one step
+        # (soft-reset layers never reach here — the ops wrapper rejects
+        # real bitmaps for them, and the all-ones dense bitmap has no
+        # cold tiles)
+        dtv = jnp.sum((alive_ref[0, :] > 0).astype(jnp.int32))
+        for ti, tj, x0, x1, y0, y1 in spans:
+            @pl.when(tiles_ref[0, ti, tj] == 0)
+            def _cold(x0=x0, x1=x1, y0=y0, y1=y1):
+                acc_ref[0, h + x0:h + x1, h + y0:h + y1, :] = cold_tile_decay(
+                    acc_ref[0, h + x0:h + x1, h + y0:h + y1, :], lif, dtv)
     v_out_ref[...] = acc_ref[...].astype(v_out_ref.dtype)
 
 
@@ -235,8 +271,8 @@ def _event_conv_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
                                              "native", "interpret"))
 def event_conv_window_pallas(v: jnp.ndarray, weights: jnp.ndarray,
                              ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
-                             alive: jnp.ndarray, *, lif: LifParams,
-                             halo: int, co_blk: int = 128,
+                             alive: jnp.ndarray, tiles: jnp.ndarray, *,
+                             lif: LifParams, halo: int, co_blk: int = 128,
                              native: bool = False, interpret: bool = False):
     """Advance N slots through a whole T-timestep window in ONE launch.
 
@@ -255,6 +291,9 @@ def event_conv_window_pallas(v: jnp.ndarray, weights: jnp.ndarray,
       ev_gate: (N, T, E) validity gates (cast to the accumulator dtype).
       alive:   (N, T) 1.0 where the slot has a real timestep (frozen
                timesteps hold state and emit no spikes).
+      tiles:   (N, nTx, nTy) int32 interior tile activity bitmap
+               (`window_common.tile_grid` over (Ho, Wo)); all-ones runs
+               the dense schedule bit-for-bit.
       lif:     the layer's LIF plan (static — baked into the kernel).
       halo:    conv halo width (K - 1 headroom; the interior crop rule).
       co_blk:  output-channel block size (must divide Co).
@@ -275,6 +314,12 @@ def event_conv_window_pallas(v: jnp.ndarray, weights: jnp.ndarray,
     w_f = jnp.flip(jnp.flip(weights, 0), 1)
     gate4 = ev_gate.astype(acc_dt).reshape(N, T, E, 1)
     alive2 = alive.astype(jnp.float32)
+    nTx, nTy, _, _ = tile_grid(Ho, Wo)
+    if tiles.shape != (N, nTx, nTy):
+        raise ValueError(
+            f"tiles shape {tiles.shape} != {(N, nTx, nTy)} for interior "
+            f"({Ho}, {Wo})")
+    tiles = tiles.astype(jnp.int32)
 
     grid = (N, Co // co_blk)
     return pl.pallas_call(
@@ -285,6 +330,7 @@ def event_conv_window_pallas(v: jnp.ndarray, weights: jnp.ndarray,
             pl.BlockSpec((1, T, E, 3), lambda n, co: (n, 0, 0, 0)),
             pl.BlockSpec((1, T, E, 1), lambda n, co: (n, 0, 0, 0)),
             pl.BlockSpec((1, T), lambda n, co: (n, 0)),
+            pl.BlockSpec((1, nTx, nTy), lambda n, co: (n, 0, 0)),
             pl.BlockSpec((K, K, weights.shape[2], co_blk),
                          lambda n, co: (0, 0, 0, co)),
             pl.BlockSpec((1, Hp, Wp, co_blk), lambda n, co: (n, 0, 0, co)),
@@ -300,4 +346,4 @@ def event_conv_window_pallas(v: jnp.ndarray, weights: jnp.ndarray,
         ],
         scratch_shapes=[pltpu.VMEM((1, Hp, Wp, co_blk), acc_dt)],
         interpret=interpret,
-    )(ev_xyc, gate4, alive2, w_f, v)
+    )(ev_xyc, gate4, alive2, tiles, w_f, v)

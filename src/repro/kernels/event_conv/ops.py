@@ -15,7 +15,8 @@ from repro.kernels.event_conv.kernel import (event_conv_batched_pallas,
 from repro.kernels.event_conv.ref import (event_conv_batched_ref,
                                           event_conv_ref,
                                           event_conv_window_ref)
-from repro.kernels.window_common import pad_empty_schedule
+from repro.core.lif import supports_idle_skip
+from repro.kernels.window_common import pad_empty_schedule, tile_grid
 
 
 def _on_tpu() -> bool:
@@ -68,7 +69,8 @@ def event_conv_window(v: jnp.ndarray, weights: jnp.ndarray,
                       ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
                       alive: jnp.ndarray, *, lif, halo: int,
                       co_blk: int = 128, native: bool = False,
-                      use_pallas: bool | None = None):
+                      use_pallas: bool | None = None,
+                      tiles: jnp.ndarray | None = None):
     """Advance N slots through a whole T-timestep window in ONE launch.
 
     The fused window entry point (``fusion_policy="fused-window"``): the
@@ -78,14 +80,30 @@ def event_conv_window(v: jnp.ndarray, weights: jnp.ndarray,
     runs the pure-jnp window oracle.  Returns ``(v_out, spikes)`` with
     spikes shaped ``(N, T, Ho, Wo, Co)``.
 
+    ``tiles`` is an optional (N, nTx, nTy) interior activity bitmap
+    (`window_common.tile_grid` geometry): cold tiles skip the per-timestep
+    leak/clip/fire sweeps and settle with one analytic decay.  Only
+    hard-reset layers (`supports_idle_skip`) may pass one — the deferred
+    decay has no closed form under soft reset.  ``None`` runs dense.
+
     A zero-length event axis still runs the window (leak/fire must
     advance, unlike the scatter-only kernels) — the schedule is padded to
     one gated-off event so the launch geometry stays valid.
     """
     ev_xyc, ev_gate = pad_empty_schedule(ev_xyc, ev_gate)
+    if tiles is not None and not supports_idle_skip(lif):
+        raise ValueError(
+            "tile sparsity requires a hard-reset layer (reset_mode='zero'):"
+            " cold-tile decay has no closed form under soft reset")
     if use_pallas is False:
         return event_conv_window_ref(v, weights, ev_xyc, ev_gate, alive,
-                                     lif=lif, halo=halo, native=native)
+                                     lif=lif, halo=halo, native=native,
+                                     tiles=tiles)
+    if tiles is None:
+        nTx, nTy, _, _ = tile_grid(v.shape[1] - 2 * halo,
+                                   v.shape[2] - 2 * halo)
+        tiles = jnp.ones((v.shape[0], nTx, nTy), jnp.int32)
     return event_conv_window_pallas(v, weights, ev_xyc, ev_gate, alive,
-                                    lif=lif, halo=halo, co_blk=co_blk,
-                                    native=native, interpret=not _on_tpu())
+                                    tiles, lif=lif, halo=halo,
+                                    co_blk=co_blk, native=native,
+                                    interpret=not _on_tpu())

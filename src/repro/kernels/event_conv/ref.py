@@ -76,7 +76,8 @@ def event_conv_batched_ref(v: jnp.ndarray, weights: jnp.ndarray,
 def event_conv_window_ref(v: jnp.ndarray, weights: jnp.ndarray,
                           ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
                           alive: jnp.ndarray, *, lif, halo: int,
-                          native: bool = False):
+                          native: bool = False,
+                          tiles: jnp.ndarray | None = None):
     """Oracle for the fused window kernel: per slot, per timestep, the full
     ``leak -> scatter -> clip -> fire -> reset`` chain in kernel order.
 
@@ -95,6 +96,8 @@ def event_conv_window_ref(v: jnp.ndarray, weights: jnp.ndarray,
       halo:    conv halo width.
       native:  int8-native policy (int32 accumulator + boundary
                saturation).
+      tiles:   optional (N, nTx, nTy) interior tile activity bitmap
+               (cold tiles freeze + one analytic decay; None = dense).
 
     Returns ``(v_out, spikes (N, T, Ho, Wo, Co))``.
     """
@@ -104,7 +107,7 @@ def event_conv_window_ref(v: jnp.ndarray, weights: jnp.ndarray,
         return event_conv_ref(acc, weights, xyc, gate)
 
     return fused_window_ref(v, ev_xyc, ev_gate, alive, scatter, lif=lif,
-                            halo=halo, native=native)
+                            halo=halo, native=native, tiles=tiles)
 
 
 def selfcheck_batched_bitexact(N: int, H: int, W: int, Co: int, K: int,

@@ -28,9 +28,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.lif import LifParams
-from repro.kernels.window_common import (clip_fire_reset, leak_boundary,
-                                         saturate_int8, window_acc_dtype)
+from repro.core.lif import LifParams, supports_idle_skip
+from repro.kernels.window_common import (clip_fire_reset, cold_tile_decay,
+                                         leak_boundary, saturate_int8,
+                                         tile_grid, window_acc_dtype)
 
 
 def _event_pool_batched_kernel(ev_ref, gate_ref, w_ref, v_ref, o_ref, *,
@@ -147,9 +148,10 @@ def event_pool_batched_pallas(v: jnp.ndarray, w: jnp.ndarray,
     )(ev_xyc, gate3, w3, v)
 
 
-def _event_pool_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
-                              v_out_ref, s_out_ref, acc_ref, *, stride: int,
-                              n_events: int, lif: LifParams, native: bool):
+def _event_pool_window_kernel(ev_ref, gate_ref, alive_ref, tiles_ref, w_ref,
+                              v_ref, v_out_ref, s_out_ref, acc_ref, *,
+                              stride: int, n_events: int, lif: LifParams,
+                              native: bool):
     """One grid step: one slot's WHOLE window against its pool slab.
 
     The fused form of `_event_pool_batched_kernel`: the timestep loop runs
@@ -157,11 +159,14 @@ def _event_pool_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
     launch per window instead of T.  Pool layers have no halo, so the
     whole slab is the interior the LIF boundary runs on; the boundary
     arithmetic comes from `kernels.window_common` (bitwise the per-step
-    executor's).
+    executor's).  As in the conv window kernel, the leak/clip/fire sweeps
+    are predicated per tile on ``tiles_ref`` and cold tiles settle with
+    one `cold_tile_decay` after the loop; the scatter stays unconditional.
 
     ev_ref:    (1, T, E, 3) int32 — packed window schedule, input coords.
     gate_ref:  (1, T, E, 1) — per-timestep gates, accumulator dtype.
     alive_ref: (1, T) float32 — per-timestep liveness.
+    tiles_ref: (1, nTx, nTy) int32 — tile activity bitmap over (Ho, Wo).
     w_ref:     (1, 1, C) — per-channel weights, shared by slots.
     v_ref:     (1, Ho, Wo, C) — membrane slab, storage dtype.
     v_out_ref: (1, Ho, Wo, C) — final membrane, storage dtype.
@@ -169,12 +174,21 @@ def _event_pool_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
     acc_ref:   (1, Ho, Wo, C) VMEM scratch, accumulator dtype.
     """
     acc_ref[...] = v_ref[...].astype(acc_ref.dtype)
+    s_out_ref[...] = jnp.zeros_like(s_out_ref)   # cold tiles never fire
     T = s_out_ref.shape[1]
     Ho, Wo, C = acc_ref.shape[1], acc_ref.shape[2], acc_ref.shape[3]
+    nTx, nTy, th, tw = tile_grid(Ho, Wo)
+    spans = [(ti, tj, ti * th, min((ti + 1) * th, Ho),
+              tj * tw, min((tj + 1) * tw, Wo))
+             for ti in range(nTx) for tj in range(nTy)]
     lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 1, C), 2)
     for t in range(T):
         prev = acc_ref[...]
-        acc_ref[0] = leak_boundary(acc_ref[0], lif)
+        for ti, tj, x0, x1, y0, y1 in spans:
+            @pl.when(tiles_ref[0, ti, tj] > 0)
+            def _leak(x0=x0, x1=x1, y0=y0, y1=y1):
+                acc_ref[0, x0:x1, y0:y1, :] = leak_boundary(
+                    acc_ref[0, x0:x1, y0:y1, :], lif)
 
         def body(i, _, t=t):
             x = ev_ref[0, t, i, 0]
@@ -193,13 +207,24 @@ def _event_pool_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
             return ()
 
         jax.lax.fori_loop(0, n_events, body, ())
-        v_new, s = clip_fire_reset(acc_ref[0], lif)
-        acc_ref[0] = v_new
+        a = alive_ref[0, t] > 0
+        for ti, tj, x0, x1, y0, y1 in spans:
+            @pl.when(tiles_ref[0, ti, tj] > 0)
+            def _fire(t=t, x0=x0, x1=x1, y0=y0, y1=y1):
+                v_new, s = clip_fire_reset(acc_ref[0, x0:x1, y0:y1, :], lif)
+                acc_ref[0, x0:x1, y0:y1, :] = v_new
+                s_out_ref[0, t, x0:x1, y0:y1, :] = jnp.where(
+                    a, s, jnp.zeros_like(s))
         if native:
             acc_ref[...] = saturate_int8(acc_ref[...])
-        a = alive_ref[0, t] > 0
         acc_ref[...] = jnp.where(a, acc_ref[...], prev)
-        s_out_ref[0, t] = jnp.where(a, s, jnp.zeros_like(s))
+    if supports_idle_skip(lif):
+        dtv = jnp.sum((alive_ref[0, :] > 0).astype(jnp.int32))
+        for ti, tj, x0, x1, y0, y1 in spans:
+            @pl.when(tiles_ref[0, ti, tj] == 0)
+            def _cold(x0=x0, x1=x1, y0=y0, y1=y1):
+                acc_ref[0, x0:x1, y0:y1, :] = cold_tile_decay(
+                    acc_ref[0, x0:x1, y0:y1, :], lif, dtv)
     v_out_ref[...] = acc_ref[...].astype(v_out_ref.dtype)
 
 
@@ -207,9 +232,9 @@ def _event_pool_window_kernel(ev_ref, gate_ref, alive_ref, w_ref, v_ref,
                                              "interpret"))
 def event_pool_window_pallas(v: jnp.ndarray, w: jnp.ndarray,
                              ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
-                             alive: jnp.ndarray, *, lif: LifParams,
-                             stride: int, native: bool = False,
-                             interpret: bool = False):
+                             alive: jnp.ndarray, tiles: jnp.ndarray, *,
+                             lif: LifParams, stride: int,
+                             native: bool = False, interpret: bool = False):
     """Advance N slots through a whole T-timestep pool window in ONE launch.
 
     The fused window form of :func:`event_pool_batched_pallas`; results
@@ -221,6 +246,8 @@ def event_pool_window_pallas(v: jnp.ndarray, w: jnp.ndarray,
       ev_xyc:  (N, T, E, 3) int32 packed schedule, input coordinates.
       ev_gate: (N, T, E) validity gates.
       alive:   (N, T) per-timestep liveness.
+      tiles:   (N, nTx, nTy) int32 tile activity bitmap over (Ho, Wo);
+               all-ones runs the dense schedule bit-for-bit.
       lif:     the layer's LIF plan (static).
       stride:  pooling stride.
       native:  int8-native policy switch.
@@ -235,6 +262,12 @@ def event_pool_window_pallas(v: jnp.ndarray, w: jnp.ndarray,
     alive2 = alive.astype(jnp.float32)
     w3 = (w if jnp.issubdtype(w.dtype, jnp.integer)
           else w.astype(v.dtype)).reshape(1, 1, C)
+    nTx, nTy, _, _ = tile_grid(Ho, Wo)
+    if tiles.shape != (N, nTx, nTy):
+        raise ValueError(
+            f"tiles shape {tiles.shape} != {(N, nTx, nTy)} for interior "
+            f"({Ho}, {Wo})")
+    tiles = tiles.astype(jnp.int32)
 
     grid = (N,)
     return pl.pallas_call(
@@ -245,6 +278,7 @@ def event_pool_window_pallas(v: jnp.ndarray, w: jnp.ndarray,
             pl.BlockSpec((1, T, E, 3), lambda n: (n, 0, 0, 0)),
             pl.BlockSpec((1, T, E, 1), lambda n: (n, 0, 0, 0)),
             pl.BlockSpec((1, T), lambda n: (n, 0)),
+            pl.BlockSpec((1, nTx, nTy), lambda n: (n, 0, 0)),
             pl.BlockSpec((1, 1, C), lambda n: (0, 0, 0)),
             pl.BlockSpec((1, Ho, Wo, C), lambda n: (n, 0, 0, 0)),
         ],
@@ -258,4 +292,4 @@ def event_pool_window_pallas(v: jnp.ndarray, w: jnp.ndarray,
         ],
         scratch_shapes=[pltpu.VMEM((1, Ho, Wo, C), acc_dt)],
         interpret=interpret,
-    )(ev_xyc, gate4, alive2, w3, v)
+    )(ev_xyc, gate4, alive2, tiles, w3, v)

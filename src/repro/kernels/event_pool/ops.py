@@ -20,7 +20,8 @@ from repro.kernels.event_pool.kernel import (event_pool_batched_pallas,
 from repro.kernels.event_pool.ref import (event_pool_batched_ref,
                                           event_pool_ref,
                                           event_pool_window_ref)
-from repro.kernels.window_common import pad_empty_schedule
+from repro.core.lif import supports_idle_skip
+from repro.kernels.window_common import pad_empty_schedule, tile_grid
 
 
 def _on_tpu() -> bool:
@@ -68,7 +69,8 @@ def event_pool_batched(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
 def event_pool_window(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
                       ev_gate: jnp.ndarray, alive: jnp.ndarray, *, lif,
                       stride: int, native: bool = False,
-                      use_pallas: bool | None = None):
+                      use_pallas: bool | None = None,
+                      tiles: jnp.ndarray | None = None):
     """Advance N slots through a whole T-timestep pool window in ONE launch.
 
     The fused window entry point (``fusion_policy="fused-window"``) —
@@ -77,13 +79,26 @@ def event_pool_window(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
     runs the pure-jnp window oracle.  Returns ``(v_out, spikes)`` with
     spikes shaped ``(N, T, Ho, Wo, C)``.
 
+    ``tiles`` is an optional (N, nTx, nTy) activity bitmap over (Ho, Wo)
+    (`window_common.tile_grid` geometry): cold tiles skip the per-timestep
+    sweeps and settle with one analytic decay.  Hard-reset layers only;
+    ``None`` runs dense.
+
     A zero-length event axis still runs the window (leak/fire must
     advance) — the schedule is padded to one gated-off event.
     """
     ev_xyc, ev_gate = pad_empty_schedule(ev_xyc, ev_gate)
+    if tiles is not None and not supports_idle_skip(lif):
+        raise ValueError(
+            "tile sparsity requires a hard-reset layer (reset_mode='zero'):"
+            " cold-tile decay has no closed form under soft reset")
     if use_pallas is False:
         return event_pool_window_ref(v, w, ev_xyc, ev_gate, alive, lif=lif,
-                                     stride=stride, native=native)
-    return event_pool_window_pallas(v, w, ev_xyc, ev_gate, alive, lif=lif,
-                                    stride=stride, native=native,
+                                     stride=stride, native=native,
+                                     tiles=tiles)
+    if tiles is None:
+        nTx, nTy, _, _ = tile_grid(v.shape[1], v.shape[2])
+        tiles = jnp.ones((v.shape[0], nTx, nTy), jnp.int32)
+    return event_pool_window_pallas(v, w, ev_xyc, ev_gate, alive, tiles,
+                                    lif=lif, stride=stride, native=native,
                                     interpret=not _on_tpu())

@@ -53,7 +53,8 @@ def event_pool_ref(v: jnp.ndarray, w: jnp.ndarray, ev_xyc: jnp.ndarray,
 def event_pool_window_ref(v: jnp.ndarray, w: jnp.ndarray,
                           ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
                           alive: jnp.ndarray, *, lif, stride: int,
-                          native: bool = False):
+                          native: bool = False,
+                          tiles: jnp.ndarray | None = None):
     """Oracle for the fused pool window kernel (kernel-order arithmetic).
 
     The scatter stage is :func:`event_pool_ref`; the per-timestep boundary
@@ -69,6 +70,8 @@ def event_pool_window_ref(v: jnp.ndarray, w: jnp.ndarray,
       lif:     the layer's `LifParams`.
       stride:  pooling stride.
       native:  int8-native policy switch.
+      tiles:   optional (N, nTx, nTy) tile activity bitmap (cold tiles
+               freeze + one analytic decay; None = dense).
 
     Returns ``(v_out, spikes (N, T, Ho, Wo, C))``.
     """
@@ -78,7 +81,7 @@ def event_pool_window_ref(v: jnp.ndarray, w: jnp.ndarray,
         return event_pool_ref(acc, w, xyc, gate, stride)
 
     return fused_window_ref(v, ev_xyc, ev_gate, alive, scatter, lif=lif,
-                            halo=0, native=native)
+                            halo=0, native=native, tiles=tiles)
 
 
 def event_pool_batched_ref(v: jnp.ndarray, w: jnp.ndarray,

@@ -41,9 +41,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.lif import supports_idle_skip
 from repro.kernels.network_window.spec import NetLayer
-from repro.kernels.window_common import (clip_fire_reset, leak_boundary,
-                                         route_frame, saturate_int8,
+from repro.kernels.window_common import (clip_fire_reset, cold_tile_decay,
+                                         leak_boundary, route_frame,
+                                         saturate_int8, tile_grid,
                                          window_acc_dtype)
 
 
@@ -91,6 +93,20 @@ def _scatter_loop(nl: NetLayer, w_ref, acc_ref, read_ev, n_ev: int, lanes):
     jax.lax.fori_loop(0, n_ev, body, ())
 
 
+def _layer_spans(layers: Tuple[NetLayer, ...], acc_refs):
+    """Static per-layer tile spans: ``[(ti, tj, x0, x1, y0, y1), ...]``."""
+    spans = []
+    for nl, acc in zip(layers, acc_refs):
+        h = nl.halo
+        Ho_l = acc.shape[1] - 2 * h
+        Wo_l = acc.shape[2] - 2 * h
+        nTx, nTy, th, tw = tile_grid(Ho_l, Wo_l)
+        spans.append([(ti, tj, ti * th, min((ti + 1) * th, Ho_l),
+                       tj * tw, min((tj + 1) * tw, Wo_l))
+                      for ti in range(nTx) for tj in range(nTy)])
+    return spans
+
+
 def _network_window_kernel(*refs, layers: Tuple[NetLayer, ...],
                            n_events0: int, native: bool):
     """One grid step: one slot's WHOLE window through the WHOLE network.
@@ -103,6 +119,9 @@ def _network_window_kernel(*refs, layers: Tuple[NetLayer, ...],
       gate_ref:   (1, T, E0, 1) — layer-0 gates, accumulator dtype.
       alive_ref:  (1, T) float32 — per-timestep liveness (shared by all
                   layers: a frozen timestep freezes the whole network).
+      tiles_refs: L tile bitmaps (1, nTx_l, nTy_l) int32 over each
+                  layer's interior (`window_common.tile_grid` geometry);
+                  all-ones reproduces the dense schedule bit-for-bit.
       w_refs:     L weight blocks (conv flipped (K,K,Ci,Co), pool
                   (1,1,C), fc (Din,Dout)), shared across slots.
       v_refs:     L membrane slabs (1, Hp, Wp, C), storage dtype.
@@ -113,6 +132,10 @@ def _network_window_kernel(*refs, layers: Tuple[NetLayer, ...],
       drops_ref:  (1, L) int32 — ring-buffer overflow per boundary.
       acc_refs:   L VMEM scratch slabs (1, Hp, Wp, C), accumulator dtype —
                   the resident membranes.
+      sf_refs:    L-1 spike-frame scratches (1, Ho_l, Wo_l, C_l),
+                  accumulator dtype, for every non-last layer — the
+                  per-tile fire writes land here so the routing can read
+                  one assembled frame value (cold tiles stay zero).
       rb_refs:    L-1 ring-buffer pairs, per boundary l -> l+1:
                   xyc (1, cap, 3) int32 + gate (1, cap, 1) accumulator
                   dtype.  Written by layer l's routing, consumed by layer
@@ -120,17 +143,22 @@ def _network_window_kernel(*refs, layers: Tuple[NetLayer, ...],
     """
     L = len(layers)
     ev_ref, gate_ref, alive_ref = refs[0], refs[1], refs[2]
-    w_refs = refs[3:3 + L]
-    vout_refs = refs[3 + 2 * L:3 + 3 * L]
-    s_last_ref = refs[3 + 3 * L]
-    counts_ref = refs[3 + 3 * L + 1]
-    drops_ref = refs[3 + 3 * L + 2]
-    acc_refs = refs[3 + 3 * L + 3:3 + 4 * L + 3]
-    rb_refs = refs[3 + 4 * L + 3:]
+    tiles_refs = refs[3:3 + L]
+    w_refs = refs[3 + L:3 + 2 * L]
+    vout_refs = refs[3 + 3 * L:3 + 4 * L]
+    s_last_ref = refs[3 + 4 * L]
+    counts_ref = refs[3 + 4 * L + 1]
+    drops_ref = refs[3 + 4 * L + 2]
+    acc_refs = refs[3 + 4 * L + 3:3 + 5 * L + 3]
+    sf_refs = refs[3 + 5 * L + 3:3 + 6 * L + 2]
+    rb_refs = refs[3 + 6 * L + 2:]
 
     T = s_last_ref.shape[1]
     for l in range(L):
-        acc_refs[l][...] = refs[3 + L + l][...].astype(acc_refs[l].dtype)
+        acc_refs[l][...] = refs[3 + 2 * L + l][...].astype(
+            acc_refs[l].dtype)
+    s_last_ref[...] = jnp.zeros_like(s_last_ref)  # cold tiles never fire
+    spans = _layer_spans(layers, acc_refs)
     lanes = [jax.lax.broadcasted_iota(jnp.int32, (1, 1, acc.shape[3]), 2)
              if nl.kind == "pool" else None
              for nl, acc in zip(layers, acc_refs)]
@@ -145,9 +173,11 @@ def _network_window_kernel(*refs, layers: Tuple[NetLayer, ...],
             acc = acc_refs[l]
             prev = acc[...]
             h = nl.halo
-            Hp, Wp = acc.shape[1], acc.shape[2]
-            acc[0, h:Hp - h, h:Wp - h, :] = leak_boundary(
-                acc[0, h:Hp - h, h:Wp - h, :], nl.lif)
+            for ti, tj, x0, x1, y0, y1 in spans[l]:
+                @pl.when(tiles_refs[l][0, ti, tj] > 0)
+                def _leak(acc=acc, nl=nl, h=h, x0=x0, x1=x1, y0=y0, y1=y1):
+                    acc[0, h + x0:h + x1, h + y0:h + y1, :] = leak_boundary(
+                        acc[0, h + x0:h + x1, h + y0:h + y1, :], nl.lif)
             if l == 0:
                 def read_ev(i, t=t):
                     return (ev_ref[0, t, i, 0], ev_ref[0, t, i, 1],
@@ -161,14 +191,25 @@ def _network_window_kernel(*refs, layers: Tuple[NetLayer, ...],
                             rb_g[0, i, 0])
                 n_ev = nl.cap
             _scatter_loop(nl, w_refs[l], acc, read_ev, n_ev, lanes[l])
-            v_new, s = clip_fire_reset(acc[0, h:Hp - h, h:Wp - h, :],
-                                       nl.lif)
-            acc[0, h:Hp - h, h:Wp - h, :] = v_new
+            if l < L - 1:
+                sf_refs[l][...] = jnp.zeros_like(sf_refs[l])
+            for ti, tj, x0, x1, y0, y1 in spans[l]:
+                @pl.when(tiles_refs[l][0, ti, tj] > 0)
+                def _fire(acc=acc, nl=nl, h=h, l=l, t=t, x0=x0, x1=x1,
+                          y0=y0, y1=y1):
+                    v_new, s = clip_fire_reset(
+                        acc[0, h + x0:h + x1, h + y0:h + y1, :], nl.lif)
+                    acc[0, h + x0:h + x1, h + y0:h + y1, :] = v_new
+                    sg = jnp.where(a, s, jnp.zeros_like(s))
+                    if l < L - 1:
+                        sf_refs[l][0, x0:x1, y0:y1, :] = sg
+                    else:
+                        s_last_ref[0, t, x0:x1, y0:y1, :] = sg
             if native:
                 acc[...] = saturate_int8(acc[...])
             acc[...] = jnp.where(a, acc[...], prev)
-            s_t = jnp.where(a, s, jnp.zeros_like(s))
             if l < L - 1:
+                s_t = sf_refs[l][0]
                 nxt = layers[l + 1]
                 xyc, g2, nd = route_frame(s_t, nxt.cap)
                 if nxt.kind == "conv":
@@ -182,8 +223,19 @@ def _network_window_kernel(*refs, layers: Tuple[NetLayer, ...],
                 rb_refs[2 * l + 1][0] = g2.reshape(-1, 1)
                 cnt[l + 1] = cnt[l + 1] + jnp.sum(g2.astype(jnp.int32))
                 drp[l + 1] = drp[l + 1] + nd
-            else:
-                s_last_ref[0, t] = s_t
+    dtv = jnp.sum((alive_ref[0, :] > 0).astype(jnp.int32))
+    for l, nl in enumerate(layers):
+        if not supports_idle_skip(nl.lif):
+            # soft reset has no closed-form deferred decay — the driver
+            # only hands such layers all-ones bitmaps (no cold tiles)
+            continue
+        h = nl.halo
+        acc = acc_refs[l]
+        for ti, tj, x0, x1, y0, y1 in spans[l]:
+            @pl.when(tiles_refs[l][0, ti, tj] == 0)
+            def _cold(acc=acc, nl=nl, h=h, x0=x0, x1=x1, y0=y0, y1=y1):
+                acc[0, h + x0:h + x1, h + y0:h + y1, :] = cold_tile_decay(
+                    acc[0, h + x0:h + x1, h + y0:h + y1, :], nl.lif, dtv)
     for l in range(L):
         vout_refs[l][...] = acc_refs[l][...].astype(vout_refs[l].dtype)
     counts_ref[0] = jnp.stack(cnt)
@@ -195,7 +247,8 @@ def _network_window_kernel(*refs, layers: Tuple[NetLayer, ...],
 def network_window_pallas(states: Sequence[jnp.ndarray],
                           weights: Sequence[jnp.ndarray],
                           ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
-                          alive: jnp.ndarray, *,
+                          alive: jnp.ndarray,
+                          tiles: Sequence[jnp.ndarray], *,
                           layers: Tuple[NetLayer, ...],
                           native: bool = False, interpret: bool = False):
     """Advance N slots through a whole window, all layers, in ONE launch.
@@ -209,6 +262,9 @@ def network_window_pallas(states: Sequence[jnp.ndarray],
                for a conv first layer).
       ev_gate: (N, T, E0) validity gates (cast to the accumulator dtype).
       alive:   (N, T) 1.0 where the slot has a real timestep.
+      tiles:   per-layer (N, nTx_l, nTy_l) int32 tile activity bitmaps
+               (`window_common.tile_grid` over each interior); all-ones
+               everywhere runs the dense schedule bit-for-bit.
       layers:  static per-layer plans (hashable — jit/kernel key).
       native:  int8-native policy — int32 accumulators, int8 saturation
                at every boundary, int8 storage out.
@@ -221,6 +277,18 @@ def network_window_pallas(states: Sequence[jnp.ndarray],
     acc_dt = window_acc_dtype(states[0].dtype, native)
     gate4 = ev_gate.astype(acc_dt).reshape(N, T, E0, 1)
     alive2 = alive.astype(jnp.float32)
+
+    tiles_in, tile_specs = [], []
+    for nl, v, tl in zip(layers, states, tiles):
+        nTx, nTy, _, _ = tile_grid(v.shape[1] - 2 * nl.halo,
+                                   v.shape[2] - 2 * nl.halo)
+        if tl.shape != (N, nTx, nTy):
+            raise ValueError(
+                f"tiles shape {tl.shape} != {(N, nTx, nTy)} for layer "
+                f"interior ({v.shape[1] - 2 * nl.halo}, "
+                f"{v.shape[2] - 2 * nl.halo})")
+        tiles_in.append(tl.astype(jnp.int32))
+        tile_specs.append(pl.BlockSpec((1, nTx, nTy), lambda n: (n, 0, 0)))
 
     w_in, w_specs = [], []
     for nl, w in zip(layers, weights):
@@ -242,6 +310,11 @@ def network_window_pallas(states: Sequence[jnp.ndarray],
                       states[-1].shape[2] - 2 * layers[-1].halo,
                       states[-1].shape[3])
     scratch = [pltpu.VMEM((1,) + v.shape[1:], acc_dt) for v in states]
+    for nl, v in zip(layers[:-1], states[:-1]):
+        # spike-frame staging for per-tile fire writes (routing reads it)
+        scratch.append(pltpu.VMEM((1, v.shape[1] - 2 * nl.halo,
+                                   v.shape[2] - 2 * nl.halo, v.shape[3]),
+                                  acc_dt))
     for nl in layers[1:]:
         scratch.append(pltpu.VMEM((1, nl.cap, 3), jnp.int32))
         scratch.append(pltpu.VMEM((1, nl.cap, 1), acc_dt))
@@ -254,7 +327,7 @@ def network_window_pallas(states: Sequence[jnp.ndarray],
             pl.BlockSpec((1, T, E0, 3), lambda n: (n, 0, 0, 0)),
             pl.BlockSpec((1, T, E0, 1), lambda n: (n, 0, 0, 0)),
             pl.BlockSpec((1, T), lambda n: (n, 0)),
-        ] + w_specs + slab_spec,
+        ] + tile_specs + w_specs + slab_spec,
         out_specs=slab_spec + [
             pl.BlockSpec((1, T, Ho, Wo, C_last),
                          lambda n: (n, 0, 0, 0, 0)),
@@ -269,5 +342,5 @@ def network_window_pallas(states: Sequence[jnp.ndarray],
         ],
         scratch_shapes=scratch,
         interpret=interpret,
-    )(ev_xyc, gate4, alive2, *w_in, *states)
+    )(ev_xyc, gate4, alive2, *tiles_in, *w_in, *states)
     return tuple(out[:L]), out[L], out[L + 1], out[L + 2]

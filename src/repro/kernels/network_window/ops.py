@@ -12,10 +12,11 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.lif import supports_idle_skip
 from repro.kernels.network_window.kernel import network_window_pallas
 from repro.kernels.network_window.ref import network_window_ref
 from repro.kernels.network_window.spec import NetLayer
-from repro.kernels.window_common import pad_empty_schedule
+from repro.kernels.window_common import pad_empty_schedule, tile_grid
 
 
 def _on_tpu() -> bool:
@@ -26,7 +27,8 @@ def network_window(states: Sequence[jnp.ndarray],
                    weights: Sequence[jnp.ndarray], ev_xyc: jnp.ndarray,
                    ev_gate: jnp.ndarray, alive: jnp.ndarray, *,
                    layers: Tuple[NetLayer, ...], native: bool = False,
-                   use_pallas: bool | None = None):
+                   use_pallas: bool | None = None,
+                   tiles: Sequence[jnp.ndarray] | None = None):
     """Advance N slots through a whole window, all layers, in ONE launch.
 
     The fused-network entry point (``fusion_policy="fused-network"``):
@@ -36,6 +38,12 @@ def network_window(states: Sequence[jnp.ndarray],
     auto-selection rules as the per-layer window wrappers;
     ``use_pallas=False`` runs the pure-jnp oracle.
 
+    ``tiles`` is an optional per-layer tuple of (N, nTx_l, nTy_l)
+    activity bitmaps (`window_common.tile_grid` geometry): cold tiles
+    skip every per-timestep sweep and settle with one analytic decay.
+    Requires every layer to be hard-reset (`supports_idle_skip`);
+    ``None`` runs dense.
+
     A zero-length layer-0 event axis still runs the window (leak/fire
     must advance) — the schedule is padded to one gated-off event so the
     launch geometry stays valid.
@@ -44,9 +52,21 @@ def network_window(states: Sequence[jnp.ndarray],
     (N, L) int32, drops (N, L) int32)``.
     """
     ev_xyc, ev_gate = pad_empty_schedule(ev_xyc, ev_gate)
+    if tiles is not None and not all(supports_idle_skip(nl.lif)
+                                     for nl in layers):
+        raise ValueError(
+            "tile sparsity requires hard-reset layers (reset_mode='zero'):"
+            " cold-tile decay has no closed form under soft reset")
     if use_pallas is False:
         return network_window_ref(states, weights, ev_xyc, ev_gate, alive,
-                                  layers=layers, native=native)
+                                  layers=layers, native=native, tiles=tiles)
+    if tiles is None:
+        tiles = []
+        for nl, v in zip(layers, states):
+            nTx, nTy, _, _ = tile_grid(v.shape[1] - 2 * nl.halo,
+                                       v.shape[2] - 2 * nl.halo)
+            tiles.append(jnp.ones((v.shape[0], nTx, nTy), jnp.int32))
     return network_window_pallas(tuple(states), tuple(weights), ev_xyc,
-                                 ev_gate, alive, layers=layers,
-                                 native=native, interpret=not _on_tpu())
+                                 ev_gate, alive, tuple(tiles),
+                                 layers=layers, native=native,
+                                 interpret=not _on_tpu())

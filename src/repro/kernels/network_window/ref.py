@@ -21,10 +21,11 @@ from repro.kernels.event_conv.ref import event_conv_ref
 from repro.kernels.event_fc.ref import event_fc_ref
 from repro.kernels.event_pool.ref import event_pool_ref
 from repro.kernels.network_window.spec import NetLayer
-from repro.kernels.window_common import (clip_fire_reset, crop_interior,
-                                         leak_boundary, route_frame,
-                                         saturate_int8, window_acc_dtype,
-                                         write_cropped)
+from repro.kernels.window_common import (clip_fire_reset, cold_tile_decay,
+                                         crop_interior, leak_boundary,
+                                         route_frame, saturate_int8,
+                                         tile_grid, tiles_to_sites,
+                                         window_acc_dtype, write_cropped)
 
 
 def _scatter(nl: NetLayer, w, acc, xyc, gate):
@@ -40,7 +41,8 @@ def network_window_ref(states: Sequence[jnp.ndarray],
                        weights: Sequence[jnp.ndarray],
                        ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
                        alive: jnp.ndarray, *,
-                       layers: Tuple[NetLayer, ...], native: bool = False):
+                       layers: Tuple[NetLayer, ...], native: bool = False,
+                       tiles: Sequence[jnp.ndarray] | None = None):
     """Oracle: advance N slots through a whole window, all layers chained.
 
     Args:
@@ -56,6 +58,12 @@ def network_window_ref(states: Sequence[jnp.ndarray],
       layers:  the static per-layer plans (`NetLayer`).
       native:  int8-native policy (int32 accumulator + boundary
                saturation).
+      tiles:   optional per-layer (N, nTx_l, nTy_l) tile activity bitmaps.
+               Cold sites freeze for the window (one analytic decay at
+               the end) and their spikes are zeroed BEFORE routing — the
+               masking must happen in-loop, matching the megakernel,
+               because an (out-of-contract) cold spike would otherwise
+               change the downstream event stream.  ``None`` runs dense.
 
     Returns ``(v_out tuple, s_last (N, T, Ho, Wo, C_last) accumulator
     dtype, counts (N, L) int32, drops (N, L) int32)`` — counts are the
@@ -66,8 +74,18 @@ def network_window_ref(states: Sequence[jnp.ndarray],
     L = len(layers)
     T = ev_xyc.shape[1]
     acc_dts = [window_acc_dtype(v.dtype, native) for v in states]
+    use_tiles = tiles is not None
+    interiors = [(v.shape[1] - 2 * nl.halo, v.shape[2] - 2 * nl.halo)
+                 for nl, v in zip(layers, states)]
+    if use_tiles:
+        masks = tuple(
+            tiles_to_sites(tl.astype(jnp.float32), tile_grid(*shp), shp)
+            for tl, shp in zip(tiles, interiors))
+    else:
+        masks = tuple(jnp.ones((states[0].shape[0],) + shp, jnp.float32)
+                      for shp in interiors)
 
-    def one(vs, xyc0, gate0, al):
+    def one(vs, xyc0, gate0, al, ms):
         accs = [v.astype(dt) for v, dt in zip(vs, acc_dts)]
         counts = [jnp.int32(0)] * L
         drops = [jnp.int32(0)] * L
@@ -89,6 +107,9 @@ def network_window_ref(states: Sequence[jnp.ndarray],
                     acc = saturate_int8(acc)
                 accs[l] = jnp.where(a, acc, prev)
                 s_t = jnp.where(a, s, jnp.zeros_like(s))
+                if use_tiles:
+                    s_t = jnp.where((ms[l] == 0)[..., None],
+                                    jnp.zeros_like(s_t), s_t)
                 if l < L - 1:
                     nxt = layers[l + 1]
                     xyc, gate, nd = route_frame(s_t, nxt.cap)
@@ -101,7 +122,19 @@ def network_window_ref(states: Sequence[jnp.ndarray],
                 else:
                     frames.append(s_t)
         outs = tuple(acc.astype(v.dtype) for acc, v in zip(accs, vs))
+        if use_tiles:
+            dt = jnp.sum((al > 0).astype(jnp.int32))
+            patched = []
+            for l, nl in enumerate(layers):
+                cold = (ms[l] == 0)[..., None]
+                dec = cold_tile_decay(
+                    crop_interior(vs[l], nl.halo).astype(acc_dts[l]),
+                    nl.lif, dt).astype(vs[l].dtype)
+                interior = crop_interior(outs[l], nl.halo)
+                patched.append(write_cropped(
+                    outs[l], jnp.where(cold, dec, interior), nl.halo))
+            outs = tuple(patched)
         return (outs, jnp.stack(frames), jnp.stack(counts),
                 jnp.stack(drops))
 
-    return jax.vmap(one)(tuple(states), ev_xyc, ev_gate, alive)
+    return jax.vmap(one)(tuple(states), ev_xyc, ev_gate, alive, masks)

@@ -25,13 +25,22 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.lif import LifParams, apply_leak, fire_and_reset
+from repro.core.lif import (LifParams, apply_leak, fire_and_reset,
+                            idle_decay, supports_idle_skip)
 from repro.core.quant import INT8_MAX, INT8_MIN
 
-__all__ = ["INT8_MAX", "INT8_MIN", "clip_fire_reset", "crop_interior",
-           "fused_window_ref", "leak_boundary", "pad_empty_schedule",
-           "route_frame", "saturate_int8", "window_acc_dtype",
-           "write_cropped"]
+__all__ = ["INT8_MAX", "INT8_MIN", "clip_fire_reset", "cold_tile_decay",
+           "crop_interior", "dilate_conv", "dilate_pool", "fused_window_ref",
+           "leak_boundary", "pad_empty_schedule", "route_frame",
+           "saturate_int8", "seed_site_map", "sites_to_tiles", "tile_grid",
+           "tiles_to_sites", "window_acc_dtype", "write_cropped"]
+
+# Tiles per spatial axis of one membrane interior.  4x4 matches the
+# window kernels' launch geometry (whole-interior blocks): a tile is the
+# smallest slab region the in-kernel `@pl.when` can predicate without
+# breaking the lane (channel) axis, and 16 tiles keeps the per-timestep
+# predicate overhead negligible against the elementwise sweep it skips.
+TILE_GRID_MAX = 4
 
 
 def pad_empty_schedule(ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray):
@@ -154,10 +163,129 @@ def write_cropped(vp: jnp.ndarray, x: jnp.ndarray, h: int) -> jnp.ndarray:
     return vp.at[..., h:vp.shape[-3] - h, h:vp.shape[-2] - h, :].set(x)
 
 
+# ---------------------------------------------------------------------------
+# Tile activity bitmaps (spatial sparsity inside the window kernels).
+#
+# One (N, nTx, nTy) int32 bitmap per layer marks which tiles of each slot's
+# membrane *interior* can possibly be touched this window.  Seeded from the
+# collector's event coordinates (`seed_site_map`), propagated layer to
+# layer through the receptive-field footprint (`dilate_conv` /
+# `dilate_pool`; FC layers are always-hot), and reduced to tile granularity
+# (`sites_to_tiles`).  The contract the kernels rely on: the bitmap is a
+# SUPERSET of the interior sites the window's scatters can write, and —
+# because hard-reset membranes sit strictly below threshold at every
+# boundary (`core.lif.supports_idle_skip`) — a cold tile can neither
+# receive input nor fire, so its whole leak→clip→fire→reset sweep
+# collapses to one analytic `idle_decay` at the end of the window.
+# ---------------------------------------------------------------------------
+
+def tile_grid(H: int, W: int, max_tiles: int = TILE_GRID_MAX):
+    """Static tile grid for an (H, W) interior: ``(nTx, nTy, th, tw)``.
+
+    At most ``max_tiles`` tiles per axis; edge tiles may be smaller (prime
+    geometries stay exact — the kernels slice tiles with static bounds
+    clamped to the interior).  Every tile is non-empty by construction:
+    ``nT = ceil(dim / ceil(dim / min(dim, max_tiles)))``.
+    """
+    th = -(-H // min(H, max_tiles))
+    tw = -(-W // min(W, max_tiles))
+    return (-(-H // th), -(-W // tw), th, tw)
+
+
+def seed_site_map(ev_xyc: jnp.ndarray, ev_gate: jnp.ndarray,
+                  shape) -> jnp.ndarray:
+    """Collector events -> (N, H, W) site-activity map (input coords).
+
+    Marks every site a gated event names, any channel (the bitmaps track
+    spatial activity only — the channel axis is the lane dimension the
+    kernels never split).  Out-of-range coordinates are ignored rather
+    than clamped onto a real site.
+
+    Args:
+      ev_xyc:  (T, N, E, 3) int32 window schedule in *layer* coordinates
+               (pre halo shift).
+      ev_gate: (T, N, E) validity gates.
+      shape:   the layer's (H, W) input geometry.
+    """
+    H, W = shape
+    T, N, E = ev_gate.shape
+    x, y = ev_xyc[..., 0], ev_xyc[..., 1]
+    ok = (ev_gate > 0) & (x >= 0) & (x < H) & (y >= 0) & (y < W)
+    flat = jnp.clip(x, 0, H - 1) * W + jnp.clip(y, 0, W - 1)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (T, N, E), 1)
+    m = jnp.zeros((N, H * W), jnp.float32)
+    m = m.at[slot.reshape(-1), flat.reshape(-1)].max(
+        ok.reshape(-1).astype(jnp.float32))
+    return m.reshape(N, H, W)
+
+
+def dilate_conv(site_map: jnp.ndarray, kernel: int,
+                padding: int) -> jnp.ndarray:
+    """Propagate an input site map through a conv's scatter footprint.
+
+    The scatter writes an event's K-wide patch *starting at* its halo
+    coordinate (``dynamic_slice`` at ``x + P`` into the ``halo == K - 1``
+    slab — econv's halo rule), so input site ``x`` touches interior rows
+    ``[x + P - K + 1, x + P]``.  Output site ``r`` can therefore be
+    touched iff some active input lies in ``[r - P, r - P + K - 1]``:
+    a max-pool with window K, stride 1 and padding P on both sides,
+    which yields the layer's output geometry directly.
+    (N, H, W) -> (N, H + 2P - K + 1, W + 2P - K + 1).
+    """
+    return jax.lax.reduce_window(
+        site_map, 0.0, jax.lax.max, (1, kernel, kernel), (1, 1, 1),
+        ((0, 0), (padding, padding), (padding, padding)))
+
+
+def dilate_pool(site_map: jnp.ndarray, stride: int, out_shape) -> jnp.ndarray:
+    """Propagate an input site map through a pool's scatter footprint.
+
+    Input site ``(x, y)`` lands on output ``(x // s, y // s)``; events
+    whose pooled coordinate falls past the output grid are dropped (the
+    kernels' VALID-window rule), hence the crop before the reduction.
+    (N, H, W) -> (N, Ho, Wo).
+    """
+    Ho, Wo = out_shape
+    m = site_map[:, :Ho * stride, :Wo * stride]
+    return jax.lax.reduce_window(m, 0.0, jax.lax.max, (1, stride, stride),
+                                 (1, stride, stride), "VALID")
+
+
+def sites_to_tiles(site_map: jnp.ndarray, grid) -> jnp.ndarray:
+    """Reduce an (N, H, W) site map to its (N, nTx, nTy) tile bitmap."""
+    nTx, nTy, th, tw = grid
+    N, H, W = site_map.shape
+    m = jnp.pad(site_map, ((0, 0), (0, nTx * th - H), (0, nTy * tw - W)))
+    t = jax.lax.reduce_window(m, 0.0, jax.lax.max, (1, th, tw),
+                              (1, th, tw), "VALID")
+    return (t > 0).astype(jnp.int32)
+
+
+def tiles_to_sites(tiles: jnp.ndarray, grid, shape) -> jnp.ndarray:
+    """Upsample a tile bitmap back to site granularity (the ref's mask)."""
+    _, _, th, tw = grid
+    H, W = shape
+    m = jnp.repeat(jnp.repeat(tiles, th, axis=-2), tw, axis=-1)
+    return m[..., :H, :W]
+
+
+def cold_tile_decay(v: jnp.ndarray, lif: LifParams, dt) -> jnp.ndarray:
+    """Collapse a cold tile's whole window into one analytic decay.
+
+    Delegates to `core.lif.idle_decay` — the exact contract the serving
+    engine's window-level idle skip already relies on (``dt`` leak steps
+    plus one clip, bitwise the iterated per-timestep sweep for the
+    dyadic/integral leaks every shipped net uses).  ``dt`` is the number
+    of *alive* timesteps in the window (frozen timesteps hold state in
+    the dense path too); ``dt == 0`` is a bitwise no-op.
+    """
+    return idle_decay(v, lif, dt)
+
+
 def fused_window_ref(v: jnp.ndarray, ev_xyc: jnp.ndarray,
                      ev_gate: jnp.ndarray, alive: jnp.ndarray,
                      scatter: Callable, *, lif: LifParams, halo: int,
-                     native: bool):
+                     native: bool, tiles: jnp.ndarray | None = None):
     """Pure-jnp oracle driver shared by every ``*_window_ref``.
 
     Runs the fused window sequence — per timestep ``leak -> scatter ->
@@ -166,6 +294,16 @@ def fused_window_ref(v: jnp.ndarray, ev_xyc: jnp.ndarray,
     kernels execute it.  ``scatter(acc, xyc_t, gate_t)`` is the layer
     kind's single-slot batch-scatter oracle (`event_conv_ref` and
     friends), already bit-for-bit the kernels' inner event loop.
+
+    With ``tiles`` given, the dense result is patched to the tile-sparse
+    kernels' semantics: cold interior sites are frozen through the window
+    and settled with one :func:`cold_tile_decay`, and their spike frames
+    are forced to zero.  This is bitwise the dense path wherever the tile
+    bitmap honours its superset contract (no scatter write and no
+    above-threshold initial state on a cold tile) — the condition the
+    propagation rules guarantee for hard-reset layers.  Halo cells belong
+    to no tile and keep their dense values, exactly as in the kernels
+    (scatter and the whole-slab native saturation stay unconditional).
 
     Args:
       v:       (N, Hp, Wp, C) membranes in storage dtype.
@@ -176,6 +314,8 @@ def fused_window_ref(v: jnp.ndarray, ev_xyc: jnp.ndarray,
       lif:     the layer's LIF plan.
       halo:    halo width (0 for pool/fc).
       native:  int8-native policy switch.
+      tiles:   optional (N, nTx, nTy) activity bitmap over the interior
+               (`tile_grid` geometry); None keeps the dense semantics.
 
     Returns ``(v_out (N, ...) storage dtype, spikes (N, T, ...)
     accumulator dtype)``.
@@ -200,4 +340,19 @@ def fused_window_ref(v: jnp.ndarray, ev_xyc: jnp.ndarray,
             frames.append(jnp.where(a, s, jnp.zeros_like(s)))
         return acc.astype(vp.dtype), jnp.stack(frames)
 
-    return jax.vmap(one)(v, ev_xyc, ev_gate, alive)
+    v_out, frames = jax.vmap(one)(v, ev_xyc, ev_gate, alive)
+    if tiles is None:
+        return v_out, frames
+
+    H = v.shape[1] - 2 * halo
+    W = v.shape[2] - 2 * halo
+    grid = tile_grid(H, W)
+    mask = tiles_to_sites(tiles.astype(jnp.float32), grid, (H, W))
+    cold = (mask == 0)[:, :, :, None]                        # (N, H, W, 1)
+    dt = jnp.sum((alive > 0).astype(jnp.int32), axis=1).reshape(-1, 1, 1, 1)
+    dec = cold_tile_decay(crop_interior(v, halo).astype(acc_dt), lif, dt)
+    interior = crop_interior(v_out, halo)
+    v_out = write_cropped(v_out, jnp.where(cold, dec.astype(v.dtype),
+                                           interior), halo)
+    frames = jnp.where(cold[:, None], jnp.zeros((), frames.dtype), frames)
+    return v_out, frames

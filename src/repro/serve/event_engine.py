@@ -70,7 +70,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
+from functools import lru_cache, partial
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -87,6 +87,7 @@ from repro.core.layer_program import (FUSED_NETWORK, FUSED_WINDOW, LayerOp,
 from repro.core.layer_program import \
     default_step_capacities as _program_step_capacities
 from repro.core.lif import supports_idle_skip
+from repro.kernels.window_common import tile_grid
 from repro.core.policies import (BACKEND_LOCAL, BACKEND_MESH,
                                  ExecutionPolicy, resolve_policy)
 from repro.core.sne_net import SNNSpec
@@ -173,6 +174,40 @@ def default_step_capacities(spec: SNNSpec, activity: float = 0.25,
     capacity sizing cannot drift.
     """
     return _program_step_capacities(spec, activity, slack, align)
+
+
+@lru_cache(maxsize=32)
+def event_bucket_ladder(cap: int) -> Tuple[int, ...]:
+    """The event-axis capacity ladder: {8, 12, 16, 24, 32, 48, ...} ≤ cap.
+
+    Power-of-two buckets waste up to 2x padding right below each rung;
+    interleaving the 1.5x midpoints halves the worst case (≤ 1.33x) while
+    keeping the rung count O(log cap) — the bounded jit-retrace set the
+    fixed buckets were chosen for.  ``cap`` itself always terminates the
+    ladder, so no occupancy is ever rounded past the collector capacity.
+    """
+    vals = []
+    v = 8
+    while v < cap:
+        vals.append(v)
+        if v + (v >> 1) < cap:
+            vals.append(v + (v >> 1))
+        v <<= 1
+    vals.append(cap)
+    return tuple(vals)
+
+
+def event_bucket(n: int, cap: int) -> int:
+    """Smallest ladder rung >= ``n`` (the adaptive per-window ``Eb``).
+
+    The SINGLE source for event-axis trimming — both the local engine's
+    `_launch_window` and the mesh engine's `_launch_global` call this, so
+    their launch geometries (and jit caches) cannot drift apart.
+    """
+    for v in event_bucket_ladder(cap):
+        if v >= n:
+            return v
+    return cap
 
 
 class EventServeEngine:
@@ -300,16 +335,27 @@ class EventServeEngine:
                       "step_calls": 0, "kernel_launches": 0,
                       "dense_slot_windows": 0, "skipped_slot_windows": 0,
                       "leak_flushes": 0,
-                      # padding-waste accounting (adaptive-bucketing
-                      # baseline): real events collected vs the padded
-                      # event-slot footprint the launches actually moved
+                      # padding-waste accounting: real events collected vs
+                      # the padded event-slot footprint the launches moved
+                      # (ladder Eb), the pow2 counterfactual the ladder
+                      # replaced, and the measured schedule bytes shipped
                       "collected_events": 0, "launched_events": 0,
-                      "padded_event_slots": 0}
+                      "padded_event_slots": 0, "padded_event_slots_pow2": 0,
+                      "launch_bytes": 0,
+                      # measured input tile occupancy: hot tiles in the
+                      # layer-0 tile grid per launched (slot, window), vs
+                      # the grid size — the workload's spatial sparsity as
+                      # the tile-sparse kernels see it
+                      "hot_tiles": 0, "total_tiles": 0}
+        self._tile_grid0 = tile_grid(*spec.in_shape[:2])
         # histogram of per-(slot, timestep) bucket occupancy: bin 0 holds
         # empty buckets, bin b>0 holds fills whose power-of-two ceiling is
         # 2^(b-1) — the measured baseline for adaptive event-capacity
-        # bucketing (every bucket is padded to the window's Eb)
-        self.bucket_fill_hist = np.zeros((34,), np.int64)
+        # bucketing (every bucket is padded to the window's Eb).  Sized
+        # from the collector capacity: the largest possible fill is
+        # caps[0], whose bin is (caps[0]-1).bit_length()+1 < bit_length+2.
+        self.bucket_fill_hist = np.zeros(
+            (int(self.caps[0]).bit_length() + 2,), np.int64)
 
         # the jitted per-window step IS the unified program executor —
         # every layer kind is one slot-batched scatter launch per timestep
@@ -495,19 +541,32 @@ class EventServeEngine:
             n_win_ev[slot] = end - p
             bounds = np.searchsorted(win[:, 0],
                                      np.arange(t0, t0 + n_alive + 1))
+            Hi, Wi, Ci = self.spec.in_shape
             for dt in range(n_alive):
                 rows = win[bounds[dt]:bounds[dt + 1]]
                 if len(rows) > E0:
                     dropped = len(rows) - E0
                     self.collector_drops[slot] += dropped
                     self.stats["collector_dropped"] += dropped
-                    rows = rows[:E0]
+                    # drop by the same deterministic priority the on-device
+                    # router applies (frame_to_events / route_frame keep the
+                    # lowest row-major flat site indices), NOT by arrival
+                    # order — so which events survive an overfull timestep
+                    # does not depend on ingest ordering.  Survivors stay
+                    # in arrival order (stable sort + re-sort of positions)
+                    # so the in-bucket accumulation order is untouched.
+                    key = (rows[:, 1] * Wi + rows[:, 2]) * Ci + rows[:, 3]
+                    keep = np.argsort(key, kind="stable")[:E0]
+                    keep.sort()
+                    rows = rows[keep]
                 k = len(rows)
                 max_bucket = max(max_bucket, k)
                 # padding-waste baseline: bin 0 = empty bucket, bin b>0 =
-                # occupancy whose power-of-two ceiling is 2^(b-1)
+                # occupancy whose power-of-two ceiling is 2^(b-1) (clamped
+                # into the caps[0]-derived histogram)
+                b = 0 if k == 0 else (k - 1).bit_length() + 1
                 self.bucket_fill_hist[
-                    0 if k == 0 else (k - 1).bit_length() + 1] += 1
+                    min(b, len(self.bucket_fill_hist) - 1)] += 1
                 if k:
                     xyc[dt, slot, :k, 0] = rows[:, 1]
                     xyc[dt, slot, :k, 1] = rows[:, 2]
@@ -629,10 +688,13 @@ class EventServeEngine:
             # slot 0 but are gated off and frozen (alive == 0)
             Ab = self._bucket(A, self.N)
             gidx = np.concatenate([idx, np.zeros((Ab - A,), idx.dtype)])
-            # event-axis compaction: trim to this window's occupancy
-            Eb = self._bucket(max(max_bucket, 8), self.caps[0])
+            # event-axis compaction: trim to this window's occupancy on
+            # the adaptive ladder (pow2 kept as the waste counterfactual)
+            Eb = event_bucket(max_bucket, self.caps[0])
+            Eb_pow2 = self._bucket(max(max_bucket, 8), self.caps[0])
         else:
-            Ab, gidx, Eb = self.N, np.arange(self.N), self.caps[0]
+            Ab, gidx = self.N, np.arange(self.N)
+            Eb = Eb_pow2 = self.caps[0]
         # deferred decay for slots (re)entering the dense path, fused into
         # the window step (dummy tail positions mirror real slots' dt but
         # their decayed state is discarded at scatter-back)
@@ -682,6 +744,18 @@ class EventServeEngine:
         self.stats["launched_events"] += int(
             np.sum(gate_w[:, :A] if not full_batch else gate_w[:, idx]))
         self.stats["padded_event_slots"] += self.W * len(gidx) * Eb
+        self.stats["padded_event_slots_pow2"] += self.W * len(gidx) * Eb_pow2
+        self.stats["launch_bytes"] += (xyc_w.nbytes + gate_w.nbytes
+                                       + alive_w.nbytes)
+        # measured input tile occupancy over the REAL slots (dummy tail
+        # positions mirror slot 0 and would double-count its footprint)
+        nTx, nTy, th, tw = self._tile_grid0
+        hot = np.zeros((A, nTx, nTy), bool)
+        t_, s_, e_ = np.nonzero(gate_w[:, :A] > 0)
+        hot[s_, np.minimum(xyc_w[t_, s_, e_, 0] // th, nTx - 1),
+            np.minimum(xyc_w[t_, s_, e_, 1] // tw, nTy - 1)] = True
+        self.stats["hot_tiles"] += int(hot.sum())
+        self.stats["total_tiles"] += A * nTx * nTy
         # fused-network: ONE launch for the whole window (or per-layer
         # fused-window launches when the VMEM budget forced a fallback —
         # effective_fusion is the same predicate the driver uses);
@@ -736,15 +810,21 @@ class EventServeEngine:
     def padding_waste(self) -> dict:
         """Padded-vs-real event accounting for the capacity buckets.
 
-        The measured baseline for adaptive event-capacity bucketing:
         ``padded_event_slots`` is the event-axis footprint the launches
         actually moved (every (slot, timestep) bucket padded to the
-        window's power-of-two ``Eb``), ``launched_events`` the gated
-        real events inside it, and ``bucket_fill_hist`` the occupancy
-        histogram (bin 0 = empty bucket; bin b>0 = fills with
-        power-of-two ceiling ``2**(b-1)``).
+        window's adaptive ladder ``Eb`` — `event_bucket`),
+        ``padded_event_slots_pow2`` the counterfactual footprint under
+        the old power-of-two-only sizing, ``launched_events`` the gated
+        real events inside it, ``launch_bytes`` the measured collector
+        schedule bytes shipped to the device, and ``bucket_fill_hist``
+        the occupancy histogram (bin 0 = empty bucket; bin b>0 = fills
+        with power-of-two ceiling ``2**(b-1)``).
+        ``padding_waste_improvement`` is pow2-waste / ladder-waste
+        (>= 1.0 whenever the ladder helped; 1.0 when every window
+        happened to land on a power-of-two rung).
         """
         padded = self.stats["padded_event_slots"]
+        pow2 = self.stats["padded_event_slots_pow2"]
         real = self.stats["launched_events"]
         hist = self.bucket_fill_hist
         last = int(np.nonzero(hist)[0].max()) + 1 if hist.any() else 0
@@ -752,7 +832,11 @@ class EventServeEngine:
             "collected_events": self.stats["collected_events"],
             "launched_events": real,
             "padded_event_slots": padded,
+            "padded_event_slots_pow2": pow2,
             "padding_waste_ratio": padded / real if real else float("inf"),
+            "padding_waste_ratio_pow2": pow2 / real if real else float("inf"),
+            "padding_waste_improvement": pow2 / padded if padded else 1.0,
+            "launch_bytes": self.stats["launch_bytes"],
             "bucket_fill_hist": [int(h) for h in hist[:last]],
         }
 

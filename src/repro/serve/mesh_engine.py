@@ -71,7 +71,8 @@ from repro.core.sne_net import SNNSpec
 from repro.distributed.sharding import (replicated, shard_map, slot_mesh,
                                         slot_sharding, slot_spec)
 from repro.serve.event_engine import (CollectedWindow, EventRequest,
-                                      EventServeEngine, InflightWindow)
+                                      EventServeEngine, InflightWindow,
+                                      event_bucket)
 
 
 @dataclasses.dataclass
@@ -207,6 +208,7 @@ class MeshEventServeEngine(EventServeEngine):
         # (the aggregate `stats` property folds both together)
         self._extra = {"windows": 0, "step_calls": 0, "kernel_launches": 0,
                        "launched_events": 0, "padded_event_slots": 0,
+                       "padded_event_slots_pow2": 0, "launch_bytes": 0,
                        "mesh_global_windows": 0, "mesh_shard_windows": 0}
 
         # one-time sanity probe: the zero-copy assembly of per-device
@@ -371,10 +373,13 @@ class MeshEventServeEngine(EventServeEngine):
         """
         W, N, n = self.W, self.N, self.spd
         if self.idle_skip:
+            # the SAME adaptive ladder trim the local engine applies
+            # (serve.event_engine.event_bucket — single-sourced on purpose)
             mb = max(c.max_bucket for c in cols)
-            Eb = EventServeEngine._bucket(max(mb, 8), self.caps[0])
+            Eb = event_bucket(mb, self.caps[0])
+            Eb_pow2 = EventServeEngine._bucket(max(mb, 8), self.caps[0])
         else:
-            Eb = self.caps[0]
+            Eb = Eb_pow2 = self.caps[0]
         xyc = np.zeros((W, N, Eb, 3), np.int32)
         gate = np.zeros((W, N, Eb), np.float32)
         alive = np.zeros((W, N), np.float32)
@@ -416,6 +421,8 @@ class MeshEventServeEngine(EventServeEngine):
             self._extra["kernel_launches"] += W * len(self.program.ops)
         self._extra["launched_events"] += int(gate.sum())
         self._extra["padded_event_slots"] += W * N * Eb
+        self._extra["padded_event_slots_pow2"] += W * N * Eb_pow2
+        self._extra["launch_bytes"] += xyc.nbytes + gate.nbytes + alive.nbytes
         self._extra["mesh_global_windows"] += 1
         idx = np.concatenate([n * s + d for s, d in enumerate(dense)])
         return MeshInflightWindow(idx=idx, dense=dense,

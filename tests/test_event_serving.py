@@ -150,6 +150,125 @@ def test_collector_overflow_drops_and_counts():
     assert eng.stats["collector_dropped"] == 8
 
 
+def _sites_request(uid, sites, T, order=None):
+    """Request with one t=0 UPDATE event per (x, y, c) site, in a given
+    arrival order (the collector's bins preserve arrival order)."""
+    arr = np.asarray(sites, np.int64)
+    if order is not None:
+        arr = arr[np.asarray(order)]
+    n = len(arr)
+    stream = ev.EventStream(
+        t=jnp.zeros((n,), jnp.int32),
+        x=jnp.asarray(arr[:, 0], jnp.int32),
+        y=jnp.asarray(arr[:, 1], jnp.int32),
+        c=jnp.asarray(arr[:, 2], jnp.int32),
+        op=jnp.full((n,), ev.OP_UPDATE, jnp.int32),
+        valid=jnp.ones((n,), bool))
+    return EventRequest(uid=uid, stream=stream, n_timesteps=T)
+
+
+def test_collector_overflow_drop_priority_deterministic():
+    """An overfull timestep must drop by the routing sort key (lowest
+    row-major flat site index survives), not by arrival order — the same
+    deterministic priority `frame_to_events` applies between layers.
+
+    Regression: the collector once truncated ``rows[:E0]`` in arrival
+    order, so a permuted sensor stream changed which events survived."""
+    spec = tiny_net()
+    T = spec.n_timesteps
+    # 16 distinct sites in one timestep against a capacity-8 collector;
+    # the 8 lowest row-major keys are exactly the x in {0, 1} rows
+    sites = [(x, y, 0) for x in range(4) for y in range(4)]
+    survivors = [s for s in sites if s[0] < 2]
+    rng = np.random.default_rng(42)
+
+    def serve(req):
+        _, _, eng = _mini_engine(
+            n_slots=1, caps=[8] + default_step_capacities(tiny_net())[1:])
+        eng.run([req])
+        return req
+
+    got = [serve(_sites_request(i, sites, T,
+                                order=rng.permutation(len(sites))))
+           for i in range(2)]
+    ref = serve(_sites_request(9, survivors, T))
+    assert all(r.telemetry.input_dropped == 8 for r in got)
+    assert ref.telemetry.input_dropped == 0
+    for r in got:
+        np.testing.assert_array_equal(r.class_counts, ref.class_counts)
+        assert r.prediction == ref.prediction
+
+
+@pytest.mark.parametrize("fusion", ["fused-window", "fused-network"])
+def test_donated_dummy_tail_mirrors_midflight_slot(fusion):
+    """Idle-skip slot compaction with donated buffers and a NON-prefix
+    active set: lengths 16/4/16/16 on 4 slots leave active = {0, 2, 3}
+    after the first window, so the power-of-two dummy tail mirrors slot 0
+    while slot 0 is itself mid-flight — its donated slab must be read
+    for the mirror before being consumed by the step."""
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(0), spec)
+    spikes, _ = batch_at(11, 0, 4, TINY)
+    mk = [spikes[0], spikes[1][:4], spikes[2], spikes[3]]
+
+    solo = []
+    for i, s in enumerate(mk):
+        e = EventServeEngine(spec, params, n_slots=1, window=4,
+                             use_pallas=False, donate_buffers=True,
+                             policy=ExecutionPolicy(fusion_policy=fusion))
+        r = EventRequest.from_dense(i, s)
+        e.run([r])
+        solo.append(r)
+
+    eng = EventServeEngine(spec, params, n_slots=4, window=4,
+                           use_pallas=False, donate_buffers=True,
+                           policy=ExecutionPolicy(fusion_policy=fusion))
+    reqs = [EventRequest.from_dense(i, s) for i, s in enumerate(mk)]
+    for r in reqs:
+        assert eng.try_admit(r)
+    while eng.step():
+        pass
+    for got, want in zip(reqs, solo):
+        np.testing.assert_array_equal(got.class_counts, want.class_counts)
+        assert got.prediction == want.prediction
+
+
+def test_event_bucket_ladder_properties():
+    """The adaptive event ladder: sorted, bounded-waste, pow2-dominated."""
+    from repro.serve.event_engine import event_bucket, event_bucket_ladder
+    lad = event_bucket_ladder(256)
+    assert lad[0] == 8 and lad[-1] == 256
+    assert all(a < b for a, b in zip(lad, lad[1:]))
+    assert len(lad) <= 2 * 256 .bit_length()      # O(log cap) jit retraces
+    for n in range(257):
+        b = event_bucket(n, 256)
+        assert b in lad and b >= min(n, 256)
+        # worst-case padding 1.5x (vs 2x for pure pow2 buckets)
+        if n >= 8:
+            assert 2 * b <= 3 * n or b == 8
+        # the pow2 counterfactual the waste stats compare against can
+        # never be smaller than the adaptive rung
+        assert EventServeEngine._bucket(max(n, 8), 256) >= b
+    # degenerate caps collapse to a single rung
+    assert event_bucket_ladder(8) == (8,)
+    assert event_bucket(3, 8) == 8
+
+
+def test_bucket_fill_hist_sized_from_capacity():
+    """The fill histogram derives its bins from caps[0] (regression: it
+    was hard-coded to 34 bins and mis-sized for small collectors)."""
+    _, _, small = _mini_engine(
+        n_slots=1, caps=[8] + default_step_capacities(tiny_net())[1:])
+    assert small.bucket_fill_hist.shape == (8 .bit_length() + 2,)
+    _, _, eng = _mini_engine(n_slots=1)
+    assert eng.bucket_fill_hist.shape == \
+        (int(eng.caps[0]).bit_length() + 2,)
+    spikes = jnp.zeros((tiny_net().n_timesteps,) + tiny_net().in_shape)
+    spikes = spikes.at[0, :4, :4, 0].set(1.0)
+    eng.run([EventRequest.from_dense(0, spikes)])
+    assert int(eng.bucket_fill_hist.sum()) > 0
+
+
 def test_ingest_overflow_counted():
     spikes = jnp.ones((2, 4, 4, 1))                  # 32 events
     req = EventRequest.from_dense(0, spikes, capacity=16)

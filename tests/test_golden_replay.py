@@ -96,6 +96,15 @@ def test_golden_replay(served):
                         f"intentional, regenerate tests/golden/")
 
 
+def test_tile_sparsity_off_matches_golden(served):
+    """Disabling the tile bitmaps is bitwise invisible on real data
+    (the spatial-sparsity analogue of the idle-skip exactness pin)."""
+    res = _serve(ExecutionPolicy(tile_sparsity=False))
+    base = served[ExecutionPolicy()]
+    for k in base:
+        np.testing.assert_array_equal(res[k], base[k], err_msg=k)
+
+
 if __name__ == "__main__":
     import sys
     if "--regen" in sys.argv:

@@ -1,0 +1,283 @@
+"""Tile-level spatial sparsity: superset contract + bitwise parity.
+
+Three layers of evidence that the tile-sparse window kernels are an
+exact transformation:
+
+* kernel properties (hypothesis) — over random prime geometries, seeds
+  and strides, the propagated tile bitmap is a SUPERSET of the sites a
+  window actually writes: the dense kernel emits no spike outside the
+  bitmap's site footprint, cold interior sites finish bitwise equal to
+  one analytic `idle_decay`, and the tiled kernel matches the dense
+  kernel bit for bit (Pallas interpret AND the jnp oracle);
+* driver parity — ``tile_sparsity=True`` vs ``False`` programs produce
+  bitwise-identical window steps under both fused lowerings on a
+  geometry where the bitmaps are genuinely sparse (this is the
+  layer-to-layer propagation proof: an undercounting bitmap would
+  diverge here);
+* safety rails — soft-reset networks run dense silently at the driver
+  (`effective_tile_sparsity`) and the kernel ops refuse explicit tiles.
+
+The initial membranes here are drawn strictly below threshold: that is
+the serving invariant (hard-reset membranes sit below threshold at every
+window boundary) the cold-tile no-fire argument rests on.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.econv import EConvSpec
+from repro.core.lif import LifParams, idle_decay
+from repro.core.layer_program import (apply_idle_decay, compile_program,
+                                      effective_tile_sparsity, padded_state,
+                                      window_step, window_tile_maps)
+from repro.core.policies import (FUSED_NETWORK, FUSED_WINDOW, PER_STEP,
+                                 ExecutionPolicy)
+from repro.core.sne_net import SNNSpec, init_snn
+from repro.kernels.event_conv.ops import event_conv_window
+from repro.kernels.event_pool.ops import event_pool_window
+from repro.kernels.window_common import (dilate_conv, dilate_pool,
+                                         seed_site_map, sites_to_tiles,
+                                         tile_grid, tiles_to_sites)
+
+# Hard-reset LIF with a dyadic leak: idle_decay is bitwise the iterated
+# per-timestep sweep, the exactness the cold-tile check relies on.
+LIF = LifParams(threshold=1.5, leak=0.25, leak_mode="toward_zero",
+                reset_mode="zero", state_clip=8.0)
+
+# Prime-ish interior geometries: edge tiles smaller than the nominal
+# tile, pool remainders, nothing divides anything.
+GEOMS = ((5, 7), (7, 11), (11, 5), (13, 7))
+
+
+def _corner_events(rng, T, N, E, H, W, C):
+    """A window schedule confined to the top-left corner (layer coords)."""
+    hx, wy = max(1, H // 3), max(1, W // 3)
+    x = rng.integers(0, hx, (T, N, E))
+    y = rng.integers(0, wy, (T, N, E))
+    c = rng.integers(0, C, (T, N, E))
+    xyc = jnp.asarray(np.stack([x, y, c], axis=-1).astype(np.int32))
+    gate = jnp.asarray((rng.random((T, N, E)) < 0.75).astype(np.float32))
+    return xyc, gate
+
+
+def _alive(N, T):
+    """(N, T) liveness with one frozen tail timestep on slot 1."""
+    a = np.ones((N, T), np.float32)
+    a[-1, -1] = 0.0
+    return jnp.asarray(a)
+
+
+def _check_tile_contract(v0, halo, tiles, grid, shape, alive,
+                         v_dense, s_dense, tiled_outs):
+    """Assert superset + frozen-state + tiled==dense on one kernel run."""
+    H, W = shape
+    mask = np.asarray(tiles_to_sites(tiles.astype(jnp.float32), grid,
+                                     (H, W)))
+    cold = mask == 0                                     # (N, H, W)
+    assert cold.any(), "corner schedule should leave cold tiles"
+    s = np.asarray(s_dense)                              # (N, T, H, W, C)
+    assert np.all(s[np.broadcast_to(cold[:, None, :, :, None], s.shape)]
+                  == 0), "dense kernel spiked outside the tile bitmap"
+    dt = jnp.sum(alive, axis=1).reshape(-1, 1, 1, 1)
+    v0_int = v0 if halo == 0 else v0[:, halo:-halo, halo:-halo, :]
+    vd_int = v_dense if halo == 0 else v_dense[:, halo:-halo, halo:-halo, :]
+    frozen = np.asarray(idle_decay(v0_int, LIF, dt))
+    np.testing.assert_array_equal(
+        np.asarray(vd_int)[cold], frozen[cold],
+        err_msg="cold sites must equal one analytic idle_decay")
+    for v_t, s_t in tiled_outs:
+        np.testing.assert_array_equal(np.asarray(v_t), np.asarray(v_dense))
+        np.testing.assert_array_equal(np.asarray(s_t), np.asarray(s_dense))
+
+
+@settings(max_examples=5, deadline=None)
+@given(gi=st.integers(0, len(GEOMS) - 1), seed=st.integers(0, 9999))
+def test_conv_window_tile_superset(gi, seed):
+    H, W = GEOMS[gi]
+    K, P = 3, 1
+    halo = K - 1                     # econv's halo rule for conv scatters
+    Cin, Cout, N, T, E = 2, 3, 2, 3, 6
+    rng = np.random.default_rng(seed * 7 + gi)
+    xyc, gate = _corner_events(rng, T, N, E, H, W, Cin)
+    alive = _alive(N, T)
+    v0 = jnp.asarray(rng.uniform(-1.4, 1.4,
+                                 (N, H + 2 * halo, W + 2 * halo, Cout))
+                     .astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.5, (K, K, Cin, Cout)).astype(np.float32))
+
+    grid = tile_grid(H, W)
+    tiles = sites_to_tiles(dilate_conv(seed_site_map(xyc, gate, (H, W)),
+                                       K, P), grid)
+    # kernels take slot-major halo coords
+    x_nte = jnp.transpose(xyc, (1, 0, 2, 3)) + jnp.asarray([P, P, 0],
+                                                           jnp.int32)
+    g_nte = jnp.transpose(gate, (1, 0, 2))
+    kw = dict(lif=LIF, halo=halo)
+    v_d, s_d = event_conv_window(v0, w, x_nte, g_nte, alive, **kw)
+    outs = [event_conv_window(v0, w, x_nte, g_nte, alive, tiles=tiles, **kw),
+            event_conv_window(v0, w, x_nte, g_nte, alive, tiles=tiles,
+                              use_pallas=False, **kw)]
+    _check_tile_contract(v0, halo, tiles, grid, (H, W), alive, v_d, s_d,
+                         outs)
+
+
+@settings(max_examples=5, deadline=None)
+@given(gi=st.integers(0, len(GEOMS) - 1), seed=st.integers(0, 9999))
+def test_pool_window_tile_superset(gi, seed):
+    H, W = GEOMS[gi]
+    stride = 2 + (seed % 2)                             # 2 or 3
+    Ho, Wo = H // stride, W // stride
+    if Ho == 0 or Wo == 0:
+        stride, Ho, Wo = 2, H // 2, W // 2
+    C, N, T, E = 3, 2, 3, 6
+    rng = np.random.default_rng(seed * 13 + gi)
+    xyc, gate = _corner_events(rng, T, N, E, H, W, C)
+    alive = _alive(N, T)
+    v0 = jnp.asarray(rng.uniform(-1.4, 1.4, (N, Ho, Wo, C))
+                     .astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.2, 1.0, (C,)).astype(np.float32))
+
+    grid = tile_grid(Ho, Wo)
+    tiles = sites_to_tiles(dilate_pool(seed_site_map(xyc, gate, (H, W)),
+                                       stride, (Ho, Wo)), grid)
+    x_nte = jnp.transpose(xyc, (1, 0, 2, 3))
+    g_nte = jnp.transpose(gate, (1, 0, 2))
+    kw = dict(lif=LIF, stride=stride)
+    v_d, s_d = event_pool_window(v0, w, x_nte, g_nte, alive, **kw)
+    outs = [event_pool_window(v0, w, x_nte, g_nte, alive, tiles=tiles, **kw),
+            event_pool_window(v0, w, x_nte, g_nte, alive, tiles=tiles,
+                              use_pallas=False, **kw)]
+    _check_tile_contract(v0, 0, tiles, grid, (Ho, Wo), alive, v_d, s_d,
+                         outs)
+
+
+# ---------------------------------------------------------------------------
+# Driver-level parity on a prime-geometry three-layer program.
+# ---------------------------------------------------------------------------
+
+def _lif(leak=0.0625, reset="zero"):
+    return LifParams(threshold=1.0, leak=leak, reset_mode=reset,
+                     state_clip=8.0)
+
+
+def _prime_spec(reset="zero"):
+    l1 = EConvSpec("conv", (11, 13, 2), 4, kernel=3, padding=1,
+                   lif=_lif(reset=reset))
+    l2 = EConvSpec("pool", l1.out_shape, 4, kernel=2, stride=2,
+                   lif=_lif(0.03125, reset=reset))
+    l3 = EConvSpec("fc", l2.out_shape, 3, lif=_lif(reset=reset))
+    return SNNSpec(layers=(l1, l2, l3), n_timesteps=8, n_classes=3)
+
+
+def _window_inputs(spec, N=3, T=4, E=8, seed=0):
+    H, W, C = spec.layers[0].in_shape
+    rng = np.random.default_rng(seed)
+    xyc, gate = _corner_events(rng, T, N, E, H, W, C)
+    alive = np.ones((T, N), np.float32)
+    alive[-1, 1] = 0.0
+    gate = gate.at[-1, 1, :].set(0.0)
+    return xyc, gate, jnp.asarray(alive), jnp.zeros((N,), jnp.int32)
+
+
+def _run_window(spec, params, policy, use_pallas, inputs, N=3):
+    prog = compile_program(spec, policy=policy)
+    states = tuple(padded_state(op, n_slots=N) for op in prog.ops)
+    cc = jnp.zeros((N, spec.n_classes), jnp.float32)
+    xyc, gate, alive, pre_dt = inputs
+    return window_step(params, states, cc, xyc, gate, alive, pre_dt,
+                       program=prog, use_pallas=use_pallas)
+
+
+@pytest.mark.parametrize("use_pallas", [False, None],
+                         ids=["ref", "pallas"])
+@pytest.mark.parametrize("fusion", [FUSED_WINDOW, FUSED_NETWORK])
+def test_window_step_tile_sparsity_bitwise(rng_key, fusion, use_pallas):
+    """tile_sparsity on/off is bitwise invisible under both lowerings."""
+    spec = _prime_spec()
+    params = init_snn(rng_key, spec)
+    inputs = _window_inputs(spec)
+
+    on = _run_window(spec, params,
+                     ExecutionPolicy(fusion_policy=fusion), use_pallas,
+                     inputs)
+    off = _run_window(spec, params,
+                      ExecutionPolicy(fusion_policy=fusion,
+                                      tile_sparsity=False), use_pallas,
+                      inputs)
+    oracle = _run_window(spec, params,
+                         ExecutionPolicy(fusion_policy=PER_STEP), False,
+                         inputs)
+
+    # the comparison is non-vacuous: the bitmaps really are sparse here
+    prog = compile_program(spec,
+                           policy=ExecutionPolicy(fusion_policy=fusion))
+    tiles = window_tile_maps(prog, inputs[0], inputs[1])
+    assert int(np.asarray(tiles[0]).sum()) < tiles[0].size
+
+    def flat(out):
+        states, cc, counts, drops = out
+        return list(states) + [cc, counts, drops]
+
+    for x, y, z in zip(flat(on), flat(off), flat(oracle)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+
+
+def test_soft_reset_runs_dense(rng_key):
+    """Soft-reset programs silently bypass tiles and stay oracle-exact."""
+    spec = _prime_spec(reset="subtract")
+    params = init_snn(rng_key, spec)
+    inputs = _window_inputs(spec, seed=3)
+    prog = compile_program(
+        spec, policy=ExecutionPolicy(fusion_policy=FUSED_WINDOW))
+    assert prog.tile_sparsity is True
+    assert not effective_tile_sparsity(prog)
+
+    fused = _run_window(spec, params,
+                        ExecutionPolicy(fusion_policy=FUSED_WINDOW), False,
+                        inputs)
+    oracle = _run_window(spec, params,
+                         ExecutionPolicy(fusion_policy=PER_STEP), False,
+                         inputs)
+    for x, y in zip(list(fused[0]) + list(fused[1:]),
+                    list(oracle[0]) + list(oracle[1:])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_window_ops_reject_tiles_under_soft_reset():
+    soft = LifParams(reset_mode="subtract")
+    v = jnp.zeros((1, 5, 5, 2), jnp.float32)
+    ev = jnp.zeros((1, 2, 3, 3), jnp.int32)
+    g = jnp.zeros((1, 2, 3), jnp.float32)
+    a = jnp.ones((1, 2), jnp.float32)
+    t = jnp.ones((1, 1, 1), jnp.int32)
+    with pytest.raises(ValueError, match="hard-reset"):
+        event_conv_window(v, jnp.zeros((3, 3, 2, 2)), ev, g, a, lif=soft,
+                          halo=1, tiles=t)
+    with pytest.raises(ValueError, match="hard-reset"):
+        event_pool_window(v, jnp.zeros((2,)), ev, g, a, lif=soft,
+                          stride=2, tiles=t)
+
+
+def test_policy_tile_sparsity_validation():
+    with pytest.raises(ValueError, match="tile_sparsity must be a bool"):
+        ExecutionPolicy(tile_sparsity="yes")
+    assert str(ExecutionPolicy(tile_sparsity=False)).endswith(
+        "/no-tile-sparsity")
+    assert "no-tile-sparsity" not in str(ExecutionPolicy())
+
+
+def test_apply_idle_decay_soft_reset_passthrough(rng_key):
+    """Soft-reset slabs pass through the idle flush bit-identically."""
+    spec = _prime_spec(reset="subtract")
+    prog = compile_program(spec, policy=ExecutionPolicy())
+    states = tuple(padded_state(op, n_slots=2) for op in prog.ops)
+    out = apply_idle_decay(states, jnp.zeros((2,), jnp.int32), program=prog)
+    for a, b in zip(out, states):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
