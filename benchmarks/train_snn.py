@@ -1,0 +1,117 @@
+"""Training-loop benchmark: surrogate-gradient fit -> quantize -> serve.
+
+The trainable-datapath claim, measured end to end: a fixed-seed
+`train/snn_loop.fit` run (QAT on) must actually descend its loss curve
+and lift eval accuracy over the untrained init, and the trained net —
+lowered with `quantize_net(per_channel=False)`, the grid QAT trained
+against — must serve through `EventServeEngine` with the usual
+events/J headline.  Everything here is deterministic (pure (seed, index)
+data cursor, jitted step), so the regression gate can pin the learning
+signal itself: ``train_loss_drop_min`` guards against a silent optimizer/
+gradient breakage that would leave serving green but learning dead, and
+``acc_gain_min`` pins the trained-over-untrained accuracy margin.
+
+Emits ``BENCH_train_snn.json`` for `benchmarks/check_regression.py`.
+
+    PYTHONPATH=src python -m benchmarks.train_snn [--fast]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core.policies import ExecutionPolicy
+from repro.core.quant import quantize_net
+from repro.core.sne_net import init_snn, tiny_net
+from repro.data.events_ds import TINY, batch_at
+from repro.serve.event_engine import EventRequest, EventServeEngine
+from repro.serve.telemetry import summarize
+from repro.train.snn_loop import TrainConfig, evaluate, fit
+
+SLOTS = 2
+WINDOW = 4
+
+
+def serve_trained(qn, n_requests=4, seed=1):
+    """Serve a synthetic cohort with the trained quantized net."""
+    spikes, labels = batch_at(seed, 10 ** 6, n_requests, TINY)
+    reqs = [EventRequest.from_dense(i, spikes[i]) for i in range(n_requests)]
+    eng = EventServeEngine(qn.spec, qn.params_for("f32-carrier"),
+                           n_slots=SLOTS, window=WINDOW, use_pallas=False,
+                           policy=ExecutionPolicy())
+    t0 = time.time()
+    eng.run(reqs)
+    wall = time.time() - t0
+    agg = summarize([r.telemetry for r in reqs])
+    preds = np.asarray([r.prediction for r in reqs])
+    return {
+        "wall_s": wall,
+        "events": agg["total_events"],
+        "events_per_joule": agg["events_per_joule"],
+        "served_acc": float(np.mean(preds == np.asarray(labels))),
+    }
+
+
+def main(fast: bool = False) -> None:
+    print("train_snn [surrogate-gradient fit -> QAT quantize -> serve]")
+    steps = 10 if fast else 60
+    cfg = TrainConfig(steps=steps, batch=4, lr=3e-3, seed=0, qat=True)
+    spec = tiny_net()
+
+    t0 = time.time()
+    result = fit(spec, TINY, cfg)
+    train_wall = time.time() - t0
+    head = float(np.mean(result.losses[:3]))
+    tail = float(np.mean(result.losses[-3:]))
+    loss_drop = head - tail
+    print(f"  {steps} steps in {train_wall:.1f}s: loss "
+          f"{head:.3f} -> {tail:.3f} (drop {loss_drop:.3f}), "
+          f"{train_wall / steps * 1e3:.0f} ms/step")
+
+    n_eval = 16 if fast else 32
+    acc = evaluate(spec, result.params, TINY, n=n_eval, qat=True)
+    acc0 = evaluate(spec, init_snn(jax.random.PRNGKey(cfg.seed), spec),
+                    TINY, n=n_eval, qat=True)
+    acc_gain = acc - acc0
+    print(f"  eval accuracy: trained {acc:.3f} vs untrained {acc0:.3f} "
+          f"(gain {acc_gain:+.3f}, n={n_eval})")
+    # the benchmark's own sanity gate: training must actually learn
+    assert loss_drop > 0.0, (head, tail)
+    assert acc > acc0, (acc, acc0)
+
+    # lower onto the exact grid QAT trained against and serve it
+    qn = quantize_net(result.params, spec, per_channel=False)
+    served = serve_trained(qn)
+    print(f"  served trained net: {served['events']:.0f} events, "
+          f"acc {served['served_acc']:.2f}, "
+          f"{served['events_per_joule']:.3e} events/J "
+          f"({served['wall_s']:.1f}s wall)")
+
+    out = {
+        "bench": "train_snn",
+        "config": {"net": "tiny_net", "steps": steps, "batch": cfg.batch,
+                   "qat": True, "seed": cfg.seed, "window": WINDOW,
+                   "slots": SLOTS, "use_pallas": False},
+        "train_wall_s": train_wall,
+        "ms_per_step": train_wall / steps * 1e3,
+        "loss_head": head,
+        "loss_tail": tail,
+        "train_loss_drop": loss_drop,
+        "trained_acc": acc,
+        "untrained_acc": acc0,
+        "acc_gain": acc_gain,
+        "served_acc": served["served_acc"],
+        "events": served["events"],
+        "events_per_joule": served["events_per_joule"],
+    }
+    with open("BENCH_train_snn.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print("  wrote BENCH_train_snn.json")
+
+
+if __name__ == "__main__":
+    main(fast="--fast" in sys.argv)

@@ -109,6 +109,12 @@ def main():
                     help="local = single-device engine (the parity "
                     "oracle); mesh = slot axis sharded across the visible "
                     "JAX devices with per-shard idle-skip compaction")
+    ap.add_argument("--weights", choices=("random", "trained"),
+                    default="random",
+                    help="random = init_snn(seed) synthetic weights; "
+                    "trained = the bundled surrogate-gradient-trained "
+                    "tiny-gesture checkpoint "
+                    "(train/snn_loop.load_trained_tiny)")
     ap.add_argument("--mode", choices=("sync", "streaming"), default="sync",
                     help="sync = EventServeEngine.run (the parity oracle); "
                     "streaming = the double-buffered StreamingRuntime under "
@@ -122,11 +128,21 @@ def main():
                     "queued request expires and a running one is evicted")
     args = ap.parse_args()
 
-    spec = tiny_net()
-    params = init_snn(jax.random.PRNGKey(args.seed), spec)
-    if args.dtype_policy == INT8_NATIVE:
-        qn = quantize_net(params, spec)
+    if args.weights == "trained":
+        from repro.train.snn_loop import load_trained_tiny
+        spec, params, meta = load_trained_tiny()
+        print(f"=== trained checkpoint: {int(meta['steps'])} steps, "
+              f"eval acc {float(meta['eval_acc']):.3f}, "
+              f"qat={bool(meta['qat'])} ===")
+        # serve what training saw: the layer-shared int4 grid
+        qn = quantize_net(params, spec, per_channel=False)
         spec, params = qn.spec, qn.params_for(args.dtype_policy)
+    else:
+        spec = tiny_net()
+        params = init_snn(jax.random.PRNGKey(args.seed), spec)
+        if args.dtype_policy == INT8_NATIVE:
+            qn = quantize_net(params, spec)
+            spec, params = qn.spec, qn.params_for(args.dtype_policy)
     policy = ExecutionPolicy(dtype_policy=args.dtype_policy,
                              fusion_policy=args.fusion_policy,
                              idle_skip=not args.no_idle_skip,

@@ -3,30 +3,33 @@ quantize to the SNE integer domain, validate the event path, and report
 Table-I-style energy/throughput from measured event counts.
 
     PYTHONPATH=src python examples/train_dvs_gesture.py \
-        [--steps 300] [--scale tiny|nmnist|full]
+        [--steps 300] [--scale tiny|nmnist|full] [--qat] \
+        [--mix-recording] [--save-net out.npz]
 
 ``tiny`` (default) is CPU-friendly; ``nmnist``/``full`` use the paper's
 geometries (full = the Fig. 6 IBM-DVS-Gesture network; slow on CPU).
-Training = dense path + surrogate gradients + 4-bit QAT — the JAX twin of
-the paper's SLAYER setup (§IV-B) with the SNE-LIF neuron model.
+Training runs through ``train/snn_loop.fit`` — surrogate gradients over
+the compiled layer program's dense twin, optional 4-bit QAT — the JAX
+twin of the paper's SLAYER setup (§IV-B) with the SNE-LIF neuron model.
+``--mix-recording`` folds windows of the bundled DVS sample into each
+batch; ``--save-net`` writes the single-file ``.npz`` artifact that
+``train/snn_loop.load_trained_tiny`` and the serving examples consume.
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import events as ev
 from repro.core.engine import (SneConfig, inference_energy_j,
                                inference_rate_hz)
-from repro.core.sne_net import (ce_loss, default_capacities, dense_apply,
-                                dvs_gesture_net, event_predict, init_snn,
-                                nmnist_net, predict, quantize_snn, tiny_net)
-from repro.data.events_ds import DVS_GESTURE, NMNIST, TINY, batch_at
-from repro.optim import adamw_init, adamw_update
-from repro.optim.schedules import warmup_cosine
-from repro.train import checkpoint as ck
-from repro.train.fault import PreemptionGuard, StepWatchdog
+from repro.core.sne_net import (default_capacities, dense_apply,
+                                dvs_gesture_net, event_predict,
+                                nmnist_net, predict, tiny_net)
+from repro.core.quant import quantize_net
+from repro.data.events_ds import (DVS_GESTURE, NMNIST, TINY, batch_at,
+                                  load_recording, recording_dense_windows,
+                                  sample_recording_path)
+from repro.train.snn_loop import TrainConfig, evaluate, fit, save_net
 
 
 def get_setup(scale: str):
@@ -47,61 +50,56 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--test-n", type=int, default=64)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--qat", action="store_true",
+                    help="straight-through int4 fake-quant during training")
+    ap.add_argument("--mix-recording", action="store_true",
+                    help="mix bundled-recording windows into each batch "
+                         "(tiny scale only)")
+    ap.add_argument("--save-net", default="",
+                    help="write the trained net as a single .npz artifact")
     args = ap.parse_args()
 
     spec, ds = get_setup(args.scale)
-    params = init_snn(jax.random.PRNGKey(args.seed), spec)
-    opt = adamw_init(params)
-    sched = warmup_cosine(args.lr, max(args.steps // 10, 1), args.steps)
+    cfg = TrainConfig(steps=args.steps, batch=args.batch, lr=args.lr,
+                      seed=args.seed, qat=args.qat)
 
-    def loss_fn(params, spikes, labels):
-        def one(s, l):
-            out, _ = dense_apply(params, spec, s, train=True, qat=True)
-            return ce_loss(out, l)
-        return jnp.mean(jax.vmap(one)(spikes, labels))
+    recording = None
+    if args.mix_recording:
+        if args.scale != "tiny":
+            raise SystemExit("--mix-recording needs --scale tiny (the "
+                             "bundled sample is 12x12)")
+        rec = load_recording(sample_recording_path())
+        recording = recording_dense_windows(rec, spec.in_shape,
+                                            spec.n_timesteps, 1000)
+        print(f"mixing {int(recording[0].shape[0])} recording windows "
+              f"(label {rec.label}) into training batches")
 
-    @jax.jit
-    def step(params, opt, spikes, labels):
-        l, g = jax.value_and_grad(loss_fn)(params, spikes, labels)
-        params, opt, m = adamw_update(g, opt, params, sched(opt.step),
-                                      weight_decay=0.0)
-        return params, opt, l
+    result = fit(spec, ds, cfg, ckpt_dir=args.ckpt_dir or None,
+                 ckpt_every=100, recording=recording, log_every=25)
+    params = result.params
+    print(f"trained {cfg.steps - result.start_step} steps in "
+          f"{result.wall_time_s:.0f}s, final loss {result.losses[-1]:.4f}")
 
-    start = 0
-    if args.ckpt_dir:
-        last = ck.latest(args.ckpt_dir)
-        if last is not None:
-            (params, opt), ex = ck.restore(args.ckpt_dir, last,
-                                           (params, opt))
-            start = ex["next_step"]
-            print(f"resumed from step {start}")
+    acc = evaluate(spec, params, ds, n=args.test_n, seed=args.seed + 1,
+                   qat=args.qat)
+    print(f"eval accuracy (program forward): {acc:.3f}")
 
-    guard, wd = PreemptionGuard(), StepWatchdog()
-    t0 = time.time()
-    for i in range(start, args.steps):
-        spikes, labels = batch_at(args.seed, i, args.batch, ds)
-        wd.start()
-        params, opt, l = step(params, opt, spikes, labels)
-        wd.stop(i)
-        if i % 25 == 0 or i == args.steps - 1:
-            print(f"step {i:4d}  loss {float(l):.4f}  "
-                  f"({time.time() - t0:.0f}s)")
-        if args.ckpt_dir and ((i + 1) % 100 == 0 or guard.requested):
-            ck.save(args.ckpt_dir, i + 1, (params, opt),
-                    extras={"next_step": i + 1})
-        if guard.requested:
-            print("preempted; checkpointed cleanly")
-            return
-    guard.restore()
+    if args.save_net:
+        save_net(args.save_net, params,
+                 meta={"steps": cfg.steps, "seed": cfg.seed,
+                       "qat": int(cfg.qat), "loss": result.losses[-1],
+                       "eval_acc": acc, "scale": args.scale})
+        print(f"saved trained net -> {args.save_net}")
 
-    # --- evaluation: float dense, QAT dense, SNE-quantized event path ---
+    # --- evaluation: QAT dense vs SNE-quantized event path ---
     spikes, labels = batch_at(args.seed + 1, 10**6, args.test_n, ds)
-    qp, qspec = quantize_snn(params, spec)
+    qnet = quantize_net(params, spec, per_channel=False)
+    qp, qspec = qnet.params_for("f32-carrier"), qnet.spec
     caps = default_capacities(qspec, activity=0.2, slack=6.0)
     acc_dense = acc_event = agree = 0
     total_events = 0.0
     for i in range(args.test_n):
-        out, _ = dense_apply(params, spec, spikes[i], qat=True)
+        out, _ = dense_apply(params, spec, spikes[i], qat=args.qat)
         pd = int(predict(out))
         stream = ev.dense_to_events(spikes[i], ev.capacity_for(
             spikes[i].shape, 0.3, slack=4.0))
@@ -111,15 +109,15 @@ def main():
         agree += int(pe) == pd
         total_events += float(stats.total_events)
     n = args.test_n
-    print(f"\naccuracy: dense(QAT)={acc_dense / n:.3f}  "
+    print(f"\naccuracy: dense={acc_dense / n:.3f}  "
           f"event(SNE int domain)={acc_event / n:.3f}  "
           f"path agreement={agree / n:.3f}")
 
-    cfg = SneConfig(n_slices=8)
+    cfg_hw = SneConfig(n_slices=8)
     mean_ev = total_events / n
     print(f"mean events/inference: {mean_ev:.0f}")
-    print(f"SNE energy: {inference_energy_j(cfg, mean_ev) * 1e6:.2f} uJ/inf, "
-          f"rate: {inference_rate_hz(cfg, mean_ev):.0f} inf/s "
+    print(f"SNE energy: {inference_energy_j(cfg_hw, mean_ev) * 1e6:.2f} "
+          f"uJ/inf, rate: {inference_rate_hz(cfg_hw, mean_ev):.0f} inf/s "
           f"(paper Table I @DVS-Gesture: 80-261 uJ/inf, 141-43 inf/s)")
 
 

@@ -60,7 +60,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import events as ev
-from repro.core.econv import EConvParams, EConvSpec, EConvStats, _halo
+from repro.core.econv import (EConvParams, EConvSpec, EConvStats, _halo,
+                              dense_forward)
 from repro.core.lif import (LifParams, apply_leak, fire_and_reset,
                             idle_decay, supports_idle_skip)
 # the policy names live in the leaf module `core.policies` (see its
@@ -69,7 +70,7 @@ from repro.core.policies import (DTYPE_POLICIES, F32_CARRIER, FUSED_NETWORK,
                                  FUSED_WINDOW, FUSION_POLICIES, INT8_NATIVE,
                                  PER_STEP, ExecutionPolicy, resolve_policy)
 from repro.core.policies import all_policies as all_policies  # noqa: F401
-from repro.core.quant import INT8_MAX, INT8_MIN
+from repro.core.quant import INT8_MAX, INT8_MIN, fake_quant_weights
 from repro.kernels.event_conv.ops import (event_conv_batched,
                                           event_conv_window)
 from repro.kernels.event_fc.ops import event_fc_batched, event_fc_window
@@ -1206,3 +1207,60 @@ def run_stream(program: LayerProgram, params: Sequence[EConvParams],
         s, _, st = layer_event_forward(op, p, s, cap, n_timesteps)
         stats_all.append(st)
     return s, tuple(stats_all)
+
+
+# ---------------------------------------------------------------------------
+# Dense differentiable driver — the training twin of the event executors.
+# ---------------------------------------------------------------------------
+
+def dense_program_forward(program: LayerProgram,
+                          params: Sequence[EConvParams],
+                          spikes: jnp.ndarray, train: bool = False,
+                          qat: bool = False):
+    """Differentiable dense-frame forward over the compiled op chain.
+
+    Runs the layer chain exactly as compiled — ``program.ops`` in order,
+    each op's spec and LIF plan — on dense ``(T, H, W, C)`` spike frames:
+    one `lax.scan` of `core.lif.lif_step` per op (via
+    `core.econv.dense_forward`).  That is the same ``leak -> integrate ->
+    clip -> fire -> reset`` boundary arithmetic the event drivers execute
+    (:func:`layer_timestep`, :func:`layer_event_forward`), sharing
+    `core.lif.apply_leak` / ``state_clip`` / the reset rule verbatim:
+
+      * ``train=False`` — the hard threshold.  On binary spike inputs this
+        computes the function the serving :func:`window_step` serves
+        (bitwise for integer-domain nets, where both paths do exact
+        integer arithmetic in their carriers).
+      * ``train=True`` — the fire routes through `core.lif.spike_fn`'s
+        custom-VJP fast-sigmoid surrogate so ``jax.grad`` flows (BPTT
+        through the scan).  The forward values are identical to
+        ``train=False``; only the backward rule differs — the executor's
+        forward IS the function the gradients flow through.
+
+    ``qat=True`` fake-quantizes conv/fc weights onto the *layer-shared*
+    int4 deployment grid (`core.quant.fake_quant_weights` with
+    ``per_channel=False`` — exactly the execution grid
+    `core.quant.quantize_net` lowers onto, so the QAT forward equals the
+    deployed ``codes * shared_scale`` model bitwise) with straight-through
+    gradients; pool layers keep their unit synapses.
+
+    Only the float-carrier policy trains (int8-native storage carries no
+    gradients); quantized serving parity is proven by the serving tests.
+    Returns ``(out_spikes (T, 1, 1, n_classes), acts)`` like
+    `core.sne_net.dense_apply`.
+    """
+    if program.dtype_policy != F32_CARRIER:
+        raise ValueError(
+            f"dense_program_forward trains the {F32_CARRIER!r} datapath; "
+            f"got a {program.dtype_policy!r} program — train in the "
+            f"carrier domain and lower with core.quant.quantize_net")
+    if len(params) != len(program.ops):
+        raise ValueError("need one params entry per compiled op")
+    x = spikes
+    acts = []
+    for op, p in zip(program.ops, params):
+        if qat and op.kind != "pool":
+            p = EConvParams(w=fake_quant_weights(p.w, per_channel=False))
+        x, _ = dense_forward(p, op.spec, x, train=train)
+        acts.append(x)
+    return x, acts

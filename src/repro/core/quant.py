@@ -83,6 +83,37 @@ def fake_quant_weights(w: jnp.ndarray, per_channel: bool = True) -> jnp.ndarray:
     return q * s
 
 
+def fake_quant_net(params: Sequence[EConvParams], spec: "SNNSpec",
+                   per_channel: bool = False) -> List[EConvParams]:
+    """QAT view of a whole network on the int4 deployment grid.
+
+    Returns per-layer params whose conv/fc weights are fake-quantized
+    (:func:`fake_quant_weights`, straight-through gradients); pool layers
+    pass through untouched (unit synapses carry no codes).  The default
+    ``per_channel=False`` is the *layer-shared execution grid*: the same
+    ``weight_scale(w, per_channel=False)`` + round + clip arithmetic
+    :func:`quantize_net` lowers onto, so for any weights
+
+        fake_quant_net(params, spec)[i].w
+            == quantize_net(params, spec, per_channel=False)
+                   .dequantized_params()[i].w        (bitwise; tested)
+
+    — training against this view makes the dense QAT forward *equal* the
+    deployed integer model, which is what keeps a trained-then-
+    ``quantize_net`` checkpoint servable under ``dtype_policy=
+    "int8-native"`` without an accuracy cliff.  It also keeps the weight
+    scale honest for :func:`_integer_lif`: a QAT-converged layer's scale
+    reflects the weights the codes will actually express.
+    """
+    out: List[EConvParams] = []
+    for p, l in zip(params, spec.layers):
+        if l.kind == "pool":
+            out.append(p)
+        else:
+            out.append(EConvParams(w=fake_quant_weights(p.w, per_channel)))
+    return out
+
+
 def quantize_weights_int(w: jnp.ndarray,
                          per_channel: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Deployment: integer weight codes (int8 storage of int4 values) + scale."""

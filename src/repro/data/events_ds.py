@@ -425,6 +425,41 @@ def segment_recording(rec: DVSRecording, in_shape: Tuple[int, int, int],
     return out
 
 
+def recording_dense_windows(rec: DVSRecording,
+                            in_shape: Tuple[int, int, int],
+                            n_timesteps: int, window_us: int
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Densify a recording into training windows ``(S, T, H, W, C)``.
+
+    Bins every ``n_timesteps * window_us`` segment exactly as
+    :func:`segment_recording` does for serving — same segment bounds, same
+    :func:`recording_to_stream` binning, same dedupe-to-binary semantics —
+    then scatters each segment's events into a dense spike tensor.  This
+    turns the bundled sensor recording into a (small) labelled training
+    set: `train.snn_loop.fit` mixes these real windows into the synthetic
+    stream, so the net trains on the very tensors the serving engine
+    replays.  Every window inherits the recording's label (``None`` maps
+    to class 0); returns ``(spikes (S, T, H, W, C), labels (S,))``.
+    """
+    seg_us = n_timesteps * window_us
+    n_seg = max(1, -(-rec.duration_us // seg_us))
+    t0 = int(rec.t[0]) if rec.n_events else 0
+    bounds = np.searchsorted(rec.t, t0 + seg_us * np.arange(n_seg + 1))
+    wins = []
+    for i in range(n_seg):
+        lo, hi = bounds[i], bounds[i + 1]
+        seg = DVSRecording(t=rec.t[lo:hi], x=rec.x[lo:hi], y=rec.y[lo:hi],
+                           p=rec.p[lo:hi], width=rec.width,
+                           height=rec.height, label=rec.label, name=rec.name)
+        stream, _ = recording_to_stream(seg, in_shape, n_timesteps,
+                                        window_us=window_us,
+                                        t0_us=t0 + i * seg_us)
+        wins.append(ev.events_to_dense(stream, (n_timesteps,) + in_shape))
+    labels = np.full((n_seg,), 0 if rec.label is None else int(rec.label),
+                     np.int32)
+    return jnp.stack(wins), jnp.asarray(labels)
+
+
 class ReplayClient:
     """Replays recording segments into an engine at sensor pace.
 

@@ -1,0 +1,319 @@
+"""Surrogate-gradient training through the layer-program executor.
+
+The eCNN trains on the *same* compiled op chain the serving engine
+executes: the forward is `core.layer_program.dense_program_forward` —
+``program.ops`` in order, `core.lif.lif_step`'s ``leak -> integrate ->
+clip -> fire -> reset`` per timestep — with the fire routed through
+`core.lif.spike_fn`'s custom-VJP fast-sigmoid surrogate so ``jax.grad``
+backpropagates through time (the JAX twin of the paper's SLAYER + SNE-LIF
+setup, §IV-B).  ``qat=True`` adds straight-through fake-quantization of
+conv/fc weights onto the int4 *deployment* grid
+(`core.quant.fake_quant_net`), so the trained weights are the ones
+`core.quant.quantize_net` will express exactly.
+
+Pieces (mirroring `train/loop.py`'s LM loop):
+
+  * :func:`batch_loss` — rate-decoded loss over a batch (cross-entropy or
+    the SLAYER spike-count target, `core.sne_net`);
+  * :func:`make_train_step` — the jitted pure step: value_and_grad +
+    `optim/` update (AdamW or momentum SGD) under a warmup-cosine
+    schedule;
+  * :func:`fit` — the host driver: deterministic cursor-checkpointable
+    data (`data.events_ds.batch_at` is a pure function of (seed, index)),
+    optional real-recording window mixing
+    (`data.events_ds.recording_dense_windows`), atomic checkpoint/resume
+    (`train/checkpoint.py`, bitwise — resumed losses equal the
+    uninterrupted run's), preemption + straggler hooks (`train/fault.py`);
+  * :func:`evaluate` — eval accuracy through the same program forward;
+  * :func:`save_net` / :func:`load_net` — the committed single-file
+    checkpoint artifact (compressed ``.npz``: ``format_version``,
+    per-layer ``w<i>`` float32 weights, ``meta_*`` training metadata);
+    :func:`load_trained_tiny` loads the bundled trained tiny-gesture net
+    (``data/samples/tiny_gesture_trained.npz``), which the serving golden
+    tests replay across the full policy matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.econv import EConvParams
+from repro.core.layer_program import (LayerProgram, compile_program,
+                                      dense_program_forward)
+from repro.core.sne_net import (SNNSpec, ce_loss, count_loss, init_snn,
+                                spike_counts, tiny_net)
+from repro.data.events_ds import (EventDatasetSpec, batch_at,
+                                  sample_recording_path)
+from repro.optim import adamw_init, adamw_update, sgd_init, sgd_update
+from repro.optim.schedules import warmup_cosine
+from repro.train import checkpoint as ckpt_lib
+from repro.train.fault import PreemptionGuard, StepWatchdog, with_retries
+
+LOSSES = ("ce", "count")
+OPTIMIZERS = ("adamw", "sgd")
+
+NET_FORMAT_VERSION = 1
+TRAINED_TINY_NAME = "tiny_gesture_trained.npz"
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """One surrogate-gradient training run, fully determined.
+
+    Every field feeds either the jitted step or the deterministic data
+    cursor, so two runs with equal configs produce bitwise-equal loss
+    curves (the golden-curve test pins exactly this).
+    """
+
+    steps: int = 100
+    batch: int = 8
+    lr: float = 3e-3
+    seed: int = 0
+    qat: bool = False
+    loss: str = "ce"            # "ce" | "count"
+    optimizer: str = "adamw"    # "adamw" | "sgd"
+    weight_decay: float = 0.0
+    warmup_frac: float = 0.1    # fraction of steps spent in warmup
+
+    def __post_init__(self):
+        if self.loss not in LOSSES:
+            raise ValueError(f"unknown loss {self.loss!r} "
+                             f"(expected one of {LOSSES})")
+        if self.optimizer not in OPTIMIZERS:
+            raise ValueError(f"unknown optimizer {self.optimizer!r} "
+                             f"(expected one of {OPTIMIZERS})")
+        if self.steps <= 0 or self.batch <= 0:
+            raise ValueError("steps and batch must be positive")
+
+
+def batch_loss(program: LayerProgram, params: Sequence[EConvParams],
+               spikes: jnp.ndarray, labels: jnp.ndarray,
+               qat: bool = False, loss: str = "ce") -> jnp.ndarray:
+    """Mean rate-decoded loss of a ``(B, T, H, W, C)`` batch."""
+
+    def one(s, lab):
+        out, _ = dense_program_forward(program, list(params), s,
+                                       train=True, qat=qat)
+        if loss == "count":
+            return count_loss(out, lab, program.spec)
+        return ce_loss(out, lab)
+
+    return jnp.mean(jax.vmap(one)(spikes, labels))
+
+
+def init_opt(params: Sequence[EConvParams], cfg: TrainConfig):
+    """Optimizer state for ``cfg.optimizer`` (pytree = the params list)."""
+    return (adamw_init(list(params)) if cfg.optimizer == "adamw"
+            else sgd_init(list(params)))
+
+
+def make_train_step(program: LayerProgram, cfg: TrainConfig):
+    """The jitted pure step: (params, opt, spikes, labels) -> updated.
+
+    Returns ``(params, opt, metrics)`` with ``metrics = {"loss", "lr"}``
+    (+ ``"grad_norm"`` under AdamW).  The schedule is warmup-cosine over
+    ``cfg.steps``, read off the optimizer's own step counter so a
+    checkpoint-resumed run continues the schedule exactly.
+    """
+    sched = warmup_cosine(cfg.lr, max(int(cfg.steps * cfg.warmup_frac), 1),
+                          cfg.steps)
+    frozen = tuple(op.kind == "pool" for op in program.ops)
+
+    @jax.jit
+    def step(params, opt, spikes, labels):
+        lval, grads = jax.value_and_grad(
+            lambda p: batch_loss(program, p, spikes, labels,
+                                 qat=cfg.qat, loss=cfg.loss))(params)
+        # Pool layers carry unit synapses on the integer datapath
+        # (quantize_net rejects non-integral pool weights): zero their
+        # gradients and pin the weights through the optimizer update so
+        # weight decay cannot drift them either.
+        grads = [EConvParams(w=jnp.zeros_like(g.w)) if f else g
+                 for g, f in zip(grads, frozen)]
+        lr = sched(opt.step)
+        if cfg.optimizer == "adamw":
+            new_params, opt, om = adamw_update(grads, opt, params, lr,
+                                               weight_decay=cfg.weight_decay)
+        else:
+            new_params, opt, om = sgd_update(grads, opt, params, lr)
+        params = [old if f else new
+                  for old, new, f in zip(params, new_params, frozen)]
+        metrics = dict(om)
+        metrics["loss"] = lval
+        metrics["lr"] = lr
+        return params, opt, metrics
+
+    return step
+
+
+class FitResult(NamedTuple):
+    """What :func:`fit` hands back to the caller."""
+
+    params: List[EConvParams]
+    losses: np.ndarray          # float32, one entry per executed step
+    start_step: int             # 0, or the checkpoint-resume point
+    wall_time_s: float
+
+
+def fit(spec: SNNSpec, ds: EventDatasetSpec, cfg: TrainConfig, *,
+        ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+        recording: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+        log_every: int = 0,
+        log_fn: Callable[[str], None] = print) -> FitResult:
+    """Train ``spec`` on the synthetic stream (+ optional real windows).
+
+    The data cursor is the step index (`batch_at` is pure in
+    (seed, index)), so checkpoint resume replays nothing and the resumed
+    loss curve is bitwise the uninterrupted one.  ``recording`` is an
+    optional ``(spikes (S, T, H, W, C), labels (S,))`` pair — e.g.
+    `data.events_ds.recording_dense_windows` of the bundled sample —
+    mixed in deterministically by replacing the last batch sample with
+    window ``i % S`` at step ``i``.  Checkpoints (params + optimizer
+    state) are atomic and preemption-triggered like `train/loop.py`'s.
+    """
+    program = compile_program(spec)
+    params = init_snn(jax.random.PRNGKey(cfg.seed), spec)
+    opt = init_opt(params, cfg)
+    start = 0
+    if ckpt_dir:
+        last = ckpt_lib.latest(ckpt_dir)
+        if last is not None:
+            (params, opt), extras = ckpt_lib.restore(ckpt_dir, last,
+                                                     (params, opt))
+            start = extras.get("next_step", last)
+            log_fn(f"[snn] restored step {last} -> resuming at {start}")
+    if recording is not None:
+        rec_spikes, rec_labels = recording
+        if int(rec_spikes.shape[0]) == 0:
+            raise ValueError("recording mix needs at least one window")
+
+    step_fn = make_train_step(program, cfg)
+    guard, watchdog = PreemptionGuard(), StepWatchdog()
+    losses: List[float] = []
+    t_begin = time.time()
+    for i in range(start, cfg.steps):
+        spikes, labels = batch_at(cfg.seed, i, cfg.batch, ds)
+        if recording is not None:
+            j = i % int(rec_spikes.shape[0])
+            spikes = spikes.at[cfg.batch - 1].set(
+                rec_spikes[j].astype(spikes.dtype))
+            labels = labels.at[cfg.batch - 1].set(
+                jnp.asarray(rec_labels[j], labels.dtype))
+        watchdog.start()
+        params, opt, metrics = step_fn(params, opt, spikes, labels)
+        lval = float(metrics["loss"])
+        dt = watchdog.stop(i)
+        losses.append(lval)
+        if log_every and (i % log_every == 0 or i == cfg.steps - 1):
+            log_fn(f"[snn] step {i:4d} loss {lval:.4f} "
+                   f"lr {float(metrics['lr']):.2e} {dt * 1e3:.0f} ms")
+        want_ckpt = ckpt_dir and ((i + 1) % ckpt_every == 0
+                                  or i == cfg.steps - 1 or guard.requested)
+        if want_ckpt:
+            with_retries(lambda: ckpt_lib.save(
+                ckpt_dir, i + 1, (params, opt),
+                extras={"next_step": i + 1}))
+        if guard.requested:
+            log_fn(f"[snn] preemption requested; checkpointed at "
+                   f"step {i + 1}, exiting cleanly")
+            break
+    guard.restore()
+    return FitResult(params=params,
+                     losses=np.asarray(losses, np.float32),
+                     start_step=start,
+                     wall_time_s=time.time() - t_begin)
+
+
+def evaluate(spec: SNNSpec, params: Sequence[EConvParams],
+             ds: EventDatasetSpec, n: int = 32, seed: int = 1,
+             qat: bool = False, cohort: int = 10 ** 6) -> float:
+    """Eval accuracy of the program forward on a held-out cohort.
+
+    ``(seed, cohort)`` index a `batch_at` batch disjoint from training
+    cursors (the same held-out convention `examples/train_dvs_gesture.py`
+    uses); the forward is the inference-mode executor twin
+    (``train=False``), so this measures what serving will see.
+    """
+    program = compile_program(spec)
+    spikes, labels = batch_at(seed, cohort, n, ds)
+
+    @jax.jit
+    def preds(spikes):
+        def one(s):
+            out, _ = dense_program_forward(program, list(params), s,
+                                           train=False, qat=qat)
+            return jnp.argmax(spike_counts(out))
+        return jax.vmap(one)(spikes)
+
+    return float(jnp.mean((preds(spikes) == labels).astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# The committed single-file checkpoint artifact (.npz).
+# ---------------------------------------------------------------------------
+
+def save_net(path: str, params: Sequence[EConvParams],
+             meta: Optional[dict] = None) -> None:
+    """Write a trained net as one compressed ``.npz`` artifact.
+
+    Layout: ``format_version``, ``n_layers``, per-layer float32 weights
+    ``w0..wN``, plus scalar/string training metadata under ``meta_<key>``
+    (steps, seed, eval accuracy, ... — whatever the trainer records).
+    Small enough to commit (the tiny net is ~1200 weights), unlike the
+    step-directory format `train/checkpoint.py` uses for resumable state.
+    """
+    arrs = {f"w{i}": np.asarray(p.w, np.float32)
+            for i, p in enumerate(params)}
+    extras = {f"meta_{k}": np.asarray(v) for k, v in (meta or {}).items()}
+    np.savez_compressed(path, format_version=NET_FORMAT_VERSION,
+                        n_layers=len(list(params)), **arrs, **extras)
+
+
+def load_net(path: str, spec: SNNSpec
+             ) -> Tuple[List[EConvParams], dict]:
+    """Load a :func:`save_net` artifact, validated against ``spec``.
+
+    Layer count and every weight shape must match the spec (computed via
+    `init_snn`'s shapes), so a stale artifact fails loudly instead of
+    mis-scattering.  Returns ``(params, meta)``.
+    """
+    ref = init_snn(jax.random.PRNGKey(0), spec)
+    with np.load(path) as z:
+        if int(z["format_version"]) != NET_FORMAT_VERSION:
+            raise ValueError(f"{path}: unsupported net format version "
+                             f"{int(z['format_version'])}")
+        if int(z["n_layers"]) != len(spec.layers):
+            raise ValueError(f"{path}: {int(z['n_layers'])} layers, spec "
+                             f"has {len(spec.layers)}")
+        params = []
+        for i, r in enumerate(ref):
+            w = z[f"w{i}"]
+            if tuple(w.shape) != tuple(r.w.shape):
+                raise ValueError(f"{path}: w{i} shape {w.shape} != spec "
+                                 f"shape {tuple(r.w.shape)}")
+            params.append(EConvParams(w=jnp.asarray(w, jnp.float32)))
+        meta = {k[len("meta_"):]: z[k][()] for k in z.files
+                if k.startswith("meta_")}
+    return params, meta
+
+
+def trained_net_path(name: str = TRAINED_TINY_NAME) -> str:
+    """Path of the bundled trained checkpoint (committed artifact)."""
+    return sample_recording_path(name)
+
+
+def load_trained_tiny() -> Tuple[SNNSpec, List[EConvParams], dict]:
+    """The bundled trained tiny-gesture net: ``(spec, params, meta)``.
+
+    Trained by ``examples/train_dvs_gesture.py --save-net`` (QAT on, the
+    bundled recording mixed in); the serving golden tests replay exactly
+    this net across the full policy matrix.
+    """
+    spec = tiny_net()
+    params, meta = load_net(trained_net_path(), spec)
+    return spec, params, meta

@@ -1,0 +1,204 @@
+"""Unit tests for the CI regression gate itself.
+
+`benchmarks/check_regression.py` guards every benchmark (events/J floor,
+``*_min`` / ``*_max`` pins, ``*_monotone_up`` / ``*_monotone_down`` shape
+pins, config cross-checks, never-ran detection) but until now had no
+direct tests — a bug here silently green-lights real regressions.  Each
+pin kind is exercised with synthetic BENCH/baseline fixtures in BOTH
+directions: a conforming run passes, a violating run fails with the
+right error.
+
+benchmarks/ is not an installed package, so the module is loaded straight
+from its file path.
+"""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_CR_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "benchmarks", "check_regression.py")
+_spec = importlib.util.spec_from_file_location("check_regression", _CR_PATH)
+cr = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cr)
+
+BASE = {
+    "config": {"scale": "tiny", "fast": True},
+    "events_per_joule": 1000.0,
+}
+
+
+def _result(**over):
+    r = {"bench": "synthetic", "config": {"scale": "tiny", "fast": True},
+         "events_per_joule": 1000.0}
+    r.update(over)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# check_one: each pin kind, pass and fail
+# ---------------------------------------------------------------------------
+
+def test_headline_within_tolerance_passes():
+    assert cr.check_one(_result(events_per_joule=850.0), BASE, 0.2) == []
+
+
+def test_headline_below_floor_fails():
+    errs = cr.check_one(_result(events_per_joule=750.0), BASE, 0.2)
+    assert len(errs) == 1 and "regressed" in errs[0]
+
+
+def test_headline_floor_is_inclusive():
+    # exactly at the floor (ref * 0.8) is still OK
+    assert cr.check_one(_result(events_per_joule=800.0), BASE, 0.2) == []
+
+
+def test_config_mismatch_fails_without_comparing():
+    res = _result(config={"scale": "full", "fast": False},
+                  events_per_joule=10.0)   # would also regress — masked
+    errs = cr.check_one(res, BASE, 0.2)
+    assert len(errs) == 1 and "config mismatch" in errs[0]
+
+
+def test_min_pin_passes_and_fails():
+    base = dict(BASE, launch_ratio_min=2.0)
+    assert cr.check_one(_result(launch_ratio=2.5), base, 0.2) == []
+    errs = cr.check_one(_result(launch_ratio=1.5), base, 0.2)
+    assert len(errs) == 1 and "launch_ratio" in errs[0]
+
+
+def test_min_pin_missing_metric_fails():
+    # a benchmark that stopped reporting a pinned floor metric reads as
+    # 0.0 and fails — silence is not green
+    base = dict(BASE, launch_ratio_min=2.0)
+    errs = cr.check_one(_result(), base, 0.2)
+    assert len(errs) == 1 and "launch_ratio" in errs[0]
+
+
+def test_max_pin_passes_and_fails():
+    base = dict(BASE, p99_ms_max=50.0)
+    assert cr.check_one(_result(p99_ms=30.0), base, 0.2) == []
+    errs = cr.check_one(_result(p99_ms=80.0), base, 0.2)
+    assert len(errs) == 1 and "p99_ms" in errs[0]
+
+
+def test_max_pin_missing_metric_fails():
+    base = dict(BASE, p99_ms_max=50.0)
+    errs = cr.check_one(_result(), base, 0.2)
+    assert len(errs) == 1 and "p99_ms" in errs[0]
+
+
+def test_monotone_up_passes_and_fails():
+    base = dict(BASE, scaling_monotone_up=True)
+    assert cr.check_one(_result(scaling=[1.0, 2.0, 3.0]), base, 0.2) == []
+    for bad in ([3.0, 2.0, 1.0],      # inverted
+                [1.0, 1.0, 2.0],      # plateau is not *strictly* up
+                [1.0],                # a 1-point curve pins nothing
+                []):                  # missing curve
+        errs = cr.check_one(_result(scaling=bad), base, 0.2)
+        assert len(errs) == 1 and "increasing" in errs[0], bad
+
+
+def test_monotone_down_passes_and_fails():
+    base = dict(BASE, bytes_monotone_down=True)
+    assert cr.check_one(_result(bytes=[30.0, 20.0, 10.0]), base, 0.2) == []
+    for bad in ([10.0, 20.0], [10.0, 10.0], [10.0], []):
+        errs = cr.check_one(_result(bytes=bad), base, 0.2)
+        assert len(errs) == 1 and "decreasing" in errs[0], bad
+
+
+def test_falsy_shape_pin_is_disabled():
+    # a baseline can park a shape pin with a falsy value
+    base = dict(BASE, scaling_monotone_up=False)
+    assert cr.check_one(_result(scaling=[3.0, 1.0]), base, 0.2) == []
+
+
+def test_multiple_violations_all_reported():
+    base = dict(BASE, launch_ratio_min=2.0, p99_ms_max=50.0)
+    errs = cr.check_one(_result(events_per_joule=100.0, launch_ratio=1.0,
+                                p99_ms=99.0), base, 0.2)
+    assert len(errs) == 3
+
+
+def test_missing_headline_metric_raises():
+    # events_per_joule is the mandatory headline: a result without it is
+    # a malformed benchmark, not a soft failure
+    res = _result()
+    del res["events_per_joule"]
+    with pytest.raises(KeyError):
+        cr.check_one(res, BASE, 0.2)
+
+
+# ---------------------------------------------------------------------------
+# main(): file plumbing, never-ran detection, exit codes
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, name, obj):
+    p = tmp_path / name
+    p.write_text(json.dumps(obj))
+    return str(p)
+
+
+def _baseline_file(tmp_path, benches, **extra):
+    obj = {"_comment": "synthetic fixture — must be skipped by the loader"}
+    for b in benches:
+        obj[b] = dict(BASE, **extra)
+    return _write(tmp_path, "baselines.json", obj)
+
+
+def test_main_green_gate(tmp_path):
+    bl = _baseline_file(tmp_path, ["synthetic"])
+    res = _write(tmp_path, "BENCH_synthetic.json", _result())
+    assert cr.main([res, "--baseline", bl]) == 0
+
+
+def test_main_regression_exits_nonzero(tmp_path):
+    bl = _baseline_file(tmp_path, ["synthetic"])
+    res = _write(tmp_path, "BENCH_synthetic.json",
+                 _result(events_per_joule=1.0))
+    assert cr.main([res, "--baseline", bl]) == 1
+
+
+def test_main_tolerance_flag(tmp_path):
+    bl = _baseline_file(tmp_path, ["synthetic"])
+    res = _write(tmp_path, "BENCH_synthetic.json",
+                 _result(events_per_joule=550.0))
+    assert cr.main([res, "--baseline", bl]) == 1            # default 20%
+    assert cr.main([res, "--baseline", bl,
+                    "--tolerance", "0.5"]) == 0             # 45% drop OK
+
+
+def test_main_result_without_baseline_entry_fails(tmp_path):
+    bl = _baseline_file(tmp_path, ["synthetic"])
+    res = _write(tmp_path, "BENCH_unknown.json", _result(bench="unknown"))
+    ok = _write(tmp_path, "BENCH_synthetic.json", _result())
+    assert cr.main([res, ok, "--baseline", bl]) == 1
+
+
+def test_main_never_ran_baseline_fails(tmp_path):
+    # a benchmark with a committed baseline that CI quietly stopped
+    # running must fail the gate, not vacuously pass it
+    bl = _baseline_file(tmp_path, ["synthetic", "forgotten"])
+    res = _write(tmp_path, "BENCH_synthetic.json", _result())
+    assert cr.main([res, "--baseline", bl]) == 1
+
+
+def test_main_underscore_keys_are_not_benches(tmp_path):
+    # only the _comment key plus one real entry: the comment must not be
+    # reported as a never-ran bench
+    bl = _baseline_file(tmp_path, ["synthetic"])
+    res = _write(tmp_path, "BENCH_synthetic.json", _result())
+    assert cr.main([res, "--baseline", bl]) == 0
+
+
+def test_main_matches_committed_baseline_schema():
+    # the real baselines file must parse and every non-underscore entry
+    # must carry the mandatory headline + config the gate compares
+    path = os.path.join(os.path.dirname(_CR_PATH), "baselines.json")
+    with open(path) as f:
+        baselines = {k: v for k, v in json.load(f).items()
+                     if not k.startswith("_")}
+    assert baselines, "committed baselines.json has no benches"
+    for name, b in baselines.items():
+        assert "config" in b and "events_per_joule" in b, name

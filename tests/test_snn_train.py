@@ -1,0 +1,203 @@
+"""Training-loop regression tests: golden curve, resume, QAT lowering.
+
+The golden-curve test is `test_golden_replay.py`'s discipline applied to
+training: a fixed-seed 20-step `train/snn_loop.fit` run on the tiny net
+must reproduce a committed loss curve and final weights *bitwise* — any
+drift in the optimizer, the schedule, the surrogate VJP, the compiled op
+chain, or the synthetic data generator shows up as a bit flip here.
+
+Regenerate (only after an intentional change):
+
+    PYTHONPATH=src:tests python tests/test_snn_train.py --regen
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.quant import fake_quant_net, quantize_net
+from repro.core.sne_net import init_snn, tiny_net
+from repro.data.events_ds import TINY
+from repro.train.snn_loop import (TrainConfig, evaluate, fit, load_net,
+                                  load_trained_tiny, save_net)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "tiny_train_curve.npz")
+CURVE_CFG = TrainConfig(steps=20, batch=4, lr=3e-3, seed=0, qat=True)
+
+
+def _run_curve(cfg=CURVE_CFG, ckpt_dir=None, steps=None):
+    if steps is not None:
+        cfg = TrainConfig(steps=steps, batch=cfg.batch, lr=cfg.lr,
+                          seed=cfg.seed, qat=cfg.qat)
+    return fit(tiny_net(), TINY, cfg, ckpt_dir=ckpt_dir, ckpt_every=10)
+
+
+@pytest.fixture(scope="module")
+def curve():
+    return _run_curve()
+
+
+def test_golden_training_curve(curve):
+    assert os.path.exists(GOLDEN), (
+        f"golden file missing: {GOLDEN} — regenerate with "
+        f"PYTHONPATH=src:tests python tests/test_snn_train.py --regen")
+    with np.load(GOLDEN) as z:
+        np.testing.assert_array_equal(
+            curve.losses, z["losses"],
+            err_msg="training loss curve diverged bitwise from the golden "
+                    "run — optimizer/executor/data determinism broke (if "
+                    "intentional, regenerate tests/golden/)")
+        for i, p in enumerate(curve.params):
+            np.testing.assert_array_equal(
+                np.asarray(p.w), z[f"w{i}"],
+                err_msg=f"final weights of layer {i} diverged")
+
+
+def test_curve_actually_learns(curve):
+    # not bitwise — the sanity direction: the pinned curve must descend
+    assert float(np.mean(curve.losses[-5:])) < float(
+        np.mean(curve.losses[:5]))
+
+
+def test_fit_resume_is_bitwise(curve):
+    """A 20-step run interrupted at step 10 and resumed from its
+    checkpoint must finish with bitwise-identical weights and identical
+    tail losses — `batch_at`'s pure (seed, index) cursor plus the
+    optimizer-state checkpoint make resume exact.  Interruption is
+    simulated by deleting the final checkpoint of a completed run, so the
+    resumed run restores the mid-run step-10 state under the *same*
+    20-step config (and thus the same LR schedule)."""
+    import shutil
+    with tempfile.TemporaryDirectory() as d:
+        first = _run_curve(ckpt_dir=d)
+        assert first.start_step == 0
+        np.testing.assert_array_equal(first.losses, curve.losses)
+        shutil.rmtree(os.path.join(d, "step_00000020"))
+        second = _run_curve(ckpt_dir=d)
+        assert second.start_step == 10
+    np.testing.assert_array_equal(second.losses, curve.losses[10:])
+    for a, b in zip(second.params, curve.params):
+        np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+
+
+def test_pool_layers_stay_frozen(curve):
+    init = init_snn(jax.random.PRNGKey(CURVE_CFG.seed), tiny_net())
+    spec = tiny_net()
+    moved = False
+    for p0, p1, l in zip(init, curve.params, spec.layers):
+        if l.kind == "pool":
+            np.testing.assert_array_equal(np.asarray(p0.w), np.asarray(p1.w))
+        else:
+            moved |= bool(np.any(np.asarray(p0.w) != np.asarray(p1.w)))
+    assert moved
+
+
+def test_fit_with_recording_mix():
+    """Mixing bundled-recording windows into batches is deterministic and
+    trains on the recording's label (the example's --mix-recording path)."""
+    from repro.data.events_ds import (load_recording,
+                                      recording_dense_windows,
+                                      sample_recording_path)
+    spec = tiny_net()
+    rec = load_recording(sample_recording_path())
+    wins, labels = recording_dense_windows(rec, spec.in_shape,
+                                           spec.n_timesteps, 1000)
+    assert wins.shape[1:] == (spec.n_timesteps,) + spec.in_shape
+    assert wins.shape[0] == labels.shape[0] >= 1
+    assert set(np.unique(np.asarray(wins))) <= {0.0, 1.0}
+    np.testing.assert_array_equal(np.asarray(labels),
+                                  np.full(labels.shape, int(rec.label)))
+    cfg = TrainConfig(steps=2, batch=4)
+    a = fit(spec, TINY, cfg, recording=(wins, labels))
+    b = fit(spec, TINY, cfg, recording=(wins, labels))
+    np.testing.assert_array_equal(a.losses, b.losses)
+    with pytest.raises(ValueError, match="at least one window"):
+        fit(spec, TINY, cfg, recording=(wins[:0], labels[:0]))
+
+
+def test_train_config_validation():
+    with pytest.raises(ValueError, match="loss"):
+        TrainConfig(loss="mse")
+    with pytest.raises(ValueError, match="optimizer"):
+        TrainConfig(optimizer="lion")
+    with pytest.raises(ValueError, match="positive"):
+        TrainConfig(steps=0)
+
+
+# ---------------------------------------------------------------------------
+# QAT <-> deployment-grid consistency
+# ---------------------------------------------------------------------------
+
+def test_fake_quant_net_is_the_deployment_grid():
+    """What QAT trains against == what quantize_net deploys, bitwise:
+    fake-quant on the layer-shared grid reconstructs exactly the codes *
+    shared-scale the integer datapath executes."""
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(5), spec)
+    fq = fake_quant_net(params, spec)
+    dq = quantize_net(params, spec, per_channel=False).dequantized_params()
+    for i, (a, b, l) in enumerate(zip(fq, dq, spec.layers)):
+        if l.kind == "pool":
+            continue   # pool synapses pass through fake-quant untouched
+        np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w),
+                                      err_msg=f"layer {i}")
+
+
+def test_trained_checkpoint_lowers_to_int_domain(curve):
+    # the QAT-trained net must survive quantize_net's integer validation
+    # (threshold fits the 8-bit state, pool synapses integral)
+    qn = quantize_net(curve.params, tiny_net(), per_channel=False)
+    for c in qn.codes:
+        assert np.asarray(c).dtype == np.int8
+
+
+# ---------------------------------------------------------------------------
+# The committed trained artifact
+# ---------------------------------------------------------------------------
+
+def test_trained_checkpoint_beats_untrained_baseline():
+    spec, params, meta = load_trained_tiny()
+    assert int(meta["steps"]) >= 100 and bool(meta["qat"])
+    acc = evaluate(spec, params, TINY, n=32, qat=True)
+    acc0 = evaluate(spec, init_snn(jax.random.PRNGKey(0), spec), TINY,
+                    n=32, qat=True)
+    assert acc >= acc0 + 0.25, (acc, acc0)
+    assert acc >= 0.75, acc
+
+
+def test_save_load_net_roundtrip(tmp_path):
+    spec = tiny_net()
+    params = init_snn(jax.random.PRNGKey(9), spec)
+    path = str(tmp_path / "net.npz")
+    save_net(path, params, meta={"steps": 3, "note": "t"})
+    loaded, meta = load_net(path, spec)
+    assert int(meta["steps"]) == 3 and str(meta["note"]) == "t"
+    for a, b in zip(params, loaded):
+        np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+
+
+def test_load_net_rejects_wrong_spec(tmp_path):
+    from repro.core.sne_net import nmnist_net
+    spec = tiny_net()
+    path = str(tmp_path / "net.npz")
+    save_net(path, init_snn(jax.random.PRNGKey(0), spec), meta={})
+    with pytest.raises(ValueError, match="shape|layers"):
+        load_net(path, nmnist_net())
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        r = _run_curve()
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        np.savez_compressed(
+            GOLDEN, losses=r.losses,
+            **{f"w{i}": np.asarray(p.w) for i, p in enumerate(r.params)})
+        print(f"wrote {GOLDEN}: {len(r.losses)} losses, "
+              f"final {r.losses[-1]:.6f}")
+    else:
+        print(__doc__)

@@ -1,0 +1,142 @@
+"""Policy-matrix parity for the *trained* checkpoint.
+
+`test_golden_replay.py` pins serving on synthetic weights; this file
+extends the discipline to learned ones: the bundled surrogate-gradient
+QAT-trained tiny-gesture net (`train/snn_loop.load_trained_tiny`, the
+artifact `examples/train_dvs_gesture.py --save-net` committed) is lowered
+with `quantize_net(per_channel=False)` — the exact layer-shared grid QAT
+trained against — and served through EVERY `core.policies.all_policies()`
+cell on the bundled recording.  All cells must agree bitwise with the
+per-step f32 oracle and with a committed golden file, and the trained net
+must actually out-predict the untrained baseline on a synthetic cohort —
+proving the executor serves the same function the gradients flowed
+through, across every dtype/fusion/backend combination.
+
+Regenerate after an *intentional* change (e.g. a retrained checkpoint):
+
+    PYTHONPATH=src:tests python tests/test_trained_serve.py --regen
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.policies import ExecutionPolicy, all_policies
+from repro.core.quant import quantize_net
+from repro.core.sne_net import init_snn, tiny_net
+from repro.data.events_ds import (TINY, batch_at, load_recording,
+                                  sample_recording_path, segment_recording)
+from repro.serve import EventRequest, EventServeEngine
+from repro.train.snn_loop import load_trained_tiny
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "tiny_gesture_trained_serve.npz")
+WINDOW_US = 1000
+
+
+def _quantized_trained():
+    spec, params, _ = load_trained_tiny()
+    # per_channel=False: the layer-shared int4 grid — bitwise the grid
+    # fake_quant_net trained against (pinned in test_snn_train.py)
+    return quantize_net(params, spec, per_channel=False)
+
+
+def _serve(policy: ExecutionPolicy):
+    qn = _quantized_trained()
+    rec = load_recording(sample_recording_path())
+    reqs = segment_recording(rec, qn.spec.in_shape, qn.spec.n_timesteps,
+                             WINDOW_US)
+    eng = EventServeEngine(qn.spec, qn.params_for(policy.dtype_policy),
+                           n_slots=2, window=4, use_pallas=False,
+                           policy=policy)
+    eng.run(reqs)
+    tele = [r.telemetry for r in reqs]
+    return {
+        "class_counts": np.stack([r.class_counts for r in reqs]),
+        "predictions": np.asarray([r.prediction for r in reqs], np.int64),
+        "per_layer_events": np.stack(
+            [np.asarray(t.per_layer_events) for t in tele]),
+        "inter_layer_dropped": np.stack(
+            [np.asarray(t.inter_layer_dropped) for t in tele]),
+        "input_dropped": np.asarray([t.input_dropped for t in tele],
+                                    np.int64),
+    }
+
+
+@pytest.fixture(scope="module")
+def served():
+    return {pol: _serve(pol) for pol in all_policies()}
+
+
+def test_trained_policies_agree_bitwise(served):
+    """Every dtype x fusion x backend cell serves the learned weights
+    with bitwise-identical class counts and telemetry."""
+    base = served[ExecutionPolicy(fusion_policy="per-step")]
+    for key, res in served.items():
+        for k in base:
+            np.testing.assert_array_equal(res[k], base[k],
+                                          err_msg=f"{key}:{k}")
+
+
+def test_trained_golden_replay(served):
+    assert os.path.exists(GOLDEN), (
+        f"golden file missing: {GOLDEN} — regenerate with "
+        f"PYTHONPATH=src:tests python tests/test_trained_serve.py --regen")
+    gold = np.load(GOLDEN)
+    for key, res in served.items():
+        for k in res:
+            np.testing.assert_array_equal(
+                res[k], gold[k],
+                err_msg=f"{key}:{k} diverged from the trained-checkpoint "
+                        f"golden — if the checkpoint was intentionally "
+                        f"retrained, regenerate tests/golden/")
+
+
+def test_trained_recording_predicts_its_label(served):
+    """The bundled recording carries label 2; the trained net should call
+    most of its segments correctly (the untrained net cannot — its
+    synthetic weights know nothing about the gesture classes)."""
+    rec = load_recording(sample_recording_path())
+    preds = served[ExecutionPolicy()]["predictions"]
+    assert rec.label is not None
+    assert np.mean(preds == int(rec.label)) >= 0.5, preds
+
+
+def _cohort_accuracy(params_or_qn, n=24):
+    qn = params_or_qn
+    spikes, labels = batch_at(1, 10 ** 6, n, TINY)
+    reqs = [EventRequest.from_dense(i, spikes[i]) for i in range(n)]
+    eng = EventServeEngine(qn.spec, qn.params_for("f32-carrier"),
+                           n_slots=4, window=4, use_pallas=False,
+                           policy=ExecutionPolicy())
+    eng.run(reqs)
+    preds = np.asarray([r.prediction for r in reqs])
+    return float(np.mean(preds == np.asarray(labels)))
+
+
+def test_trained_beats_untrained_through_engine():
+    """The acceptance gate measured on the serving engine itself (not the
+    dense trainer): quantized trained net vs quantized untrained init."""
+    spec = tiny_net()
+    acc_t = _cohort_accuracy(_quantized_trained())
+    acc_0 = _cohort_accuracy(
+        quantize_net(init_snn(jax.random.PRNGKey(0), spec), spec,
+                     per_channel=False))
+    assert acc_t >= acc_0 + 0.25, (acc_t, acc_0)
+    assert acc_t >= 0.7, acc_t
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        res = _serve(ExecutionPolicy())
+        chk = _serve(ExecutionPolicy(dtype_policy="int8-native",
+                                     fusion_policy="per-step"))
+        for k in res:
+            np.testing.assert_array_equal(res[k], chk[k])
+        np.savez_compressed(GOLDEN, **res)
+        print(f"wrote {GOLDEN}:", {k: v.shape for k, v in res.items()})
+    else:
+        print(__doc__)
